@@ -1,0 +1,68 @@
+"""Paper Fig 13 + §5.2.4 headline: real-world-scale (300-node) projection.
+
+Calibrates the slave model to the paper's two published endpoints (after
+subtracting OUR analytically-computed master+network time), then sweeps
+the load curve and reproduces the headline claims:
+
+  * 143 ODYS sets x 304 nodes = 43,472 nodes -> 1B queries/day @ 211 ms
+  * 286 sets = 86,944 nodes -> 162 ms
+"""
+from repro.core.perfmodel import (
+    ClusterConfig,
+    OdysPerfModel,
+    QUERY_MIX_DEFAULT,
+    estimation_error,
+    nodes_for_service,
+    per_day,
+)
+from repro.core.slave_max import calibrate
+
+C300 = ClusterConfig(nm=4, ncm=4, ns=300, nh=11)
+MODEL = OdysPerfModel()
+PAPER_POINTS = ((81.0, 0.211), (40.5, 0.162))
+
+
+def mixed_master_network(lam: float) -> float:
+    return sum(
+        r * MODEL.master_network_time(lam, C300, QUERY_MIX_DEFAULT, k)
+        for (_, k), r in QUERY_MIX_DEFAULT.qmr.items()
+    )
+
+
+def main():
+    targets = [
+        (lam, total - mixed_master_network(lam)) for lam, total in PAPER_POINTS
+    ]
+    slave = calibrate(targets, ns=300)
+    print(f"fig13,slave_s_base,{slave.s_base*1e6:.1f},us")
+    print(f"fig13,slave_lam_cap,{slave.lam_cap:.1f},q_per_s")
+
+    def total(lam):
+        return MODEL.total_response_time(
+            lam, C300, QUERY_MIX_DEFAULT,
+            lambda sct, k, lam_, ns: slave.slave_max_time("single", 10, lam_, ns),
+        )
+
+    # Fig 13 load sweep
+    for lam in (20.0, 40.5, 60.0, 81.0, 100.0, 120.0):
+        t = total(lam)
+        print(f"fig13,total_at_{per_day(lam)/1e6:.1f}Mqpd,{t*1e6:.1f},us")
+
+    # Headline reproduction
+    for lam, paper_t, q_per_set in ((81.0, 0.211, 7e6), (40.5, 0.162, 3.5e6)):
+        t = total(lam)
+        sets, nodes = nodes_for_service(1e9, q_per_set, C300)
+        err = estimation_error(t, paper_t)
+        print(
+            f"fig13,headline_{nodes}nodes,{t*1e6:.1f},"
+            f"paper={paper_t*1e6:.0f}us err={err:.4f} sets={sets}"
+        )
+        assert err < 0.02, f"headline mismatch: {t} vs {paper_t}"
+    # slave share of total (paper: 85.36%-93.47%)
+    lam = 81.0
+    share = 1 - mixed_master_network(lam) / total(lam)
+    print(f"fig13,slave_share_at_81qps,{share:.4f},paper_range=0.85-0.94")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table 3: queuing-model parameters + derived service times.
+
+Emits the measured constants (shipped verbatim in core/perfmodel.py) and
+the derived ST_master / weights at the paper's two cluster scales, so the
+downstream figures are reproducible from this table alone.
+"""
+from repro.core.perfmodel import KS, MS, OdysPerfModel, US
+
+
+def rows():
+    m = OdysPerfModel()
+    out = []
+    p = m.master
+    out.append(("T_parent_proc_ms", p.T_parent_proc / MS))
+    out.append(("T_child_proc_ms", p.T_child_proc / MS))
+    for k in KS:
+        out.append((f"T_master_RPC_k{k}_ms", p.T_master_rpc[k] / MS))
+    out.append(("t_comparison_us", p.t_comparison / US))
+    out.append(("t_base_us", p.t_base / US))
+    out.append(("t_per_context_switch_us", p.t_per_context_switch / US))
+    for k in (10, 1000):
+        out.append((f"ncs_base_k{k}", p.ncs_base[k]))
+        out.append((f"ncs_per_slave_k{k}", p.ncs_per_slave[k]))
+    for k in KS:
+        out.append((f"ST_network_k{k}_ms", m.network.ST_network[k] / MS))
+    for ns in (5, 300):
+        for k in KS:
+            out.append((f"ST_master_k{k}_ns{ns}_ms", p.ST_master(k, ns) / MS))
+            out.append((f"w_master_k{k}_ns{ns}", p.w_master(k, ns)))
+    return out
+
+
+def main(csv=True):
+    for name, value in rows():
+        print(f"table3,{name},{value:.6f}")
+
+
+if __name__ == "__main__":
+    main()

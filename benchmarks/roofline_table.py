@@ -1,0 +1,44 @@
+"""Format the EXPERIMENTS.md §Roofline table from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def fmt(rows, mesh="16x16"):
+    rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    out = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant "
+        "| MODEL_FLOPS | useful | args/dev (GiB) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_ratio']:.2f} "
+            f"| {r['arg_bytes_per_device']/2**30:.2f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "dryrun")
+    rows = load(d)
+    print("## single-pod (16x16)\n")
+    print(fmt(rows, "16x16"))
+    print("\n## multi-pod (2x16x16)\n")
+    print(fmt(rows, "2x16x16"))

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Emits ``name,metric,value,derived`` CSV lines.  Run as:
+    PYTHONPATH=src python -m benchmarks.run [--only fig13]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_engine,
+    bench_fig11,
+    bench_fig12,
+    bench_fig13,
+    bench_kernels,
+    bench_table3,
+)
+
+SUITES = {
+    "table3": bench_table3.main,    # Table 3 parameters + derived ST/weights
+    "fig11": bench_fig11.main,      # model vs DES-prototype, estimation error
+    "fig12": bench_fig12.main,      # slave max vs segment size
+    "fig13": bench_fig13.main,      # 300-node projection + 43,472-node headline
+    "engine": bench_engine.main,    # measured JAX engine + §2 strategies
+    "kernels": bench_kernels.main,  # Pallas kernel microbenches
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(SUITES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+    failures = 0
+    for name in names:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            SUITES[name]()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

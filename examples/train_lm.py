@@ -1,0 +1,29 @@
+"""Train a (reduced) LM for a few hundred steps with checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_lm.py
+Equivalent to:
+    python -m repro.launch.train --arch phi4-mini-3.8b --smoke --steps 120 \
+        --batch 8 --seq 64 --ckpt-dir /tmp/odys_ckpt
+"""
+import subprocess
+import sys
+import tempfile
+
+
+def main():
+    with tempfile.TemporaryDirectory() as d:
+        for phase in ("cold start", "resume"):
+            out = subprocess.run(
+                [sys.executable, "-m", "repro.launch.train",
+                 "--arch", "phi4-mini-3.8b", "--smoke",
+                 "--steps", "120", "--batch", "8", "--seq", "64",
+                 "--lr", "1e-3", "--ckpt-dir", d, "--ckpt-every", "60"],
+                capture_output=True, text=True, timeout=560,
+            )
+            print(f"--- {phase} ---")
+            print("\n".join(out.stdout.splitlines()[-6:]))
+            assert "done" in out.stdout, out.stderr
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Architecture registry: --arch <id> resolution."""
+from repro.configs.base import ArchConfig
+
+from repro.configs.phi4_mini_3p8b import CONFIG as _phi4
+from repro.configs.deepseek_coder_33b import CONFIG as _dsc
+from repro.configs.gemma_2b import CONFIG as _gemma
+from repro.configs.starcoder2_7b import CONFIG as _sc2
+from repro.configs.internvl2_76b import CONFIG as _ivl
+from repro.configs.whisper_base import CONFIG as _whisper
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moon
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.recurrentgemma_2b import CONFIG as _rg
+from repro.configs.rwkv6_1p6b import CONFIG as _rwkv
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (_phi4, _dsc, _gemma, _sc2, _ivl, _whisper, _moon, _mixtral, _rg, _rwkv)
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,1 @@
+"""ODYS core: the paper's contribution as composable JAX modules."""

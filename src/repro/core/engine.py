@@ -1,0 +1,245 @@
+"""ODYS slave query engine — reference (pure jnp) implementation.
+
+This is the per-"slave" (per-shard) query processor.  It implements the
+three query classes of the paper's query model (§4.1.1) over the TPU index
+layout of :mod:`repro.core.index`:
+
+- **single-keyword top-k**: a k-prefix read of the posting list (postings
+  are rank-ordered, so the first k postings *are* the answer);
+- **multiple-keyword top-k**: ZigZag join — membership of the shortest
+  list's postings in every other list, early-k selection in rank order;
+- **limited search**: keyword + siteId, with three strategies that
+  reproduce the paper's §2/Fig 4 comparison:
+    * ``embed``     — attribute embedding, fused predicate on the embedded
+                      attrs stream (Fig 4(b); the paper's winner),
+    * ``gather``    — join against the doc->site table via random-access
+                      gather (the un-integrated Fig 1(c) plan),
+    * ``site_term`` — the siteId-as-text plan: add the site's own posting
+                      list as an extra join term (Fig 1(d)/4(a)); resolved
+                      at query construction time.
+
+All shapes are static: queries are padded to ``T_MAX`` terms, posting-list
+windows to ``window`` postings, results to ``k``.  ``window`` is the
+engine's analogue of the paper's bounded posting scan: rank-ordered postings
+mean a top-k never needs more than the window unless the query is extremely
+selective (the paper makes the same argument for its 22.8M-page shards,
+§5.1 footnote 12).
+
+This module is also the *oracle* for the Pallas kernels in
+:mod:`repro.kernels` and runs inside ``shard_map`` for the distributed
+engine (:mod:`repro.core.parallel`).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.index import (
+    INVALID_ATTR,
+    INVALID_DOC,
+    IndexMeta,
+    InvertedIndex,
+    site_term_id,
+)
+
+NO_TERM = np.int32(-1)
+NO_ATTR = np.int32(-1)
+
+
+class QueryBatch(NamedTuple):
+    """Fixed-shape batch of queries (padded to T_MAX terms)."""
+
+    terms: jnp.ndarray        # int32[Q, T_MAX]; NO_TERM padding
+    n_terms: jnp.ndarray      # int32[Q]
+    attr_filter: jnp.ndarray  # int32[Q]; NO_ATTR = unrestricted
+
+    @property
+    def n_queries(self) -> int:
+        return self.terms.shape[0]
+
+
+def make_query_batch(
+    queries: list[tuple[list[int], int | None]],
+    *,
+    t_max: int = 4,
+    meta: IndexMeta | None = None,
+    strategy: str = "embed",
+) -> QueryBatch:
+    """Build a QueryBatch from (term_list, site_or_None) tuples.
+
+    With ``strategy='site_term'`` the site restriction is rewritten into an
+    extra join term (Fig 1(d)) and ``attr_filter`` stays empty.
+    """
+    q = len(queries)
+    terms = np.full((q, t_max), NO_TERM, dtype=np.int32)
+    n_terms = np.zeros(q, dtype=np.int32)
+    attr = np.full(q, NO_ATTR, dtype=np.int32)
+    for i, (ts, site) in enumerate(queries):
+        ts = list(ts)
+        if site is not None and strategy == "site_term":
+            assert meta is not None and meta.include_site_terms
+            ts = ts + [site_term_id(meta, site)]
+        elif site is not None:
+            attr[i] = site
+        assert 1 <= len(ts) <= t_max, (ts, t_max)
+        terms[i, : len(ts)] = ts
+        n_terms[i] = len(ts)
+    return QueryBatch(jnp.asarray(terms), jnp.asarray(n_terms), jnp.asarray(attr))
+
+
+# ---------------------------------------------------------------------------
+# Windowed posting access
+# ---------------------------------------------------------------------------
+
+def _window(flat: jnp.ndarray, off: jnp.ndarray, window: int, fill) -> jnp.ndarray:
+    """Fixed-size windowed gather starting at ``off``; OOB reads -> fill."""
+    idx = off + jnp.arange(window, dtype=jnp.int32)
+    return jnp.take(flat, idx, mode="fill", fill_value=fill)
+
+
+def term_window(
+    index: InvertedIndex, term: jnp.ndarray, window: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(docids[window], attrs[window], valid[window]) for one term."""
+    t = jnp.clip(term, 0, index.offsets.shape[0] - 1)
+    off = index.offsets[t]
+    ln = jnp.where(term < 0, 0, index.lengths[t])
+    docs = _window(index.postings, off, window, INVALID_DOC)
+    attrs = _window(index.attrs, off, window, INVALID_ATTR)
+    valid = jnp.arange(window, dtype=jnp.int32) < ln
+    docs = jnp.where(valid, docs, INVALID_DOC)
+    return docs, attrs, valid
+
+
+def member_sorted(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """For each a[i], is it present in sorted array b? (searchsorted probe)."""
+    idx = jnp.searchsorted(b, a, side="left")
+    probe = jnp.take(b, idx, mode="clip")
+    return probe == a
+
+
+def _first_k_by_rank(docids: jnp.ndarray, mask: jnp.ndarray, k: int):
+    """Select the k smallest (=best-ranked) docids where mask holds."""
+    key = jnp.where(mask, docids, INVALID_DOC)
+    neg_top, _ = lax.top_k(-key.astype(jnp.int32), k)
+    out = (-neg_top).astype(jnp.int32)
+    return out, jnp.sum(mask.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Query execution (single query; vmap'ed for the batch)
+# ---------------------------------------------------------------------------
+
+def _query_topk_one(
+    index: InvertedIndex,
+    terms: jnp.ndarray,       # int32[T_MAX]
+    n_terms: jnp.ndarray,     # int32[]
+    attr_filter: jnp.ndarray, # int32[]
+    *,
+    k: int,
+    window: int,
+    attr_strategy: str,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    t_max = terms.shape[0]
+
+    # Drive the join from the *shortest* list (classic ZigZag ordering —
+    # the driver bounds the number of candidate postings).
+    tt = jnp.clip(terms, 0, index.offsets.shape[0] - 1)
+    lens = jnp.where(
+        (jnp.arange(t_max) < n_terms), index.lengths[tt], jnp.int32(2**31 - 1)
+    )
+    driver_slot = jnp.argmin(lens)
+    driver_term = terms[driver_slot]
+
+    docs, attrs, valid = term_window(index, driver_term, window)
+    mask = valid
+
+    # Join every other term's list (statically unrolled over T_MAX slots).
+    for slot in range(t_max):
+        other = terms[slot]
+        active = (jnp.arange(t_max)[slot] < n_terms) & (slot != driver_slot)
+        b_docs, _, _ = term_window(index, other, window)
+        m = member_sorted(docs, b_docs)
+        mask = mask & jnp.where(active, m, True)
+
+    # Limited search.
+    if attr_strategy == "embed":
+        ok = attrs == attr_filter
+    elif attr_strategy == "gather":
+        site = jnp.take(index.doc_site, jnp.clip(docs, 0, None), mode="clip")
+        ok = site == attr_filter
+    elif attr_strategy == "site_term":
+        ok = jnp.ones_like(mask)  # rewritten into a term at build time
+    else:
+        raise ValueError(attr_strategy)
+    mask = mask & jnp.where(attr_filter == NO_ATTR, True, ok)
+
+    return _first_k_by_rank(docs, mask, k)
+
+
+@partial(jax.jit, static_argnames=("k", "window", "attr_strategy"))
+def query_topk(
+    index: InvertedIndex,
+    batch: QueryBatch,
+    *,
+    k: int = 10,
+    window: int = 4096,
+    attr_strategy: str = "embed",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched local top-k.  Returns (docids[Q, k], n_hits[Q]).
+
+    docids are local to this index/shard, ascending (= rank order), padded
+    with INVALID_DOC when fewer than k documents match inside the window.
+    """
+    fn = partial(
+        _query_topk_one,
+        index,
+        k=k,
+        window=window,
+        attr_strategy=attr_strategy,
+    )
+    return jax.vmap(fn)(batch.terms, batch.n_terms, batch.attr_filter)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def single_keyword_topk(
+    index: InvertedIndex, terms: jnp.ndarray, *, k: int = 10
+) -> jnp.ndarray:
+    """The paper's headline fast path: top-k of a single keyword is a
+    k-prefix read of the rank-ordered posting list — no join, no sort."""
+
+    def one(term):
+        docs, _, valid = term_window(index, term, k)
+        return jnp.where(valid, docs, INVALID_DOC)
+
+    return jax.vmap(one)(terms)
+
+
+# ---------------------------------------------------------------------------
+# Host-side brute-force oracle (for property tests)
+# ---------------------------------------------------------------------------
+
+def brute_force_topk(
+    corpus, queries: list[tuple[list[int], int | None]], k: int
+) -> list[list[int]]:
+    """Ground truth by Python set intersection over the raw corpus."""
+    out = []
+    for ts, site in queries:
+        sets = []
+        for t in ts:
+            s = set()
+            for d in range(corpus.n_docs):
+                if t in corpus.terms_of(d):
+                    s.add(d)
+            sets.append(s)
+        docs = set.intersection(*sets) if sets else set()
+        if site is not None:
+            docs = {d for d in docs if corpus.doc_site[d] == site}
+        out.append(sorted(docs)[:k])
+    return out

@@ -1,0 +1,248 @@
+"""ODYS IR index, adapted to TPU (DESIGN.md §2).
+
+The paper's tightly-integrated IR index is:
+
+    keyword B+-tree  ->  posting list (rank-ordered)  ->  sub-index per list
+                         each posting = (docID, offsets [, embedded attrs])
+
+TPU-native layout (all dense, HBM-resident):
+
+- **CSR term table**: ``offsets[t] .. offsets[t]+lengths[t]`` addresses term
+  ``t``'s postings in one flat array.  The B+-tree's job (term -> list head)
+  becomes two O(1) array reads.
+- **Postings**: ``postings`` holds docIDs, ascending per list.  docIDs are
+  assigned in PageRank order, so ascending docID order *is* rank order: a
+  single-keyword top-k is a k-prefix read (paper §3.1) and the ZigZag join
+  streams both lists in one direction (paper §2).
+- **Sub-index -> skip table**: every list is start-aligned to ``BLOCK=128``
+  postings (one TPU lane row); ``block_max[b]`` is the max docID in aligned
+  block ``b``.  A join can decide from ``block_max`` alone that a whole
+  block cannot contain matches and skip its HBM->VMEM DMA — this is the
+  paper's *posting skipping*, with a 128-posting block as the unit of I/O
+  instead of a disk page.
+- **Attribute embedding**: ``attrs[p]`` stores the embedded structured
+  attribute (siteId) of ``postings[p]``; a limited search is one fused
+  pass over (docid, attr) pairs — the paper's Fig 4(b).
+- **Site terms** (paper Fig 1(d) optimization): when
+  ``include_site_terms=True``, each siteId also gets its *own* posting list
+  under term id ``vocab_size + site``, so a limited search can instead run
+  as a two-list ZigZag join (Fig 4(a)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.data.corpus import Corpus
+
+BLOCK = 128                      # postings per skip-table block (lane width)
+INVALID_DOC = np.int32(2**31 - 1)  # padding docID; sorts after every real doc
+INVALID_ATTR = np.int32(-1)
+
+
+class InvertedIndex(NamedTuple):
+    """Device-side index. All fields are jnp arrays (pytree-friendly)."""
+
+    offsets: jnp.ndarray    # int32[n_terms]   start of each list (BLOCK-aligned)
+    lengths: jnp.ndarray    # int32[n_terms]   valid postings per list
+    postings: jnp.ndarray   # int32[P]         docIDs, ascending per list
+    attrs: jnp.ndarray      # int32[P]         embedded attribute per posting
+    block_max: jnp.ndarray  # int32[P//BLOCK]  skip table (max docID per block)
+    doc_site: jnp.ndarray   # int32[n_docs_pad] docID -> siteId (gather strategy)
+
+    @property
+    def n_terms(self) -> int:
+        return self.offsets.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexMeta:
+    """Static (non-traced) metadata for an :class:`InvertedIndex`."""
+
+    n_docs: int
+    vocab_size: int
+    n_sites: int
+    n_terms: int           # vocab_size (+ n_sites when site terms included)
+    include_site_terms: bool
+
+
+def site_term_id(meta: IndexMeta, site: int) -> int:
+    """Term id of the Fig 1(d) site-text posting list for ``site``."""
+    assert meta.include_site_terms
+    return meta.vocab_size + site
+
+
+def _build_numpy(
+    corpus: Corpus, include_site_terms: bool
+) -> tuple[dict[str, np.ndarray], IndexMeta]:
+    """Invert the corpus CSR into the term CSR, host-side."""
+    n_docs, vocab = corpus.n_docs, corpus.vocab_size
+    doc_ids = np.repeat(
+        np.arange(n_docs, dtype=np.int64),
+        np.diff(corpus.doc_offsets),
+    )
+    terms = corpus.doc_terms.astype(np.int64)
+
+    if include_site_terms:
+        # Each doc also "contains" the pseudo-term for its site.
+        site_terms = vocab + corpus.doc_site[np.arange(n_docs)].astype(np.int64)
+        terms = np.concatenate([terms, site_terms])
+        doc_ids = np.concatenate([doc_ids, np.arange(n_docs, dtype=np.int64)])
+        n_terms = vocab + corpus.n_sites
+    else:
+        n_terms = vocab
+
+    # Sort by (term, docid): docids ascending inside each list == rank order.
+    order = np.lexsort((doc_ids, terms))
+    s_terms, s_docs = terms[order], doc_ids[order]
+    lengths = np.bincount(s_terms, minlength=n_terms).astype(np.int32)
+
+    # BLOCK-align every list start.
+    padded = ((lengths + BLOCK - 1) // BLOCK) * BLOCK
+    padded = np.maximum(padded, BLOCK)  # empty lists still own one block
+    offsets = np.zeros(n_terms, dtype=np.int64)
+    np.cumsum(padded[:-1], out=offsets[1:])
+    total = int(offsets[-1] + padded[-1])
+
+    postings = np.full(total, INVALID_DOC, dtype=np.int32)
+    attrs = np.full(total, INVALID_ATTR, dtype=np.int32)
+    src_off = np.zeros(n_terms + 1, dtype=np.int64)
+    np.cumsum(lengths, out=src_off[1:])
+    # Scatter each list into its aligned slot.
+    dst = offsets[s_terms] + (np.arange(s_terms.shape[0]) - src_off[s_terms])
+    postings[dst] = s_docs.astype(np.int32)
+    attrs[dst] = corpus.doc_site[s_docs]
+
+    block_max = postings.reshape(-1, BLOCK).max(axis=1)
+
+    # doc -> site lookup table, padded to a multiple of BLOCK for kernels.
+    nd_pad = ((n_docs + BLOCK - 1) // BLOCK) * BLOCK
+    doc_site = np.full(nd_pad, INVALID_ATTR, dtype=np.int32)
+    doc_site[:n_docs] = corpus.doc_site
+
+    arrays = dict(
+        offsets=offsets.astype(np.int32),
+        lengths=lengths,
+        postings=postings,
+        attrs=attrs,
+        block_max=block_max,
+        doc_site=doc_site,
+    )
+    meta = IndexMeta(
+        n_docs=n_docs,
+        vocab_size=vocab,
+        n_sites=corpus.n_sites,
+        n_terms=n_terms,
+        include_site_terms=include_site_terms,
+    )
+    return arrays, meta
+
+
+def build_index(
+    corpus: Corpus, *, include_site_terms: bool = True
+) -> tuple[InvertedIndex, IndexMeta]:
+    arrays, meta = _build_numpy(corpus, include_site_terms)
+    return InvertedIndex(**{k: jnp.asarray(v) for k, v in arrays.items()}), meta
+
+
+# ---------------------------------------------------------------------------
+# Document partitioning (paper §3.1: "partitioning by documents")
+# ---------------------------------------------------------------------------
+
+def partition_corpus(corpus: Corpus, ns: int) -> list[Corpus]:
+    """Stripe docs round-robin by *rank*: global doc d -> shard d % ns,
+    local docID d // ns.
+
+    Striping (vs contiguous ranges) keeps every shard's rank distribution
+    identical, so per-shard top-k candidate quality is balanced — the
+    property the paper relies on when merging per-slave top-k lists.
+    The map is deterministic and invertible:  global = local * ns + shard,
+    which is what makes elastic re-partitioning a pure reshuffle
+    (launch/elastic.py).
+    """
+    shards = []
+    for s in range(ns):
+        sel = np.arange(s, corpus.n_docs, ns)
+        lens = np.diff(corpus.doc_offsets)[sel]
+        offs = np.zeros(sel.shape[0] + 1, dtype=np.int64)
+        np.cumsum(lens, out=offs[1:])
+        gather = np.concatenate(
+            [
+                corpus.doc_terms[corpus.doc_offsets[d]:corpus.doc_offsets[d + 1]]
+                for d in sel
+            ]
+        ) if sel.size else np.zeros(0, dtype=np.int32)
+        shards.append(
+            Corpus(
+                doc_offsets=offs,
+                doc_terms=gather,
+                doc_site=corpus.doc_site[sel],
+                n_docs=int(sel.shape[0]),
+                vocab_size=corpus.vocab_size,
+                n_sites=corpus.n_sites,
+            )
+        )
+    return shards
+
+
+class ShardedIndex(NamedTuple):
+    """ns stacked per-shard indexes, padded to common shapes.
+
+    Leading axis = shard; intended to be laid out over the mesh ``data``
+    axis (one shard per "slave").  Plus the static local->global docID map
+    parameters (ns, shard id) applied at merge time.
+    """
+
+    offsets: jnp.ndarray    # int32[ns, n_terms]
+    lengths: jnp.ndarray    # int32[ns, n_terms]
+    postings: jnp.ndarray   # int32[ns, P]
+    attrs: jnp.ndarray      # int32[ns, P]
+    block_max: jnp.ndarray  # int32[ns, P//BLOCK]
+    doc_site: jnp.ndarray   # int32[ns, nd_pad]
+
+
+def build_sharded_index(
+    corpus: Corpus, ns: int, *, include_site_terms: bool = True
+) -> tuple[ShardedIndex, IndexMeta]:
+    parts = partition_corpus(corpus, ns)
+    built = [_build_numpy(p, include_site_terms) for p in parts]
+    metas = [m for _, m in built]
+    arrays = [a for a, _ in built]
+
+    def stack(key: str, pad_value) -> np.ndarray:
+        ms = [a[key] for a in arrays]
+        width = max(m.shape[0] for m in ms)
+        # keep BLOCK alignment of the padded width
+        if key in ("postings", "attrs", "doc_site"):
+            width = ((width + BLOCK - 1) // BLOCK) * BLOCK
+        out = np.full((ns, width), pad_value, dtype=ms[0].dtype)
+        for i, m in enumerate(ms):
+            out[i, : m.shape[0]] = m
+        return out
+
+    sharded = ShardedIndex(
+        offsets=jnp.asarray(stack("offsets", 0)),
+        lengths=jnp.asarray(stack("lengths", 0)),
+        postings=jnp.asarray(stack("postings", INVALID_DOC)),
+        attrs=jnp.asarray(stack("attrs", INVALID_ATTR)),
+        block_max=jnp.asarray(stack("block_max", INVALID_DOC)),
+        doc_site=jnp.asarray(stack("doc_site", INVALID_ATTR)),
+    )
+    meta = IndexMeta(
+        n_docs=corpus.n_docs,
+        vocab_size=corpus.vocab_size,
+        n_sites=corpus.n_sites,
+        n_terms=metas[0].n_terms,
+        include_site_terms=include_site_terms,
+    )
+    return sharded, meta
+
+
+def local_to_global_docids(local: jnp.ndarray, shard: jnp.ndarray, ns: int):
+    """Invert the striping map; INVALID stays INVALID."""
+    g = local * ns + shard
+    return jnp.where(local == INVALID_DOC, INVALID_DOC, g.astype(jnp.int32))

@@ -1,0 +1,213 @@
+"""ODYS master/slave parallel query processing, on a JAX mesh.
+
+Paper architecture (§3.1): masters broadcast each query to all
+shared-nothing slaves; each slave runs the query over its document
+partition and returns its local top-k; the master merges ns sorted streams
+into the global top-k.
+
+Mesh mapping (DESIGN.md §2):
+
+- slaves            -> shards along the ``data`` mesh axis (one document
+                       partition per device), index arrays sharded on their
+                       leading axis;
+- query broadcast   -> queries replicated over ``data`` (in_specs=P(None));
+- master merge      -> a collective over ``data``.  Two strategies:
+
+  * ``allgather``  — the paper-faithful centralized master: every shard's
+    k candidates are all-gathered (ns·k ids per device) and reduced with a
+    single top-k.  Models the master as a point of convergence.
+  * ``tournament`` — beyond-paper: a butterfly of log2(ns) ppermute rounds;
+    at each round partners exchange k candidates and keep the best k.
+    Bytes on the busiest link drop from ns·k to k·log2(ns) — the
+    loser-tree's O(k log ns) compare count, achieved in *communication*.
+
+- ODYS sets (§3.1 fault tolerance) -> the ``pod`` axis: each pod is an
+  independent replica engine; the query stream is sharded across pods and
+  no collective crosses them on the query path (see
+  :func:`replicated_query_topk`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.engine import QueryBatch, query_topk
+from repro.core.index import (
+    INVALID_DOC,
+    InvertedIndex,
+    ShardedIndex,
+    local_to_global_docids,
+)
+
+
+class SearchResult(NamedTuple):
+    docids: jnp.ndarray  # int32[Q, k] global docIDs, ascending (= rank order)
+    n_hits: jnp.ndarray  # int32[Q]    total matches across all shards
+
+
+def _local_index(stacked: ShardedIndex) -> InvertedIndex:
+    """Inside shard_map each device sees a leading shard dim of 1."""
+    return InvertedIndex(*(x[0] for x in stacked))
+
+
+def _merge_pair(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Merge two ascending (Q, k) candidate sets -> best-k ascending."""
+    k = a.shape[-1]
+    return jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)[..., :k]
+
+
+def tournament_merge(cands: jnp.ndarray, axis: str, ns: int) -> jnp.ndarray:
+    """Butterfly top-k merge over mesh axis ``axis`` (ns must be a pow2)."""
+    assert ns & (ns - 1) == 0, "tournament merge needs power-of-two shards"
+    d = 1
+    while d < ns:
+        perm = [(i, i ^ d) for i in range(ns)]
+        other = lax.ppermute(cands, axis, perm)
+        cands = _merge_pair(cands, other)
+        d *= 2
+    return cands
+
+
+def allgather_merge(cands: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Paper-faithful centralized merge: gather all, one top-k."""
+    k = cands.shape[-1]
+    allc = lax.all_gather(cands, axis, axis=0)          # (ns, Q, k)
+    allc = jnp.moveaxis(allc, 0, -2).reshape(*cands.shape[:-1], -1)
+    return jnp.sort(allc, axis=-1)[..., :k]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "ns", "k", "window", "attr_strategy", "merge", "axis"),
+)
+def distributed_query_topk(
+    index: ShardedIndex,
+    batch: QueryBatch,
+    *,
+    mesh: Mesh,
+    ns: int,
+    k: int = 10,
+    window: int = 4096,
+    attr_strategy: str = "embed",
+    merge: str = "tournament",
+    axis: str = "data",
+) -> SearchResult:
+    """Broadcast the batch to all shards, local top-k, merge to global top-k."""
+
+    index_spec = jax.tree.map(lambda _: P(axis), index)
+    batch_spec = jax.tree.map(lambda _: P(), batch)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(index_spec, batch_spec),
+        out_specs=SearchResult(P(), P()),
+        check_vma=False,
+    )
+    def run(idx: ShardedIndex, qb: QueryBatch) -> SearchResult:
+        shard = lax.axis_index(axis)
+        local = _local_index(idx)
+        docs, hits = query_topk(
+            local, qb, k=k, window=window, attr_strategy=attr_strategy
+        )
+        gdocs = local_to_global_docids(docs, shard, ns)
+        if merge == "tournament":
+            merged = tournament_merge(gdocs, axis, ns)
+        elif merge == "allgather":
+            merged = allgather_merge(gdocs, axis)
+        else:
+            raise ValueError(merge)
+        total_hits = lax.psum(hits, axis)
+        return SearchResult(merged, total_hits)
+
+    return run(index, batch)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "ns", "k", "window", "attr_strategy", "merge", "axis", "pod_axis"
+    ),
+)
+def replicated_query_topk(
+    index: ShardedIndex,
+    batch: QueryBatch,
+    *,
+    mesh: Mesh,
+    ns: int,
+    k: int = 10,
+    window: int = 4096,
+    attr_strategy: str = "embed",
+    merge: str = "tournament",
+    axis: str = "data",
+    pod_axis: str = "pod",
+) -> SearchResult:
+    """Multi-pod serving: each pod is an independent ODYS set (replica).
+
+    The index is replicated across pods (sharded over ``data`` inside each
+    pod); the *query stream* is sharded over pods.  No collective crosses
+    the pod axis on the query path — the paper's ODYS-set isolation, which
+    is also what makes set-granular failover trivial (core/faults.py).
+    """
+    index_spec = jax.tree.map(lambda _: P(None, axis), _stack_for_pods(index))
+    batch_spec = jax.tree.map(lambda _: P(pod_axis), batch)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(index_spec, batch_spec),
+        out_specs=SearchResult(P(pod_axis), P(pod_axis)),
+        check_vma=False,
+    )
+    def run(idx, qb: QueryBatch) -> SearchResult:
+        shard = lax.axis_index(axis)
+        local = _local_index(ShardedIndex(*(x[0] for x in idx)))
+        docs, hits = query_topk(
+            local, qb, k=k, window=window, attr_strategy=attr_strategy
+        )
+        gdocs = local_to_global_docids(docs, shard, ns)
+        if merge == "tournament":
+            merged = tournament_merge(gdocs, axis, ns)
+        else:
+            merged = allgather_merge(gdocs, axis)
+        return SearchResult(merged, lax.psum(hits, axis))
+
+    return run(_stack_for_pods(index), batch)
+
+
+def _stack_for_pods(index: ShardedIndex) -> ShardedIndex:
+    """Add a size-1 pod axis (replicated) in front of the shard axis."""
+    return ShardedIndex(*(x[None] for x in index))
+
+
+# ---------------------------------------------------------------------------
+# Reference oracle for the distributed path
+# ---------------------------------------------------------------------------
+
+def sequential_reference(
+    shard_indexes: list[InvertedIndex],
+    batch: QueryBatch,
+    *,
+    ns: int,
+    k: int,
+    window: int,
+    attr_strategy: str = "embed",
+) -> SearchResult:
+    """Run each shard sequentially on one device and merge on host —
+    the oracle for :func:`distributed_query_topk`."""
+    all_cands, all_hits = [], []
+    for s, idx in enumerate(shard_indexes):
+        docs, hits = query_topk(
+            idx, batch, k=k, window=window, attr_strategy=attr_strategy
+        )
+        all_cands.append(local_to_global_docids(docs, jnp.int32(s), ns))
+        all_hits.append(hits)
+    cands = jnp.concatenate(all_cands, axis=-1)  # (Q, ns*k)
+    merged = jnp.sort(cands, axis=-1)[..., :k]
+    return SearchResult(merged, sum(all_hits))

@@ -1,0 +1,146 @@
+"""Expected slave-max-time estimation (paper §4.2) — the experimental half.
+
+The total response of a broadcast query is bounded by the **maximum** of
+the ns slave sojourn times; its expectation has no tractable closed form
+(the paper cites Kemper & Mandjes).  The paper therefore *measures*: run a
+small np-node prototype r times and apply the **partitioning method**
+(Fig 9):
+
+  Step 1  build, per query, the sequence of np*r slave sojourn times;
+  Step 2  cut it into segments of size ns, take the max of each segment,
+          and average the maxima.
+
+:func:`partitioning_method` implements that verbatim (vectorized).
+
+Because we do not have the paper's raw 5-node latency traces, projections
+that reproduce the paper's *published* numbers use
+:class:`CalibratedSlaveModel` — a synthetic per-slave latency generator
+whose two free parameters are fitted to published aggregates (the 211 ms /
+162 ms Fig 13 endpoints after subtracting our analytically-computed
+master+network time).  Projections of *our* JAX engine instead feed real
+measured shard latencies into the same estimator (benchmarks/bench_fig11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+def partitioning_method(
+    sojourn_times: np.ndarray, ns: int
+) -> np.ndarray:
+    """Paper Fig 9.  sojourn_times: float[n_queries, np*r] per-slave times
+    (repetition-major, matching Step 1.2's sequence order).  Returns the
+    estimated slave max time per query for an ns-slave target system.
+    """
+    sojourn_times = np.asarray(sojourn_times, dtype=np.float64)
+    nq, total = sojourn_times.shape
+    n_seg = total // ns
+    if n_seg == 0:
+        raise ValueError(
+            f"need at least ns={ns} samples per query, got {total}; "
+            "increase repetitions r (paper runs r=60 for ns=300)"
+        )
+    seg = sojourn_times[:, : n_seg * ns].reshape(nq, n_seg, ns)
+    return seg.max(axis=2).mean(axis=1)
+
+
+def expected_max_factor(sigma: float, ns: int, *, n_mc: int = 4000,
+                        seed: int = 0) -> float:
+    """E[max of ns lognormal(0, sigma)] / E[lognormal(0, sigma)].
+
+    The dimensionless inflation of the slave max over the slave mean —
+    the quantity Fig 12 plots (it converges to <2 for the paper's data,
+    which pins sigma; see calibrate()).
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.lognormal(mean=0.0, sigma=sigma, size=(n_mc, ns))
+    return float(x.max(axis=1).mean() / math.exp(sigma**2 / 2.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedSlaveModel:
+    """Synthetic slave sojourn-time generator.
+
+    mean(lam) = s_base * (1 + beta * rho / (1 - rho)),  rho = lam / lam_cap
+    (an empirical load curve: flat at low load, diverging at saturation —
+    the shape of the measured curves in the paper's Fig 11/13), with
+    multiplicative lognormal per-(query, slave) noise of parameter sigma
+    modelling the disk-access variance the paper attributes the slave-max
+    spread to (§4.2).
+
+    Search-condition types scale the base time: the paper reports multiple/
+    limited queries are much slower than single-keyword ones (§4.1.1), and
+    top-k cost grows with k (Fig 7(a)): we expose both as ratio tables.
+    """
+
+    s_base: float           # seconds, single-keyword top-10 mean at lam->0
+    lam_cap: float          # queries/sec at which a slave saturates
+    sigma: float = 0.25     # lognormal disk-variance (fits Fig 12: max/min < 2)
+    beta: float = 1.0
+    sct_ratio: dict = dataclasses.field(
+        default_factory=lambda: {"single": 1.0, "multiple": 2.6, "limited": 2.2}
+    )
+    k_ratio: dict = dataclasses.field(
+        default_factory=lambda: {10: 1.0, 50: 1.12, 1000: 1.9}
+    )
+
+    def mean(self, sct: str, k: int, lam: float) -> float:
+        rho = min(lam / self.lam_cap, 0.999)
+        load = 1.0 + self.beta * rho / (1.0 - rho)
+        return self.s_base * self.sct_ratio[sct] * self.k_ratio[k] * load
+
+    def sample(
+        self, sct: str, k: int, lam: float, shape: tuple[int, ...], seed: int = 0
+    ) -> np.ndarray:
+        """Per-(query, slave) sojourn times, lognormal around mean()."""
+        rng = np.random.default_rng(seed)
+        mu = math.log(self.mean(sct, k, lam)) - self.sigma**2 / 2.0
+        return rng.lognormal(mean=mu, sigma=self.sigma, size=shape)
+
+    def slave_max_time(self, sct: str, k: int, lam: float, ns: int) -> float:
+        """E[max over ns slaves] — the t_slave-max-time of Formula (17)."""
+        return self.mean(sct, k, lam) * expected_max_factor(self.sigma, ns)
+
+
+def calibrate(
+    targets: list[tuple[float, float]],
+    ns: int,
+    *,
+    sct: str = "single",
+    k: int = 10,
+    sigma: float = 0.25,
+    beta: float = 1.0,
+) -> CalibratedSlaveModel:
+    """Fit (s_base, lam_cap) so slave_max_time(sct,k,lam_i,ns) == t_i.
+
+    targets: [(lam_1, slave_max_1), (lam_2, slave_max_2)] in (q/s, seconds).
+    Exactly two targets determine the two parameters (the paper's Fig 13
+    endpoints at 81 and 40.5 q/s per set).
+    """
+    (l1, t1), (l2, t2) = targets
+    f = expected_max_factor(sigma, ns)
+    # t_i = s_base * f * (1 + beta*rho_i/(1-rho_i));  solve for lam_cap by
+    # bisection on the ratio, then s_base directly.
+    ratio = t1 / t2
+
+    def ratio_at(cap: float) -> float:
+        r1, r2 = l1 / cap, l2 / cap
+        g1 = 1 + beta * r1 / (1 - r1)
+        g2 = 1 + beta * r2 / (1 - r2)
+        return g1 / g2
+
+    lo = max(l1, l2) * 1.0001
+    hi = max(l1, l2) * 1e6
+    for _ in range(200):
+        mid = math.sqrt(lo * hi)
+        if ratio_at(mid) > ratio:
+            lo = mid
+        else:
+            hi = mid
+    cap = math.sqrt(lo * hi)
+    r1 = l1 / cap
+    s_base = t1 / (f * (1 + beta * r1 / (1 - r1)))
+    return CalibratedSlaveModel(s_base=s_base, lam_cap=cap, sigma=sigma, beta=beta)

@@ -1,0 +1,3 @@
+from repro.data.corpus import Corpus, CorpusConfig, generate_corpus
+
+__all__ = ["Corpus", "CorpusConfig", "generate_corpus"]

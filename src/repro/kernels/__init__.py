@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the engine's compute hot-spots (+ jnp oracles)."""

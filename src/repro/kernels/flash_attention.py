@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: flash-attention forward (online softmax in VMEM).
+
+EXPERIMENTS.md §Perf records the XLA-level flash implementation's chunk
+logits round-tripping HBM as the dominant memory term of the train/prefill
+cells; this kernel is the recorded next lever: the (Cq, Ck) logit tile,
+the running max/denominator and the output accumulator never leave VMEM —
+HBM traffic collapses to the q/k/v/o streams.
+
+Layout: grid = (B*H, num_q_chunks, num_k_chunks); q rows are flattened
+(B, KV, G) -> B*H so the GQA k/v row is ``row // G`` in the k/v index_map
+(no repeat/materialization of grouped heads).  Causal masking is built
+from chunk indices + iota; fully-masked k chunks are predicated out
+entirely (the FLOP skip the XLA formulation cannot express).
+
+Forward only: serving (prefill/decode) uses it directly; training wraps it
+in ``jax.custom_vjp`` with the XLA-level flash as the backward (standard
+recompute pattern) — see ``ops.flash_attention``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,    # (1, Cq, hd)
+    k_ref,    # (1, Ck, hd)
+    v_ref,    # (1, Ck, hd)
+    o_ref,    # (1, Cq, hd)
+    m_scr,    # (Cq,) f32 scratch
+    l_scr,    # (Cq,) f32 scratch
+    acc_scr,  # (Cq, hd) f32 scratch
+    *,
+    nk: int,
+    cq: int,
+    ck: int,
+    causal: bool,
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal chunk skip: k chunk strictly after the q chunk's last row.
+    live = True
+    if causal:
+        live = ki * ck <= qi * cq + (cq - 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # (Cq, hd)
+        k = k_ref[0].astype(jnp.float32)            # (Ck, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                    # (Cq, Ck)
+        if causal:
+            qpos = qi * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+            kpos = ki * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "q_chunk", "k_chunk", "interpret")
+)
+def flash_attention_fwd(
+    q: jnp.ndarray,   # (B, S, H, hd)
+    k: jnp.ndarray,   # (B, T, KV, hd)
+    v: jnp.ndarray,   # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    q_chunk: int = 128,
+    k_chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """GQA flash attention forward.  Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    cq, ck = min(q_chunk, S), min(k_chunk, T)
+    assert S % cq == 0 and T % ck == 0, "pad S/T to chunk multiples first"
+    nq, nk = S // cq, T // ck
+    scale = 1.0 / math.sqrt(hd)
+
+    # rows flattened (B, KV, G): k/v row of q-row r is r // G
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * KV, T, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * KV, T, hd)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, nk=nk, cq=cq, ck=ck, causal=causal, scale=scale
+        ),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, cq, hd), lambda r, qi, ki: (r, qi, 0)),
+            pl.BlockSpec((1, ck, hd), lambda r, qi, ki: (r // G, ki, 0)),
+            pl.BlockSpec((1, ck, hd), lambda r, qi, ki: (r // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cq, hd), lambda r, qi, ki: (r, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((cq,), jnp.float32),
+            pltpu.VMEM((cq,), jnp.float32),
+            pltpu.VMEM((cq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(B, H, S, hd), 1, 2)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """Pure-jnp oracle (naive full-logits attention with GQA)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(k.shape[1])[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,53 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) so the kernel bodies
+execute under the Pallas interpreter; on TPU backends the compiled Mosaic
+path is used.  All ops are validated against :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.posting_intersect import (
+    compute_skip_map,
+    intersect_block_skip,
+    skip_fraction,
+)
+from repro.kernels.topk_merge import bitonic_sort, merge_topk
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def intersect(a_docs, a_attrs, b_docs, attr_filter=-1, *, s_max=None,
+              interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return intersect_block_skip(
+        a_docs, a_attrs, b_docs, attr_filter, s_max=s_max, interpret=interpret
+    )
+
+
+def sort(x, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return bitonic_sort(x, interpret=interpret)
+
+
+def topk_merge(cands, k, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return merge_topk(cands, k, interpret=interpret)
+
+
+__all__ = [
+    "intersect",
+    "sort",
+    "topk_merge",
+    "compute_skip_map",
+    "skip_fraction",
+    "ref",
+    "default_interpret",
+]

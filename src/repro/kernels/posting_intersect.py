@@ -1,0 +1,193 @@
+"""Pallas TPU kernel: ZigZag posting-list intersection with block skipping.
+
+Paper mechanism (§2, Fig 4(a)): when joining posting lists, the *sub-index*
+lets the engine skip the parts of a list that cannot contain matches.
+
+TPU adaptation (DESIGN.md §2): the unit of skippable I/O is a VMEM tile of
+``TILE = 1024`` postings (8 sublanes x 128 lanes).  For each driver-list
+(A) tile we precompute — from the skip table, *outside* the kernel — the
+contiguous range of B tiles whose [min,max] docID span overlaps the A
+tile's span.  The kernel's grid is (num_a_tiles, s_max); the B-tile
+BlockSpec index_map reads the per-A-tile start from scalar-prefetched SMEM,
+so **skipped B tiles are never DMA'd from HBM** (out-of-range steps remap
+to an already-resident tile, which Pallas elides).  That is posting
+skipping, with HBM->VMEM DMAs playing the role of disk reads.
+
+The membership test itself is a broadcast-compare: each A tile (8,128) is
+compared against the B tile one 128-lane row at a time — eight (8,128,128)
+vector compares, the VPU-friendly formulation of "is a in b" (sorted merge
+would be scalar/branchy; TPUs want dense regular compares).
+
+The embedded-attribute predicate of a limited search (Fig 4(b)) is fused:
+the attrs stream rides in a sibling BlockSpec and is applied in the same
+pass — the paper's "one sequential scan of the posting list".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.index import INVALID_DOC
+
+TILE_ROWS = 8
+LANES = 128
+TILE = TILE_ROWS * LANES  # 1024 postings per skippable tile
+
+
+def _intersect_kernel(
+    # scalar-prefetch (SMEM):
+    b_start_ref,    # int32[num_a]  first overlapping B tile per A tile
+    n_b_ref,        # int32[num_a]  number of overlapping B tiles
+    attr_ref,       # int32[2]      [attr_filter, attr_enabled]
+    # VMEM:
+    a_ref,          # (8,128) A docids
+    a_attr_ref,     # (8,128) A embedded attrs
+    b_ref,          # (8,128) current B tile
+    out_ref,        # (8,128) int32 mask (accumulated over j)
+    *,
+    s_max: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Posting skipping: only the precomputed overlap range does work.
+    @pl.when(j < n_b_ref[i])
+    def _compare():
+        a = a_ref[...]
+        b = b_ref[...]
+        m = jnp.zeros(a.shape, dtype=jnp.bool_)
+        for r in range(TILE_ROWS):  # 8 x (8,128,128) broadcast compares
+            row = b[r, :]
+            m = m | jnp.any(a[:, :, None] == row[None, None, :], axis=-1)
+        out_ref[...] = out_ref[...] | m.astype(jnp.int32)
+
+    # Final step: fuse validity + embedded-attribute predicate (one pass).
+    @pl.when(j == s_max - 1)
+    def _finalize():
+        a = a_ref[...]
+        valid = a != INVALID_DOC
+        enabled = attr_ref[1] != 0
+        attr_ok = a_attr_ref[...] == attr_ref[0]
+        keep = valid & jnp.where(enabled, attr_ok, True)
+        out_ref[...] = out_ref[...] * keep.astype(jnp.int32)
+
+
+def _pad_to_tile(x: jnp.ndarray, fill) -> jnp.ndarray:
+    n = x.shape[-1]
+    pad = (-n) % TILE
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
+    return x
+
+
+def compute_skip_map(
+    a_docs: jnp.ndarray, b_docs: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-A-tile (b_start, n_b) overlap ranges from the skip tables.
+
+    This is the sub-index lookup of the paper: tile spans are the skip
+    table; searchsorted over them decides which B tiles can join at all.
+    """
+    at = a_docs.reshape(-1, TILE)
+    bt = b_docs.reshape(-1, TILE)
+
+    a_valid = at != INVALID_DOC
+    a_min = at[:, 0]
+    a_max = jnp.max(jnp.where(a_valid, at, -1), axis=1)
+    a_any = jnp.any(a_valid, axis=1)
+
+    b_valid = bt != INVALID_DOC
+    b_min = bt[:, 0]
+    b_max_v = jnp.max(jnp.where(b_valid, bt, -1), axis=1)
+    b_any = jnp.any(b_valid, axis=1)
+    # Keep spans monotone: all-pad tiles sit at the end with span [INVALID,INVALID].
+    b_max = jnp.where(b_any, b_max_v, INVALID_DOC)
+
+    start = jnp.searchsorted(b_max, a_min, side="left").astype(jnp.int32)
+    end = jnp.searchsorted(b_min, a_max, side="right").astype(jnp.int32)
+    start = jnp.minimum(start, bt.shape[0])
+    n_b = jnp.clip(end - start, 0, bt.shape[0]).astype(jnp.int32)
+    n_b = jnp.where(a_any, n_b, 0)
+    return start, n_b
+
+
+@functools.partial(jax.jit, static_argnames=("s_max", "interpret"))
+def intersect_block_skip(
+    a_docs: jnp.ndarray,
+    a_attrs: jnp.ndarray,
+    b_docs: jnp.ndarray,
+    attr_filter: jnp.ndarray | int = -1,
+    *,
+    s_max: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Membership mask of a_docs in b_docs (+fused attr predicate).
+
+    Returns int32[len(a_docs)] in {0,1}.  Matches
+    :func:`repro.kernels.ref.intersect_mask_ref`.
+    """
+    n_a = a_docs.shape[0]
+    a = _pad_to_tile(a_docs, INVALID_DOC)
+    aa = _pad_to_tile(a_attrs, -1)
+    b = _pad_to_tile(b_docs, INVALID_DOC)
+    num_a = a.shape[0] // TILE
+    num_b = b.shape[0] // TILE
+    if s_max is None:
+        s_max = num_b
+    s_max = max(1, min(s_max, num_b))
+
+    b_start, n_b = compute_skip_map(a, b)
+    n_b = jnp.minimum(n_b, s_max)  # cap (perf experiments); default = exact
+    attr_params = jnp.array(
+        [jnp.asarray(attr_filter), jnp.asarray(attr_filter) >= 0], dtype=jnp.int32
+    )
+
+    a2 = a.reshape(num_a * TILE_ROWS, LANES)
+    aa2 = aa.reshape(num_a * TILE_ROWS, LANES)
+    b2 = b.reshape(num_b * TILE_ROWS, LANES)
+
+    def a_map(i, j, b_start_ref, n_b_ref, attr_ref):
+        return (i, 0)
+
+    def b_map(i, j, b_start_ref, n_b_ref, attr_ref):
+        # Out-of-range steps remap to the last in-range tile: the block is
+        # already resident, so Pallas skips the DMA — the "skip" is free.
+        jj = jnp.minimum(j, jnp.maximum(n_b_ref[i] - 1, 0))
+        return (jnp.minimum(b_start_ref[i] + jj, num_b - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(num_a, s_max),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, LANES), a_map),
+            pl.BlockSpec((TILE_ROWS, LANES), a_map),
+            pl.BlockSpec((TILE_ROWS, LANES), b_map),
+        ],
+        out_specs=pl.BlockSpec((TILE_ROWS, LANES), a_map),
+    )
+    out = pl.pallas_call(
+        functools.partial(_intersect_kernel, s_max=s_max),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_a * TILE_ROWS, LANES), jnp.int32),
+        interpret=interpret,
+    )(b_start, n_b, attr_params, a2, aa2, b2)
+    return out.reshape(-1)[:n_a]
+
+
+def skip_fraction(a_docs: jnp.ndarray, b_docs: jnp.ndarray) -> jnp.ndarray:
+    """Diagnostic: fraction of B-tile DMAs avoided by posting skipping."""
+    a = _pad_to_tile(a_docs, INVALID_DOC)
+    b = _pad_to_tile(b_docs, INVALID_DOC)
+    _, n_b = compute_skip_map(a, b)
+    num_a = a.shape[0] // TILE
+    num_b = b.shape[0] // TILE
+    scanned = jnp.sum(n_b)
+    return 1.0 - scanned / (num_a * num_b)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined *here*; tests sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.index import INVALID_ATTR, INVALID_DOC  # noqa: F401
+
+
+def intersect_mask_ref(
+    a_docs: jnp.ndarray,
+    a_attrs: jnp.ndarray,
+    b_docs: jnp.ndarray,
+    attr_filter: int | jnp.ndarray = -1,
+) -> jnp.ndarray:
+    """Membership of each a in sorted b, fused with the embedded-attribute
+    predicate.  Returns int32 mask of shape a_docs.shape.
+
+    Semantics of the ODYS ZigZag join step: a posting survives iff
+      * it is a real posting (not padding),
+      * its docID occurs in the other list,
+      * (limited search only) its embedded attribute matches.
+    """
+    valid = a_docs != INVALID_DOC
+    idx = jnp.searchsorted(b_docs, a_docs, side="left")
+    probe = jnp.take(b_docs, idx, mode="clip")
+    member = (probe == a_docs) & valid
+    attr_enabled = jnp.asarray(attr_filter) >= 0
+    attr_ok = a_attrs == jnp.asarray(attr_filter)
+    return (member & jnp.where(attr_enabled, attr_ok, True)).astype(jnp.int32)
+
+
+def sort_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Ascending sort — oracle for the bitonic top-k merge kernel."""
+    return jnp.sort(x)
+
+
+def merge_topk_ref(cands: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Global top-k (k smallest ids = best ranks) of stacked candidates.
+
+    Oracle for the master-merge: cands is (ns, k) of docIDs (INVALID-padded);
+    result is the k best, ascending — what the paper's loser tree emits.
+    """
+    return jnp.sort(cands.reshape(-1))[:k]

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: bitonic top-k merge (the master's loser tree).
+
+Paper mechanism (§4.1.4, Formula (7)): the master merges ns sorted top-k
+streams with a loser tree — k·(⌈log2 ns⌉·t_cmp + t_base) serial compares.
+
+TPU adaptation: a loser tree is pointer-chasing, scalar, and branchy — the
+exact opposite of what a VPU wants.  The collective-native equivalent of a
+tournament is a **bitonic sorting network**: O(log² n) *data-independent*
+compare-exchange stages, each a dense vector min/max over the whole array.
+We sort the concatenated (ns·k) candidate docIDs ascending (docID == rank,
+DESIGN.md §2) and take the first k.  Every stage with XOR-distance d is
+expressed as a reshape to (n/2d, 2, d) + elementwise min/max — no gathers,
+no branches; sub-lane stages (d < 128) become relayouts, which XLA/Mosaic
+handle (a production kernel would swap register shuffles in; semantics are
+identical).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.index import INVALID_DOC
+
+
+def _bitonic_sort_flat(x: jnp.ndarray) -> jnp.ndarray:
+    """Ascending bitonic sort of a flat power-of-two-length vector."""
+    n = x.shape[0]
+    log_n = n.bit_length() - 1
+    assert 1 << log_n == n, "bitonic sort needs power-of-two length"
+    for k in range(1, log_n + 1):          # merge size 2^k
+        for j in range(k - 1, -1, -1):     # XOR distance 2^j
+            d = 1 << j
+            blocks = n // (2 * d)
+            y = x.reshape(blocks, 2, d)
+            lo, hi = y[:, 0, :], y[:, 1, :]
+            # descending iff bit k of the element index is set; for block b
+            # that is bit (k-j-1) of b.
+            desc = ((jnp.arange(blocks, dtype=jnp.int32) >> (k - j - 1)) & 1) == 1
+            desc = desc[:, None]
+            mn = jnp.minimum(lo, hi)
+            mx = jnp.maximum(lo, hi)
+            new_lo = jnp.where(desc, mx, mn)
+            new_hi = jnp.where(desc, mn, mx)
+            x = jnp.stack([new_lo, new_hi], axis=1).reshape(n)
+    return x
+
+
+def _sort_kernel(x_ref, o_ref):
+    o_ref[...] = _bitonic_sort_flat(x_ref[...].reshape(-1)).reshape(o_ref.shape)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort(x: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """Ascending sort via the Pallas bitonic kernel (pads to pow2/lanes)."""
+    n = x.shape[0]
+    m = max(256, _next_pow2(n))  # >=2 lane rows keeps the layout 2D-friendly
+    xp = jnp.pad(x, (0, m - n), constant_values=INVALID_DOC)
+    rows = m // 128
+    out = pl.pallas_call(
+        _sort_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, 128), x.dtype),
+        in_specs=[pl.BlockSpec((rows, 128), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((rows, 128), lambda: (0, 0)),
+        interpret=interpret,
+    )(xp.reshape(rows, 128))
+    return out.reshape(-1)[:n]
+
+
+def merge_topk(
+    cands: jnp.ndarray, k: int, *, interpret: bool = False
+) -> jnp.ndarray:
+    """Merge (ns, k)-stacked sorted candidate ids into the global top-k.
+
+    Matches :func:`repro.kernels.ref.merge_topk_ref` — the loser-tree output.
+    """
+    flat = cands.reshape(-1)
+    return bitonic_sort(flat, interpret=interpret)[:k]

@@ -1,0 +1,71 @@
+"""Subprocess self-test for the distributed engine (needs >1 devices).
+
+Run as:  python -m repro.launch._parallel_selftest
+Sets XLA host-device count BEFORE importing jax (required), so this module
+must run in its own process — tests/test_parallel.py invokes it that way.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def main() -> None:
+    from repro.core.engine import make_query_batch
+    from repro.core.index import INVALID_DOC, build_index, build_sharded_index, partition_corpus
+    from repro.core.parallel import (
+        distributed_query_topk,
+        replicated_query_topk,
+        sequential_reference,
+    )
+    from repro.data.corpus import CorpusConfig, generate_corpus
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    cfg = CorpusConfig(n_docs=2000, vocab_size=300, mean_doc_len=40, n_sites=16, seed=7)
+    corpus = generate_corpus(cfg)
+    ns = 4
+    sharded, meta = build_sharded_index(corpus, ns)
+    shard_idx = [build_index(p)[0] for p in partition_corpus(corpus, ns)]
+
+    queries = [([5], None), ([3, 7], None), ([2], 3), ([1, 4], 2),
+               ([11, 29], None), ([0], 0), ([8, 13, 21], None), ([6], None)]
+    batch = make_query_batch(queries, t_max=4, meta=meta, strategy="embed")
+
+    mesh = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4])
+    ref = sequential_reference(shard_idx, batch, ns=ns, k=10, window=1024)
+
+    for merge in ("allgather", "tournament"):
+        got = distributed_query_topk(
+            sharded, batch, mesh=mesh, ns=ns, k=10, window=1024, merge=merge
+        )
+        np.testing.assert_array_equal(np.asarray(got.docids), np.asarray(ref.docids))
+        np.testing.assert_array_equal(np.asarray(got.n_hits), np.asarray(ref.n_hits))
+        print(f"distributed merge={merge}: OK")
+
+    # Multi-pod (2 ODYS sets x 4 slaves): query stream sharded over pods.
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    got2 = replicated_query_topk(
+        sharded, batch, mesh=mesh2, ns=ns, k=10, window=1024, merge="tournament"
+    )
+    np.testing.assert_array_equal(np.asarray(got2.docids), np.asarray(ref.docids))
+    print("replicated (2 pods): OK")
+
+    # Verify results match the single-index ground truth too.
+    full_idx, _ = build_index(corpus)
+    from repro.core.engine import query_topk
+
+    fd, fh = query_topk(full_idx, batch, k=10, window=4096)
+    np.testing.assert_array_equal(np.asarray(ref.docids), np.asarray(fd))
+    print("sharded == unsharded ground truth: OK")
+    print("PARALLEL_SELFTEST_PASS")
+
+
+if __name__ == "__main__":
+    main()

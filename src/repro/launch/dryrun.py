@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_XLA_EXTRA", "") + " "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. lowers the mode's step function against ShapeDtypeStruct inputs with
+     full in/out shardings (zero device allocation);
+  3. compiles — proving the sharding config is coherent (SPMD partitioning
+     succeeds, collectives are legal, shapes divide or legally pad);
+  4. prints/records memory_analysis() and cost_analysis() plus the
+     parsed collective byte counts for EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                   # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k --mesh multi
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES_BY_NAME, applicable_shapes, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (
+    cache_pspecs,
+    io_pspec,
+    opt_pspecs,
+    param_pspecs,
+)
+from repro.launch.specs import (
+    abstract_cache,
+    abstract_train_state,
+    batch_specs,
+    decode_pos_spec,
+)
+from repro.models.model import decode_step, forward_logits, train_loss
+from repro.models.sharding import use_mesh
+from repro.models.transformer import init_cache
+from repro.roofline.analysis import model_flops_for, roofline_from_compiled
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _sharded_bytes(avals, shardings, mesh) -> float:
+    """Per-device bytes of a pytree of avals under the given specs."""
+    total = 0.0
+    for aval, sh in zip(jax.tree.leaves(avals), jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, (NamedSharding, P))
+    )):
+        spec = sh.spec if isinstance(sh, NamedSharding) else sh
+        shards = 1
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        total += (aval.size * aval.dtype.itemsize) / shards
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               variant: str = "baseline"):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    with use_mesh(mesh):
+        if shape.mode == "train":
+            state = abstract_train_state(cfg)
+            batch = batch_specs(cfg, shape)
+            p_specs = param_pspecs(state.params, mesh)
+            state_specs = type(state)(
+                params=p_specs,
+                opt=type(state.opt)(
+                    step=P(),
+                    mu=opt_pspecs(state.opt.mu, p_specs, mesh),
+                    nu=opt_pspecs(state.opt.nu, p_specs, mesh),
+                ),
+            )
+            b_specs = {k: io_pspec(mesh, v.shape) for k, v in batch.items()}
+            step = make_train_step(cfg, AdamWConfig(), remat=True)
+            metric_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+            jitted = jax.jit(
+                step,
+                in_shardings=(_ns(mesh, state_specs), _ns(mesh, b_specs)),
+                out_shardings=(
+                    _ns(mesh, state_specs), _ns(mesh, metric_specs)
+                ),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state, batch)
+            arg_bytes = _sharded_bytes(state, state_specs, mesh) + _sharded_bytes(
+                batch, b_specs, mesh
+            )
+        elif shape.mode == "prefill":
+            params = abstract_train_state(cfg).params
+            batch = batch_specs(cfg, shape)
+            p_specs = param_pspecs(params, mesh)
+            b_specs = {k: io_pspec(mesh, v.shape) for k, v in batch.items()}
+
+            def prefill_fn(p, inputs):
+                cache = init_cache(cfg, shape.global_batch, shape.seq_len)
+                from repro.models.transformer import apply_model
+                logits, cache, _ = apply_model(
+                    p, cfg, inputs["tokens"],
+                    prefix_embeds=inputs.get("prefix_embeds"),
+                    encoder_frames=inputs.get("encoder_frames"),
+                    cache=cache, cache_pos=jnp.int32(0),
+                )
+                return logits[:, -1, :], cache
+
+            out_cache = abstract_cache(cfg, shape)
+            c_specs = cache_pspecs(out_cache, mesh)
+            logit_spec = io_pspec(
+                mesh, (shape.global_batch, cfg.vocab)
+            )
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(_ns(mesh, p_specs), _ns(mesh, b_specs)),
+                out_shardings=(
+                    NamedSharding(mesh, logit_spec), _ns(mesh, c_specs)
+                ),
+            )
+            lowered = jitted.lower(params, batch)
+            arg_bytes = _sharded_bytes(params, p_specs, mesh) + _sharded_bytes(
+                batch, b_specs, mesh
+            )
+        else:  # decode
+            params = abstract_train_state(cfg).params
+            cache = abstract_cache(cfg, shape)
+            p_specs = param_pspecs(params, mesh)
+            c_specs = cache_pspecs(cache, mesh)
+            tok = batch_specs(cfg, shape)["tokens"]
+            t_spec = io_pspec(mesh, tok.shape)
+            b_ax = t_spec[0]
+
+            if variant == "serve_topk":
+                # ODYS merge at the LM head (DESIGN.md §3.1): every model
+                # shard returns its local top-k over its vocab slice; a
+                # log-depth tournament replaces the full-vocab logits
+                # output — the paper's master/slave merge, verbatim.
+                from repro.serving.router import distributed_vocab_topk
+
+                def decode_fn(p, c, t, pos):
+                    logits, new_c = decode_step(p, cfg, t, c, pos)
+                    logits = jax.lax.with_sharding_constraint(
+                        logits, NamedSharding(mesh, P(b_ax, "model"))
+                    )
+                    vals, ids = distributed_vocab_topk(
+                        logits, mesh=mesh, k=8, batch_axes=b_ax,
+                    )
+                    return (vals, ids), new_c
+
+                out0 = (
+                    NamedSharding(mesh, P(b_ax, None)),
+                    NamedSharding(mesh, P(b_ax, None)),
+                )
+            else:
+                def decode_fn(p, c, t, pos):
+                    return decode_step(p, cfg, t, c, pos)
+
+                out0 = NamedSharding(
+                    mesh, io_pspec(mesh, (shape.global_batch, cfg.vocab))
+                )
+
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(
+                    _ns(mesh, p_specs), _ns(mesh, c_specs),
+                    NamedSharding(mesh, t_spec), NamedSharding(mesh, P()),
+                ),
+                out_shardings=(out0, _ns(mesh, c_specs)),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params, cache, tok, decode_pos_spec())
+            arg_bytes = (
+                _sharded_bytes(params, p_specs, mesh)
+                + _sharded_bytes(cache, c_specs, mesh)
+            )
+    return cfg, shape, mesh, lowered, arg_bytes
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = True,
+             variant: str = "baseline"):
+    t0 = time.time()
+    cfg, shape, mesh, lowered, arg_bytes = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, variant=variant
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    chips = math.prod(mesh.shape.values())
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                k: float(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+    except Exception:
+        pass
+    hlo = compiled.as_text()
+    roof = roofline_from_compiled(
+        compiled, chips, model_flops=model_flops_for(cfg, shape), hlo_text=hlo
+    )
+
+    record = {
+        "variant": variant,
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.shape.values())),
+        "chips": chips,
+        "mode": shape.mode,
+        "arg_bytes_per_device": arg_bytes,
+        "memory_analysis": mem,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        **roof.as_dict(),
+    }
+    if verbose:
+        print(
+            f"[dryrun] {arch:24s} {shape_name:12s} mesh={record['mesh']:8s} "
+            f"OK  args/dev={arg_bytes/2**30:6.2f}GiB "
+            f"compute={roof.compute_s*1e3:8.2f}ms mem={roof.memory_s*1e3:8.2f}ms "
+            f"coll={roof.collective_s*1e3:8.2f}ms dom={roof.dominant:10s} "
+            f"useful={roof.useful_ratio:5.2f} (lower {t_lower:.0f}s, "
+            f"compile {t_compile:.0f}s)",
+            flush=True,
+        )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all applicable)")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--variant", default="baseline",
+                    choices=("baseline", "serve_topk"))
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in list_archs():
+            cfg = get_config(a)
+            print(a, [s.name for s in applicable_shapes(cfg)])
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list_archs()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (
+            [args.shape] if args.shape
+            else [s.name for s in applicable_shapes(cfg)]
+        )
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape_name}_{'multi' if multi else 'single'}"
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod=multi,
+                                   variant=args.variant)
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(rec, f, indent=1)
+                    n_ok += 1
+                except Exception as e:
+                    n_fail += 1
+                    print(f"[dryrun] {tag} FAILED: {e}", flush=True)
+                    traceback.print_exc()
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

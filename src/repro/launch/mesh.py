@@ -1,0 +1,40 @@
+"""Production mesh definitions.
+
+TPU v5e target: one pod = 16x16 = 256 chips, meshed (data=16, model=16);
+multi-pod = 2 pods = 512 chips, meshed (pod=2, data=16, model=16).
+``pod`` carries ODYS-set semantics (DESIGN.md §5): replica/data parallelism
+only — training all-reduces gradients across pods, serving keeps pods
+fully independent.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(
+        shape, axes,
+        devices=jax.devices()[:n],
+        axis_types=(AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(data: int = 4, model: int = 2, pod: int | None = None) -> Mesh:
+    """Small mesh over however many (fake or real) devices exist — used by
+    tests and CPU examples."""
+    if pod:
+        shape, axes = (pod, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,186 @@
+"""PartitionSpec assignment for params, optimizer state, inputs and caches.
+
+Rules (DESIGN.md §5):
+
+- 2D projection weights: input-proj (D,F) -> (None, model); output-proj
+  (F,D) -> (model, None)  [Megatron TP];
+- embeddings / LM head: vocab dim -> model (all-gather on embed lookup,
+  and the vocab-sharded head feeds the ODYS top-k router);
+- MoE expert tensors (E,D,F): expert dim -> model  [expert parallelism];
+- optimizer moments: the param's spec, plus dim0 -> data when divisible
+  [ZeRO-1-style optimizer-state sharding];
+- batch dims -> ("pod","data") when divisible (pods = ODYS sets);
+- KV caches: kv-head dim -> model when divisible, else head_dim -> model;
+  for unshardable batch (long_500k B=1) the cache length dim -> data
+  [sequence-sharded cache].
+
+Every rule checks divisibility and degrades to replication, so any
+(arch x shape x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+# Base specs by leaf name (ndim-matched, left-padded with None for stacking).
+_IN_PROJ = ("wq", "wk", "wv", "wg", "w_in", "w_gate", "w_gate_br")
+_OUT_PROJ = ("wo", "w_out")
+
+
+def _axis_ok(mesh: Mesh, axis: str | None, size: int) -> bool:
+    if axis is None:
+        return True
+    return axis in mesh.axis_names and size % mesh.shape[axis] == 0
+
+
+def _base_spec(name: str, in_moe: bool, shape: tuple[int, ...], mesh: Mesh):
+    nd = len(shape)
+    if name == "emb":
+        return ("model", None)
+    if name == "w":           # LM head (D, V)
+        return (None, "model")
+    if name == "router":
+        return (None, None)
+    if in_moe and name in ("w_in", "w_gate", "w_out"):
+        # Expert parallelism when E divides the axis (moonshot 64e);
+        # otherwise Megatron TP *within* each expert on the d_ff dim
+        # (mixtral 8e on a 16-wide axis — padding E would idle half the
+        # chips, measured as 2x FLOP waste in the dry-run).
+        e = shape[-3]
+        if "model" in mesh.axis_names and e % mesh.shape["model"] == 0:
+            return ("model", None, None)
+        if name == "w_out":            # (E, F, D): shard F
+            return (None, "model", None)
+        return (None, None, "model")   # (E, D, F): shard F
+    if name in _IN_PROJ and nd >= 2:
+        return (None, "model")
+    if name in _OUT_PROJ and nd >= 2:
+        return ("model", None)
+    if name == "conv_k":
+        return (None, "model")
+    if name in ("gate_wr", "gate_br", "gate_wi", "gate_bi", "lam", "conv_b"):
+        return ("model",)
+    return (None,) * nd
+
+
+def param_pspecs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree for a parameter pytree."""
+
+    def one(path, leaf):
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        names = [str(e.key) for e in path if isinstance(e, DictKey)]
+        name = names[-1] if names else ""
+        base = _base_spec(name, "moe" in names, shape, mesh)
+        # left-pad for stacked (groups / encoder layers) leading dims
+        pad = len(shape) - len(base)
+        spec = (None,) * max(pad, 0) + tuple(base[-len(shape):] if pad < 0 else base)
+        # degrade non-divisible axes to replication
+        spec = tuple(
+            ax if _axis_ok(mesh, ax, shape[i]) else None
+            for i, ax in enumerate(spec)
+        )
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_pspecs(params: Any, param_specs: Any, mesh: Mesh) -> Any:
+    """ZeRO-1: moments inherit the param spec, plus dim0 -> data when free."""
+
+    def one(leaf, spec: P):
+        shape = leaf.shape
+        s = list(spec) + [None] * (len(shape) - len(spec))
+        if (
+            len(shape) >= 2
+            and s[0] is None
+            and "data" in mesh.axis_names
+            and shape[0] % mesh.shape["data"] == 0
+        ):
+            s[0] = "data"
+        return P(*s)
+
+    return jax.tree_util.tree_map(one, params, param_specs)
+
+
+def batch_axes(mesh: Mesh, b: int):
+    """Largest prefix of (pod, data) that divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if b % total == 0:
+        return tuple(axes) if axes else None
+    if "data" in mesh.axis_names and b % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def io_pspec(mesh: Mesh, shape: tuple[int, ...]):
+    """Spec for a (B, ...) input array: batch-shard dim0 when divisible."""
+    b_ax = batch_axes(mesh, shape[0])
+    return P(b_ax, *(None,) * (len(shape) - 1))
+
+
+def kv_cache_pspec(mesh: Mesh, shape: tuple[int, ...]):
+    """(B, L, KV, hd) cache spec per module docstring."""
+    B, Lc, KV, hd = shape
+    b_ax = batch_axes(mesh, B)
+    used_data = b_ax is not None and "data" in (b_ax if isinstance(b_ax, tuple) else (b_ax,))
+    l_ax = (
+        "data"
+        if not used_data and _axis_ok(mesh, "data", Lc) and Lc > 1
+        else None
+    )
+    if _axis_ok(mesh, "model", KV) and KV > 1:
+        kv_ax, hd_ax = "model", None
+    elif _axis_ok(mesh, "model", hd):
+        kv_ax, hd_ax = None, "model"
+    else:
+        kv_ax, hd_ax = None, None
+    return P(b_ax, l_ax, kv_ax, hd_ax)
+
+
+def cache_pspecs(cache: Any, mesh: Mesh) -> Any:
+    """Spec tree for a decode cache pytree (kv / rglru / rwkv states)."""
+
+    def one(path, leaf):
+        shape = leaf.shape
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, DictKey):
+                name = str(entry.key)
+                break
+        nd = len(shape)
+        # group-stacked caches have a leading group dim
+        lead = 1 if nd > 0 and path and _is_group_stacked(path) else 0
+        core = shape[lead:]
+        if name in ("k", "v", "ck", "cv") and len(core) == 4:
+            spec = kv_cache_pspec(mesh, core)
+        elif name == "s" and len(core) == 4:       # rwkv state (B,H,hd,hd)
+            b_ax = batch_axes(mesh, core[0])
+            h_ax = "model" if _axis_ok(mesh, "model", core[1]) and core[1] > 1 else None
+            spec = P(b_ax, h_ax, None, None)
+        elif name in ("h", "x_prev") and len(core) == 2:
+            b_ax = batch_axes(mesh, core[0])
+            f_ax = "model" if _axis_ok(mesh, "model", core[1]) else None
+            spec = P(b_ax, f_ax)
+        elif name == "conv" and len(core) == 3:
+            b_ax = batch_axes(mesh, core[0])
+            f_ax = "model" if _axis_ok(mesh, "model", core[2]) else None
+            spec = P(b_ax, None, f_ax)
+        else:
+            spec = P(*(None,) * len(core))
+        return P(*((None,) * lead + tuple(spec)))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def _is_group_stacked(path) -> bool:
+    for entry in path:
+        if isinstance(entry, DictKey) and str(entry.key) == "groups":
+            return True
+    return False

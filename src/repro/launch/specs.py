@@ -1,0 +1,60 @@
+"""Abstract input/state specs for every (arch x shape) dry-run cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for the function lowered in each mode:
+
+- train:   train_step(state, batch)      batch = tokens/labels (+stubs)
+- prefill: prefill_fn(params, batch)     cache built inside
+- decode:  decode_fn(params, cache, tokens, pos)   cache = seq_len KV
+
+Modality frontends are STUBS per the assignment: the vision/audio cells
+receive precomputed patch/frame embeddings here.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.model import abstract_params
+from repro.models.transformer import init_cache
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    B = shape.global_batch
+    if shape.is_decode:
+        out = {"tokens": SDS((B, 1), jnp.int32)}
+        return out
+    S = shape.seq_len
+    n_tok = S - cfg.n_prefix_embeds
+    out = {"tokens": SDS((B, n_tok), jnp.int32)}
+    if shape.mode == "train":
+        out["labels"] = SDS((B, n_tok), jnp.int32)
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = SDS((B, cfg.n_prefix_embeds, cfg.d_model), cfg.cdtype)
+    if cfg.kind == "encdec":
+        out["encoder_frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), cfg.cdtype)
+    return out
+
+
+def abstract_train_state(cfg: ArchConfig) -> TrainState:
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(init_opt_state, params)
+    return TrainState(params, opt)
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeSpec) -> Any:
+    return jax.eval_shape(
+        partial(init_cache, cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def decode_pos_spec() -> SDS:
+    return SDS((), jnp.int32)

@@ -1,0 +1,374 @@
+"""Shared neural layers: norms, RoPE, GQA/MQA attention (+KV cache,
+sliding window, cross attention), gated MLPs, embeddings.
+
+Functional style: params are nested dicts of jnp arrays; ``init_*``
+functions build them, ``apply`` functions consume them.  All matmul
+weights carry logical sharding via :mod:`repro.models.sharding`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.sharding import constrain
+
+Params = dict[str, Any]
+
+
+def _init_w(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, dim: int, dtype) -> Params:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(kind: str, p: Params, x: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash (chunked online-softmax) attention core
+# ---------------------------------------------------------------------------
+
+def _flash_gqa(
+    qg: jnp.ndarray,        # (B, S, KV, G, hd)
+    k: jnp.ndarray,         # (B, T, KV, hd)
+    v: jnp.ndarray,         # (B, T, KV, hd)
+    q_base: jnp.ndarray,    # (B,) position of query 0
+    k_base: jnp.ndarray,    # (B,) position of key 0
+    k_len: jnp.ndarray,     # (B,) number of valid keys
+    *,
+    causal: bool,
+    window: Optional[int],
+    scale: float,
+    q_chunk: int,
+    k_chunk: int,
+) -> jnp.ndarray:
+    """Online-softmax attention, O(S*chunk) memory instead of O(S*T).
+
+    Both loops are lax.scans; masked-out key chunks still compute (a true
+    flash kernel skips them — the ~2x causal-FLOP overcount is noted in
+    EXPERIMENTS.md §Roofline).  This is the XLA-level formulation: the
+    chunk matmuls are MXU-shaped and the S*T logits never touch HBM.
+
+    Masks are rebuilt inside the loop body from *scalar* chunk offsets +
+    iota (positions are contiguous ranges in every caller), so XLA cannot
+    hoist a stacked (nq x nk x Cq x Ck) mask buffer out of the loops.
+    """
+    B, S, KV, G, hd = qg.shape
+    T = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, T)
+    s_pad = (-S) % q_chunk
+    t_pad = (-T) % k_chunk
+    if s_pad:
+        qg = jnp.pad(qg, ((0, 0), (0, s_pad), (0, 0), (0, 0), (0, 0)))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        k_len = jnp.minimum(k_len, T)
+    nq, nk = qg.shape[1] // q_chunk, k.shape[1] // k_chunk
+
+    # chunk-major layouts for scan
+    qs = jnp.moveaxis(qg.reshape(B, nq, q_chunk, KV, G, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, k_chunk, KV, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, k_chunk, KV, hd), 1, 0)
+    q_off = jnp.arange(nq, dtype=jnp.int32) * q_chunk
+    k_off = jnp.arange(nk, dtype=jnp.int32) * k_chunk
+    ci = jnp.arange(q_chunk, dtype=jnp.int32)
+    cj = jnp.arange(k_chunk, dtype=jnp.int32)
+
+    def q_step(_, qx):
+        qc, qo = qx                # (B,Cq,KV,G,hd), scalar chunk offset
+        qpos = q_base[:, None] + qo + ci[None, :]            # (B,Cq)
+
+        def k_step(carry, kx):
+            m, l, acc = carry
+            kc, vc, ko = kx
+            kpos = k_base[:, None] + ko + cj[None, :]        # (B,Ck)
+            # bf16 operands, f32 accumulation — declared natively so XLA's
+            # excess-precision pass cannot hoist f32 converts in front of
+            # the (sharded, gathered) operands (2x collective bytes).
+            logits = (
+                jnp.einsum(
+                    "bckgh,bdkh->bkgcd", qc, kc,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )                                          # (B,KV,G,Cq,Ck)
+            kid = ko + cj[None, :]
+            mask = (kid < k_len[:, None])[:, None, None, None, :]
+            if causal:
+                cm = kpos[:, None, :] <= qpos[:, :, None]        # (B,Cq,Ck)
+                if window is not None:
+                    cm &= kpos[:, None, :] > (qpos[:, :, None] - window)
+                mask = mask & cm[:, None, None, :, :]
+            logits = jnp.where(mask, logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bkgcd,bdkh->bkgch", p.astype(qc.dtype), vc,
+                preferred_element_type=qc.dtype,
+            )
+            acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), qc.dtype)
+        (m, l, acc), _ = lax.scan(k_step, (m0, l0, a0), (ks, vs, k_off))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, jnp.moveaxis(out, 3, 1)           # (B,Cq,KV,G,hd)
+
+    _, outs = lax.scan(q_step, None, (qs, q_off))       # (nq,B,Cq,KV,G,hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, KV, G, hd)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / cross) with optional KV cache & sliding window
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, hd: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init_w(ks[0], (d_model, n_heads * hd), dtype),
+        "wk": _init_w(ks[1], (d_model, n_kv * hd), dtype),
+        "wv": _init_w(ks[2], (d_model, n_kv * hd), dtype),
+        "wo": _init_w(ks[3], (n_heads * hd, d_model), dtype),
+    }
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,                      # (B, S, D)
+    *,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+    positions: jnp.ndarray,              # (B, S) query positions
+    rope_theta: Optional[float] = 10_000.0,   # None => no RoPE (Whisper)
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,      # {"k","v": (B, L, n_kv, hd)}
+    cache_pos: Optional[jnp.ndarray] = None,  # scalar int32 write offset
+    memory: Optional[jnp.ndarray] = None,     # (B, T, D) cross-attn source
+    kv_override: Optional[tuple] = None,      # precomputed (k, v) (cross cache)
+    impl: str = "naive",                      # naive | flash (chunked)
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> tuple[jnp.ndarray, Optional[Params]]:
+    B, S, D = x.shape
+    # q/k/v carry no explicit constraints: GSPMD propagates the flat
+    # feature-dim sharding from wq/wk/wv through the head reshape and picks
+    # a consistent (heads x head_dim) tiling — explicit head-dim constraints
+    # conflict with the GQA einsum layout when n_heads doesn't divide the
+    # model axis (24 or 56 heads on 16) and trigger involuntary reshards.
+    q = (x @ p["wq"]).reshape(B, S, n_heads, hd)
+    if kv_override is not None:
+        k, v = kv_override
+        memory = k  # mark as cross-attention (no causal/rope path below)
+    else:
+        kv_src = memory if memory is not None else x
+        k = (kv_src @ p["wk"]).reshape(B, kv_src.shape[1], n_kv, hd)
+        v = (kv_src @ p["wv"]).reshape(B, kv_src.shape[1], n_kv, hd)
+
+    if rope_theta is not None and memory is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, cache_pos, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        k_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=jnp.int32)[None, :], (B, k.shape[1])
+        )
+        k_valid = k_pos <= (cache_pos + S - 1)
+    elif memory is not None:
+        # cross attention: key positions index the encoder sequence
+        # (unused for masking — causal is off — but must be shape-correct)
+        k_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=jnp.int32)[None, :], (B, k.shape[1])
+        )
+        k_valid = jnp.ones(k.shape[:2], dtype=bool)
+    else:
+        k_pos = jnp.broadcast_to(positions[:, : k.shape[1]], (B, k.shape[1]))
+        k_valid = jnp.ones(k.shape[:2], dtype=bool)
+
+    # GQA: group query heads over kv heads.
+    g = n_heads // n_kv
+    qg = q.reshape(B, S, n_kv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    use_causal = causal and memory is None
+
+    if impl == "flash" and S > 1:
+        if cache is not None:
+            # Cached prefill: the cache is head_dim- or length-sharded over
+            # ``model``; left alone, GSPMD re-gathers every (q,k) chunk pair
+            # inside the flash loops (32x redundant traffic, measured).
+            # Pre-gathering K/V once per layer hoists one all-gather out of
+            # both scans.  (Train/no-cache K/V are already head-sharded
+            # activations — no constraint needed or wanted.)
+            k = constrain(k, "batch", None, None, None)
+            v = constrain(v, "batch", None, None, None)
+        # positions are contiguous per row in every caller, so the chunk
+        # masks reconstruct from the row bases (see _flash_gqa docstring).
+        q_base = positions[:, 0]
+        if cache is not None:
+            k_base = jnp.zeros((B,), jnp.int32)
+            k_len = jnp.broadcast_to(
+                (cache_pos + S).astype(jnp.int32), (B,)
+            )
+        elif memory is not None:
+            k_base = jnp.zeros((B,), jnp.int32)
+            k_len = jnp.full((B,), k.shape[1], jnp.int32)
+        else:
+            k_base = positions[:, 0]
+            k_len = jnp.full((B,), k.shape[1], jnp.int32)
+        out = _flash_gqa(
+            qg, k, v, q_base, k_base, k_len,
+            causal=use_causal, window=window, scale=scale,
+            q_chunk=q_chunk, k_chunk=k_chunk,
+        ).reshape(B, S, n_heads * hd)
+        out = constrain(out, "batch", None, "model")
+        return out @ p["wo"], new_cache
+
+    if cache is not None and S == 1:
+        # Decode: the cache is head_dim-sharded over ``model``.  Left to
+        # itself GSPMD all-gathers the full (B,L,KV,hd) cache per layer
+        # (537MB/layer for a 32k cache — measured).  Sharding q on hd too
+        # forces the cheap plan: local partial contraction over the hd
+        # shard + an all-reduce of the (B,KV,G,1,L) logits (25MB).
+        qg = constrain(qg, "batch", None, None, None, "model")
+    logits = jnp.einsum(
+        "bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.broadcast_to(k_valid[:, None, :], (B, S, k.shape[1]))
+    if use_causal:
+        qpos = positions[:, :, None]                 # (B,S,1)
+        kpos = k_pos[:, None, :]                     # (B,1,T)
+        mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out5 = jnp.einsum(
+        "bkgst,btkh->bskgh", probs, v, preferred_element_type=x.dtype
+    )
+    if cache is not None and S == 1:
+        # decode: keep the PV product hd-sharded like v (otherwise GSPMD
+        # gathers the whole v cache to satisfy the flat-head reshape).
+        out5 = constrain(out5, "batch", None, None, None, "model")
+    out = out5.reshape(B, S, n_heads * hd)
+    out = constrain(out, "batch", None, "model")
+    return out @ p["wo"], new_cache
+
+
+def init_kv_cache(batch: int, length: int, n_kv: int, hd: int, dtype) -> Params:
+    shape = (batch, length, n_kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, kind: str, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": _init_w(ks[0], (d_model, d_ff), dtype),
+         "w_out": _init_w(ks[1], (d_ff, d_model), dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = _init_w(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def apply_mlp(kind: str, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ p["w_in"]
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(kind)
+    h = constrain(h, "batch", None, "model")
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"emb": _init_w(key, (vocab, d_model), dtype, scale=1.0)}
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["emb"], tokens, axis=0)
+
+
+def init_head(key, d_model: int, vocab: int, dtype) -> Params:
+    return {"w": _init_w(key, (d_model, vocab), dtype)}
+
+
+def lm_logits(head: Params | None, emb: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if head is not None:
+        w = head["w"]
+        logits = x @ w
+    else:  # tied embeddings (gemma-style 1/sqrt(d) logit scaling)
+        w = emb["emb"].T
+        logits = (x @ w) * (x.shape[-1] ** -0.5)
+    return constrain(logits, "batch", None, "model")

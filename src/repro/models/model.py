@@ -1,0 +1,112 @@
+"""Public model API: init / loss / prefill / decode for any ArchConfig."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import (
+    apply_model,
+    init_cache,
+    init_params,
+)
+
+Params = dict[str, Any]
+
+AUX_LOSS_COEF = 0.01
+
+
+def make_inputs(cfg: ArchConfig, batch: int, seq: int, *, rng=None):
+    """Concrete (smoke-test) inputs for one step; mirrors launch.input_specs."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 3)
+    n_tok = seq - cfg.n_prefix_embeds
+    out = {
+        "tokens": jax.random.randint(ks[0], (batch, n_tok), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(ks[1], (batch, n_tok), 0, cfg.vocab, jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = jax.random.normal(
+            ks[2], (batch, cfg.n_prefix_embeds, cfg.d_model), jnp.float32
+        ).astype(cfg.cdtype)
+    if cfg.kind == "encdec":
+        out["encoder_frames"] = jax.random.normal(
+            ks[2], (batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+        ).astype(cfg.cdtype)
+    return out
+
+
+def forward_logits(params: Params, cfg: ArchConfig, inputs: dict) -> jnp.ndarray:
+    logits, _, _ = apply_model(
+        params, cfg, inputs["tokens"],
+        prefix_embeds=inputs.get("prefix_embeds"),
+        encoder_frames=inputs.get("encoder_frames"),
+    )
+    return logits
+
+
+def train_loss(params: Params, cfg: ArchConfig, inputs: dict) -> jnp.ndarray:
+    """Next-token cross entropy (+ MoE aux).  Loss over token positions only
+    (vision prefix positions are context, not targets)."""
+    logits, _, aux = apply_model(
+        params, cfg, inputs["tokens"],
+        prefix_embeds=inputs.get("prefix_embeds"),
+        encoder_frames=inputs.get("encoder_frames"),
+    )
+    n_prefix = cfg.n_prefix_embeds if inputs.get("prefix_embeds") is not None else 0
+    logits = logits[:, n_prefix:, :]
+    labels = inputs["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    if cfg.is_moe:
+        loss = loss + AUX_LOSS_COEF * aux
+    return loss
+
+
+def prefill(
+    params: Params, cfg: ArchConfig, inputs: dict, max_len: int
+) -> tuple[jnp.ndarray, Params]:
+    """Run the prompt through the model, filling a max_len KV cache."""
+    batch = inputs["tokens"].shape[0]
+    cache = init_cache(cfg, batch, max_len)
+    logits, cache, _ = apply_model(
+        params, cfg, inputs["tokens"],
+        prefix_embeds=inputs.get("prefix_embeds"),
+        encoder_frames=inputs.get("encoder_frames"),
+        cache=cache, cache_pos=jnp.int32(0),
+    )
+    return logits[:, -1, :], cache
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,        # (B, 1)
+    cache: Params,
+    pos,                        # scalar int32: current position
+) -> tuple[jnp.ndarray, Params]:
+    """One new token against a filled KV cache (the ``decode_*`` cells)."""
+    logits, new_cache, _ = apply_model(
+        params, cfg, tokens, cache=cache, cache_pos=pos,
+    )
+    return logits[:, -1, :], new_cache
+
+
+def init_model(rng, cfg: ArchConfig) -> Params:
+    return init_params(rng, cfg)
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def count_params(params: Params) -> int:
+    return sum(
+        int(jnp.size(x)) if hasattr(x, "size") else 0
+        for x in jax.tree.leaves(params)
+    )

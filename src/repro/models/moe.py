@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Expert parallelism: the expert dim of every expert weight is sharded over
+the ``model`` mesh axis (8 experts -> EP8 for Mixtral; 64 -> 4 experts per
+shard on a 16-wide axis for Moonlight).  Dispatch is gather-based and
+**per batch row** (vmapped over B): the batch dim stays sharded over
+``data`` while the expert dim shards over ``model``, so the expert einsum
+partitions over BOTH axes — flattening (B,S) into one global token pool
+would serialize every data shard onto the full capacity buffer (41x FLOP
+inflation, measured in the dry-run; see EXPERIMENTS.md §Perf).
+
+Per row: capacity C = cf * S * topk / E; each expert takes its first C
+assigned tokens (priority = token order), over-capacity tokens pass
+through the residual only — standard capacity-factor semantics, enforced
+per row exactly like per-device capacity in production MoE systems.
+
+The ODYS connection (DESIGN.md §3.1): routing is a local-top-k problem per
+token — the same rank-merge semantics the search engine's top-k uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _init_w
+from repro.models.sharding import constrain
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, mlp: str, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _init_w(ks[0], (d_model, n_experts), jnp.float32),
+        "w_in": _init_w(ks[1], (n_experts, d_model, d_ff), dtype),
+        "w_out": _init_w(ks[2], (n_experts, d_ff, d_model), dtype),
+    }
+    if mlp in ("swiglu", "geglu"):
+        p["w_gate"] = _init_w(ks[3], (n_experts, d_model, d_ff), dtype)
+    return p
+
+
+def _route_row(xf, router, n_experts: int, topk: int, cap: int):
+    """Dispatch plan for one batch row.  xf: (S, D) -> slot mapping."""
+    S = xf.shape[0]
+    logits = xf.astype(jnp.float32) @ router                    # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, topk)            # (S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style aux loss ingredients.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((n_experts,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (S * topk)
+    )
+    aux = n_experts * jnp.sum(me * ce)
+
+    flat_expert = gate_idx.reshape(-1)                          # (S*k,)
+    flat_token = jnp.repeat(jnp.arange(S, dtype=jnp.int32), topk)
+    flat_gate = gate_vals.reshape(-1)
+
+    # Rank of each (token, slot) within its expert's queue.
+    order = jnp.argsort(flat_expert, stable=True)
+    grouped = flat_expert[order]
+    pos_in_group = jnp.arange(S * topk, dtype=jnp.int32) - jnp.searchsorted(
+        grouped, grouped, side="left"
+    ).astype(jnp.int32)
+    rank = jnp.zeros(S * topk, jnp.int32).at[order].set(pos_in_group)
+    keep = rank < cap
+
+    # Dropped entries spill to a sacrificial slot so they never clobber.
+    slot_key = jnp.where(keep, flat_expert * cap + rank, n_experts * cap)
+    slot_src = jnp.full((n_experts * cap + 1,), S, jnp.int32)   # S = dummy row
+    slot_gate = jnp.zeros((n_experts * cap + 1,), jnp.float32)
+    slot_src = slot_src.at[slot_key].set(flat_token)
+    slot_gate = slot_gate.at[slot_key].set(flat_gate)
+    return slot_src[:-1], slot_gate[:-1], aux
+
+
+def apply_moe(
+    p: Params,
+    x: jnp.ndarray,            # (B, S, D)
+    *,
+    n_experts: int,
+    topk: int,
+    capacity_factor: float,
+    mlp: str,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux load-balancing loss scalar)."""
+    B, S, D = x.shape
+    cap = max(1, int(capacity_factor * S * topk / n_experts))
+
+    slot_src, slot_gate, aux = jax.vmap(
+        lambda row: _route_row(row, p["router"], n_experts, topk, cap)
+    )(x)                                                        # (B, E*C), ...
+
+    xpad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(
+        xpad, slot_src[..., None].astype(jnp.int32), axis=1
+    ).reshape(B, n_experts, cap, D)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    h = jnp.einsum("becd,edf->becf", buf, p["w_in"])
+    if mlp in ("swiglu", "geglu"):
+        g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+        act = jax.nn.silu if mlp == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("becf,efd->becd", h, p["w_out"])             # (B,E,C,D)
+    y = constrain(y, "batch", "expert", None, None)
+
+    # Combine: weighted scatter-add back to token positions, per row.
+    yflat = y.reshape(B, n_experts * cap, D) * slot_gate[..., None].astype(y.dtype)
+
+    def combine_row(dst_idx, vals):
+        return jnp.zeros((S + 1, D), vals.dtype).at[dst_idx].add(vals)[:S]
+
+    out = jax.vmap(combine_row)(slot_src, yflat)
+    return out.astype(x.dtype), jnp.mean(aux)

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(w_r * u_t + b_r)              (recurrence gate)
+    i_t = sigmoid(w_i * u_t + b_i)              (input gate)
+    log a_t = c * r_t * log sigmoid(lam)        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The gates here are per-channel (diagonal) — Griffin's block-diagonal gate
+matrices reduced to their diagonal; the recurrence structure, input
+normalization, and the sqrt(1-a^2) scaling are faithful.  The sequence
+dimension is processed with ``lax.associative_scan`` (h_t = a_t h + b_t is
+associative), giving log-depth parallel prefill/training — the TPU-native
+formulation of a linear recurrence.  Decode carries (h, conv window) state.
+
+Block structure: x -> [gate branch: Linear -> GeLU] *
+                      [rec branch: Linear -> causal depthwise conv(4) -> RG-LRU]
+                 -> Linear out.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import Params, _init_w
+from repro.models.sharding import constrain
+
+C_FACTOR = 8.0
+
+
+def init_rglru_block(key, d_model: int, r_dim: int, conv_width: int, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    # lam init so that a^c is in (0.9, 0.999) — standard LRU init.
+    u = jax.random.uniform(ks[0], (r_dim,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / C_FACTOR) / (1 - u ** (1.0 / C_FACTOR)))
+    return {
+        "w_in": _init_w(ks[1], (d_model, r_dim), dtype),
+        "w_gate_br": _init_w(ks[2], (d_model, r_dim), dtype),
+        "conv_k": _init_w(ks[3], (conv_width, r_dim), dtype, scale=1.0 / math.sqrt(conv_width)),
+        "conv_b": jnp.zeros((r_dim,), dtype),
+        "gate_wr": _init_w(ks[4], (r_dim,), jnp.float32, scale=1.0),
+        "gate_br": jnp.zeros((r_dim,), jnp.float32),
+        "gate_wi": _init_w(ks[5], (r_dim,), jnp.float32, scale=1.0),
+        "gate_bi": jnp.zeros((r_dim,), jnp.float32),
+        "lam": lam,
+        "w_out": _init_w(ks[6], (r_dim, d_model), dtype),
+    }
+
+
+def _depthwise_causal_conv(u, kernel, bias, state=None):
+    """u: (B,S,R); kernel: (W,R).  state: (B,W-1,R) trailing context."""
+    W = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)            # (B, S+W-1, R)
+    out = sum(
+        full[:, i : i + u.shape[1], :] * kernel[i][None, None, :]
+        for i in range(W)
+    )
+    new_state = full[:, -(W - 1):, :]
+    return out + bias[None, None, :], new_state
+
+
+def _rglru_scan(u, p, h0=None):
+    """u: (B,S,R) -> (B,S,R); associative scan over S."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["gate_wr"] + p["gate_br"])
+    i = jax.nn.sigmoid(uf * p["gate_wi"] + p["gate_bi"])
+    log_a = C_FACTOR * r * jax.nn.log_sigmoid(p["lam"])
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0.
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None, :], b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(u.dtype)
+
+
+def apply_rglru_block(
+    p: Params,
+    x: jnp.ndarray,                       # (B,S,D)
+    state: Params | None = None,          # {"h": (B,R), "conv": (B,W-1,R)}
+) -> tuple[jnp.ndarray, Params | None]:
+    gate = jax.nn.gelu(x @ p["w_gate_br"])
+    u = x @ p["w_in"]
+    u = constrain(u, "batch", None, "model")
+    u, conv_state = _depthwise_causal_conv(
+        u, p["conv_k"], p["conv_b"], None if state is None else state["conv"]
+    )
+    h = _rglru_scan(u, p, None if state is None else state["h"])
+    y = (h * gate) @ p["w_out"]
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1, :], "conv": conv_state}
+    return y, new_state
+
+
+def init_rglru_state(batch: int, r_dim: int, conv_width: int, dtype) -> Params:
+    return {
+        "h": jnp.zeros((batch, r_dim), dtype),
+        "conv": jnp.zeros((batch, conv_width - 1, r_dim), dtype),
+    }

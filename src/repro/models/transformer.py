@@ -1,0 +1,386 @@
+"""Unified model assembly for all assigned architectures.
+
+One code path builds dense decoders (phi4/deepseek/starcoder2/gemma, and
+the InternVL2 backbone), MoE decoders (mixtral/moonshot), the
+RecurrentGemma hybrid (RG-LRU + local attention, 1:2), RWKV6, and the
+Whisper encoder-decoder.
+
+Layers are **group-stacked and scanned**: the repeating block pattern
+(e.g. ("rglru","rglru","local")) forms a group; parameters are stacked
+over groups and the forward is a ``lax.scan`` over the stack, so the HLO
+is one group body regardless of depth (critical for 62-80 layer dry-run
+compiles).  A non-divisible remainder (RecurrentGemma's 26 = 8x3 + 2) is
+a second, single-group stack.
+
+The same ``apply_model`` serves training (no cache), prefill (cache +
+cache_pos=0) and decode (S=1, cache_pos=t): the three dry-run shape modes
+lower through one implementation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RW
+from repro.models.sharding import constrain
+
+Params = dict[str, Any]
+
+
+def effective_pattern(cfg: ArchConfig) -> tuple[str, ...]:
+    if cfg.kind == "rwkv":
+        return ("rwkv",)
+    return cfg.block_pattern
+
+
+def _split_groups(cfg: ArchConfig) -> tuple[int, tuple[str, ...]]:
+    pat = effective_pattern(cfg)
+    n_groups = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - n_groups * len(pat)
+    return n_groups, pat[:rem]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, kind: str, cross: bool) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = cfg.pdtype
+    p: Params = {"norm1": L.init_norm(cfg.norm, cfg.d_model, dt)}
+    if kind in ("attn", "local"):
+        p["attn"] = L.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dt
+        )
+    elif kind == "rglru":
+        p["rglru"] = RG.init_rglru_block(
+            ks[0], cfg.d_model, cfg.lru_dim or cfg.d_model, cfg.conv_width, dt
+        )
+    elif kind == "rwkv":
+        p["time"] = RW.init_rwkv_time_mix(ks[0], cfg.d_model, cfg.rwkv_head_dim, dt)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_x"] = L.init_norm(cfg.norm, cfg.d_model, dt)
+        p["cross"] = L.init_attention(
+            ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dt
+        )
+    p["norm2"] = L.init_norm(cfg.norm, cfg.d_model, dt)
+    if kind == "rwkv":
+        p["chan"] = RW.init_rwkv_channel_mix(ks[2], cfg.d_model, cfg.d_ff, dt)
+    elif cfg.is_moe:
+        p["moe"] = MOE.init_moe(
+            ks[2], cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.mlp, dt
+        )
+    else:
+        p["mlp"] = L.init_mlp(ks[2], cfg.mlp, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def _init_block_cache(cfg: ArchConfig, kind: str, cross: bool,
+                      batch: int, max_len: int) -> Params:
+    dt = cfg.cdtype
+    c: Params = {}
+    if kind in ("attn", "local"):
+        # Window layers keep a full-length cache and rely on the window
+        # mask; a ring buffer (cache = window length) is a memory-term
+        # optimization evaluated in EXPERIMENTS.md §Perf.
+        c["kv"] = L.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dt)
+    elif kind == "rglru":
+        c["rg"] = RG.init_rglru_state(
+            batch, cfg.lru_dim or cfg.d_model, cfg.conv_width, jnp.float32
+        )
+    elif kind == "rwkv":
+        c["rw"] = RW.init_rwkv_states(batch, cfg.d_model, cfg.rwkv_head_dim, dt)
+    if cross:
+        c["ck"] = jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt)
+        c["cv"] = jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt)
+    return c
+
+
+def _apply_block(
+    p: Params,
+    cfg: ArchConfig,
+    kind: str,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Params],
+    cache_pos,
+    memory: Optional[jnp.ndarray],
+    causal: bool,
+) -> tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Params = {}
+    h = L.apply_norm(cfg.norm, p["norm1"], x)
+    if kind in ("attn", "local"):
+        window = None
+        if kind == "local":
+            window = cfg.local_window
+        elif cfg.sliding_window:
+            window = cfg.sliding_window
+        out, kv = L.attention(
+            p["attn"], h,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            positions=positions, rope_theta=cfg.rope_theta if cfg.kind != "encdec" else None,
+            causal=causal, window=window,
+            cache=None if cache is None else cache["kv"],
+            cache_pos=cache_pos,
+            impl=cfg.attn_impl, q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+        )
+        if cache is not None:
+            new_cache["kv"] = kv
+    elif kind == "rglru":
+        out, rg = RG.apply_rglru_block(
+            p["rglru"], h, None if cache is None else cache["rg"]
+        )
+        if cache is not None:
+            new_cache["rg"] = rg
+    elif kind == "rwkv":
+        out, rw_t = RW.apply_rwkv_time_mix(
+            p["time"], h, cfg.rwkv_head_dim,
+            None if cache is None else cache["rw"]["time"],
+        )
+        if cache is not None:
+            new_cache["rw"] = {"time": rw_t}
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if "cross" in p:
+        hx = L.apply_norm(cfg.norm, p["norm_x"], x)
+        if memory is not None:  # prefill / training: compute & cache cross-KV
+            B, T = memory.shape[0], memory.shape[1]
+            ck = (memory @ p["cross"]["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+            cv = (memory @ p["cross"]["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+        else:
+            ck, cv = cache["ck"], cache["cv"]
+        out, _ = L.attention(
+            p["cross"], hx,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            positions=positions, rope_theta=None, causal=False,
+            kv_override=(ck, cv),
+            impl=cfg.attn_impl, q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+        )
+        if cache is not None:
+            new_cache["ck"] = ck.astype(cache["ck"].dtype)
+            new_cache["cv"] = cv.astype(cache["cv"].dtype)
+        x = x + out
+
+    h = L.apply_norm(cfg.norm, p["norm2"], x)
+    if kind == "rwkv":
+        out, rw_c = RW.apply_rwkv_channel_mix(
+            p["chan"], h, None if cache is None else cache["rw"]["chan"]
+        )
+        if cache is not None:
+            new_cache["rw"]["chan"] = rw_c
+    elif cfg.is_moe:
+        out, aux = MOE.apply_moe(
+            p["moe"], h,
+            n_experts=cfg.n_experts, topk=cfg.topk_experts,
+            capacity_factor=cfg.capacity_factor, mlp=cfg.mlp,
+        )
+    else:
+        out = L.apply_mlp(cfg.mlp, p["mlp"], h)
+    x = x + out
+    x = constrain(x, "batch", None, None)
+    return x, (new_cache if cache is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    n_groups, rem_pat = _split_groups(cfg)
+    pat = effective_pattern(cfg)
+    cross = cfg.kind == "encdec"
+
+    def init_group(k):
+        gks = jax.random.split(k, len(pat))
+        return {
+            f"b{i}": _init_block(gks[i], cfg, kind, cross)
+            for i, kind in enumerate(pat)
+        }
+
+    p: Params = {
+        "emb": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "groups": jax.vmap(init_group)(jax.random.split(ks[1], n_groups)),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, cfg.pdtype),
+    }
+    if rem_pat:
+        gks = jax.random.split(ks[2], len(rem_pat))
+        p["rem"] = {
+            f"b{i}": _init_block(gks[i], cfg, kind, cross)
+            for i, kind in enumerate(rem_pat)
+        }
+    if not cfg.tie_embeddings:
+        p["head"] = L.init_head(ks[3], cfg.d_model, cfg.vocab, cfg.pdtype)
+    if cfg.kind == "encdec":
+        def init_enc_layer(k):
+            return _init_block(k, cfg, "attn", cross=False)
+        p["encoder"] = {
+            "layers": jax.vmap(init_enc_layer)(
+                jax.random.split(ks[4], cfg.encoder_layers)
+            ),
+            "final_norm": L.init_norm(cfg.norm, cfg.d_model, cfg.pdtype),
+        }
+    return p
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    n_groups, rem_pat = _split_groups(cfg)
+    pat = effective_pattern(cfg)
+    cross = cfg.kind == "encdec"
+
+    def group_cache(_):
+        return {
+            f"b{i}": _init_block_cache(cfg, kind, cross, batch, max_len)
+            for i, kind in enumerate(pat)
+        }
+
+    c: Params = {"groups": jax.vmap(group_cache)(jnp.arange(n_groups))}
+    if rem_pat:
+        c["rem"] = {
+            f"b{i}": _init_block_cache(cfg, kind, cross, batch, max_len)
+            for i, kind in enumerate(rem_pat)
+        }
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _sinusoidal(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _run_encoder(p: Params, cfg: ArchConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x = frames.astype(cfg.cdtype) + _sinusoidal(pos, cfg.d_model).astype(cfg.cdtype)
+
+    def body(x, lp):
+        x, _, _ = _apply_block(lp, cfg, "attn", x, pos, None, None, None, causal=False)
+        return x, None
+
+    x, _ = lax.scan(body, x, p["encoder"]["layers"])
+    return L.apply_norm(cfg.norm, p["encoder"]["final_norm"], x)
+
+
+def apply_model(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,                         # (B, S) int32
+    *,
+    prefix_embeds: Optional[jnp.ndarray] = None, # (B, P, D) vision stub
+    encoder_frames: Optional[jnp.ndarray] = None,# (B, T, D) audio stub
+    cache: Optional[Params] = None,
+    cache_pos=None,
+    positions: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """Returns (logits (B,S,V), new_cache, aux_loss)."""
+    B, S = tokens.shape
+    x = L.embed(params["emb"], tokens).astype(cfg.cdtype)
+
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+        S = x.shape[1]
+    if positions is None:
+        base = cache_pos if cache_pos is not None else 0
+        positions = jnp.broadcast_to(
+            base + jnp.arange(S, dtype=jnp.int32)[None], (B, S)
+        )
+    if cfg.kind == "encdec":
+        x = x + _sinusoidal(positions, cfg.d_model).astype(cfg.cdtype)
+    x = constrain(x, "batch", None, None)
+
+    memory = None
+    if cfg.kind == "encdec":
+        if encoder_frames is not None:
+            memory = _run_encoder(params, cfg, encoder_frames)
+        # else: decode step — cross-KV comes from the cache.
+
+    n_groups, rem_pat = _split_groups(cfg)
+    pat = effective_pattern(cfg)
+
+    def run_group(x, aux, gp, gc):
+        new_gc = {}
+        for i, kind in enumerate(pat):
+            x, nc, a = _apply_block(
+                gp[f"b{i}"], cfg, kind, x, positions,
+                None if gc is None else gc[f"b{i}"],
+                cache_pos, memory, causal=True,
+            )
+            if nc is not None:
+                new_gc[f"b{i}"] = nc
+            aux = aux + a
+        return x, aux, new_gc
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cache is None:
+        def group_fn(x, aux, gp):
+            x, aux, _ = run_group(x, aux, gp, None)
+            return x, aux
+
+        if cfg.remat_layers:
+            policy = (
+                jax.checkpoint_policies.nothing_saveable
+                if cfg.remat_policy == "nothing"
+                else jax.checkpoint_policies.dots_saveable
+            )
+            group_fn = jax.checkpoint(group_fn, policy=policy)
+
+        def group_body(carry, gp):
+            x, aux = carry
+            x, aux = group_fn(x, aux, gp)
+            return (x, aux), None
+
+        (x, aux), new_groups_cache = lax.scan(
+            group_body, (x, aux0), params["groups"]
+        )
+    else:
+        def group_body_c(carry, xs):
+            x, aux = carry
+            gp, gc = xs
+            x, aux, new_gc = run_group(x, aux, gp, gc)
+            return (x, aux), new_gc
+
+        (x, aux), new_groups_cache = lax.scan(
+            group_body_c, (x, aux0), (params["groups"], cache["groups"])
+        )
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"groups": new_groups_cache}
+    if rem_pat:
+        rc = None if cache is None else cache["rem"]
+        new_rc = {}
+        for i, kind in enumerate(rem_pat):
+            x, nc, a = _apply_block(
+                params["rem"][f"b{i}"], cfg, kind, x, positions,
+                None if rc is None else rc[f"b{i}"],
+                cache_pos, memory, causal=True,
+            )
+            if nc is not None:
+                new_rc[f"b{i}"] = nc
+            aux = aux + a
+        if cache is not None:
+            new_cache["rem"] = new_rc
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.lm_logits(params.get("head"), params["emb"], x)
+    return logits.astype(jnp.float32), new_cache, aux

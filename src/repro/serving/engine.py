@@ -1,0 +1,82 @@
+"""Batched serving engine: request queue -> prefill -> decode loop.
+
+Host-side scheduler in the ODYS master role: it admits requests into
+fixed-size batches (the engine's unit of broadcast), runs prefill once and
+then the decode loop, with greedy sampling through the distributed
+vocab-top-k router.  Designed so the same object drives a reduced config
+on CPU (examples/serve_lm.py) and the full mesh on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import decode_step, init_model, make_inputs, prefill
+from repro.serving.router import greedy_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, *, batch_size: int, max_len: int,
+                 rng_seed: int = 0, mesh=None, params=None):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.mesh = mesh
+        self.params = (
+            params if params is not None
+            else init_model(jax.random.PRNGKey(rng_seed), cfg)
+        )
+        self.queue: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _form_batch(self) -> list[Request]:
+        batch = self.queue[: self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        while len(batch) < self.batch_size:   # pad with a dummy clone
+            batch.append(Request(rid=-1, prompt=batch[0].prompt,
+                                 max_new_tokens=batch[0].max_new_tokens))
+        return batch
+
+    def step_batch(self) -> list[Request]:
+        """Serve one full batch to completion (prefill + decode loop)."""
+        batch = self._form_batch()
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((self.batch_size, plen), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        inputs = {"tokens": jnp.asarray(toks)}
+        if self.cfg.kind == "encdec":
+            inputs["encoder_frames"] = jnp.zeros(
+                (self.batch_size, self.cfg.encoder_seq, self.cfg.d_model),
+                self.cfg.cdtype,
+            )
+        logits, cache = prefill(self.params, self.cfg, inputs, self.max_len)
+        pos = plen
+        n_new = max(r.max_new_tokens for r in batch)
+        tok = greedy_token(logits, mesh=self.mesh)
+        for r, t in zip(batch, np.asarray(tok)):
+            r.output.append(int(t))
+        for _ in range(n_new - 1):
+            logits, cache = decode_step(
+                self.params, self.cfg, tok[:, None], cache, jnp.int32(pos)
+            )
+            tok = greedy_token(logits, mesh=self.mesh)
+            pos += 1
+            for r, t in zip(batch, np.asarray(tok)):
+                r.output.append(int(t))
+        return [r for r in batch if r.rid >= 0]

@@ -1,0 +1,86 @@
+"""ODYS-style distributed top-k over a vocab-sharded LM head.
+
+DESIGN.md §3.1: greedy/top-k decoding with the LM head sharded over the
+``model`` axis *is* the ODYS master/slave merge problem — each shard owns
+a vocabulary slice ("document partition"), computes its local top-k
+("slave top-k"), and a log-depth tournament merges candidates ("master
+loser tree").  The naive alternative all-gathers the full (B, V) logits
+(V up to 256k for gemma): the ODYS formulation moves k candidates per
+shard instead — the collective-term optimization measured in §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+
+def _merge_scored(av, ai, bv, bi, k: int):
+    """Merge two descending (B,k) scored candidate sets -> best k."""
+    v = jnp.concatenate([av, bv], axis=-1)
+    i = jnp.concatenate([ai, bi], axis=-1)
+    topv, sel = lax.top_k(v, k)
+    topi = jnp.take_along_axis(i, sel, axis=-1)
+    return topv, topi
+
+
+def tournament_topk_scored(values, indices, axis: str, n: int, k: int):
+    """Butterfly merge of per-shard (B,k) candidates over mesh axis."""
+    assert n & (n - 1) == 0
+    d = 1
+    while d < n:
+        perm = [(i, i ^ d) for i in range(n)]
+        ov = lax.ppermute(values, axis, perm)
+        oi = lax.ppermute(indices, axis, perm)
+        values, indices = _merge_scored(values, indices, ov, oi, k)
+        d *= 2
+    return values, indices
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "k", "axis", "strategy", "batch_axes")
+)
+def distributed_vocab_topk(
+    logits: jnp.ndarray,       # (B, V), sharded (or shardable) over axis
+    *,
+    mesh: Mesh,
+    k: int = 1,
+    axis: str = "model",
+    strategy: str = "tournament",   # tournament | allgather
+    batch_axes=None,                # e.g. ("data",) when B is sharded too
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Global top-k (values, token_ids) of vocab-sharded logits."""
+    n = mesh.shape[axis]
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=P(batch_axes, axis),
+        out_specs=(P(batch_axes, None), P(batch_axes, None)),
+        check_vma=False,
+    )
+    def run(local):                       # (B, V/n)
+        shard = lax.axis_index(axis)
+        v_local = local.shape[-1]
+        lv, li = lax.top_k(local, k)      # local top-k ("slave" side)
+        gi = li + shard * v_local         # local -> global token ids
+        if strategy == "tournament":
+            return tournament_topk_scored(lv, gi, axis, n, k)
+        allv = lax.all_gather(lv, axis, axis=-1, tiled=True)   # (B, n*k)
+        alli = lax.all_gather(gi, axis, axis=-1, tiled=True)
+        topv, sel = lax.top_k(allv, k)
+        return topv, jnp.take_along_axis(alli, sel, axis=-1)
+
+    return run(logits)
+
+
+def greedy_token(logits, *, mesh: Mesh | None = None, axis="model"):
+    """argmax next token; distributed when a mesh is active."""
+    if mesh is None or axis not in mesh.axis_names:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    _, idx = distributed_vocab_topk(logits, mesh=mesh, k=1, axis=axis)
+    return idx[..., 0].astype(jnp.int32)

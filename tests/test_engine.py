@@ -1,0 +1,73 @@
+"""Query engine vs brute-force oracle, all strategies and query classes."""
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    brute_force_topk,
+    make_query_batch,
+    query_topk,
+    single_keyword_topk,
+)
+from repro.core.index import INVALID_DOC, build_index
+from repro.data.corpus import CorpusConfig, generate_corpus
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=600, vocab_size=250, mean_doc_len=30, n_sites=12, seed=11)
+    )
+    idx, meta = build_index(corpus)
+    return corpus, idx, meta
+
+
+QUERIES = [
+    ([7], None),            # single keyword
+    ([3, 9], None),         # two-keyword join
+    ([1, 4, 12], None),     # three-keyword join
+    ([2], 3),               # limited search, single keyword
+    ([5, 8], 1),            # limited search, join
+    ([240], None),          # rare keyword (short posting list)
+]
+
+
+@pytest.mark.parametrize("strategy", ["embed", "gather", "site_term"])
+@pytest.mark.parametrize("k", [5, 10, 50])
+def test_engine_matches_bruteforce(setup, strategy, k):
+    corpus, idx, meta = setup
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta, strategy=strategy)
+    docs, hits = query_topk(idx, qb, k=k, window=1024, attr_strategy=strategy)
+    truth = brute_force_topk(corpus, QUERIES, k)
+    for i, want in enumerate(truth):
+        got = [int(d) for d in np.asarray(docs[i]) if d != INVALID_DOC]
+        assert got == want, (strategy, k, i)
+
+
+def test_results_rank_ordered(setup):
+    _, idx, meta = setup
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    docs, _ = query_topk(idx, qb, k=10, window=1024)
+    d = np.asarray(docs)
+    for row in d:
+        real = row[row != INVALID_DOC]
+        assert np.all(np.diff(real) > 0), "results must be rank (docID) ordered"
+
+
+def test_single_keyword_prefix_read(setup):
+    corpus, idx, meta = setup
+    terms = np.array([7, 3, 240], dtype=np.int32)
+    import jax.numpy as jnp
+
+    got = np.asarray(single_keyword_topk(idx, jnp.asarray(terms), k=10))
+    truth = brute_force_topk(corpus, [([int(t)], None) for t in terms], 10)
+    for i, want in enumerate(truth):
+        g = [int(x) for x in got[i] if x != INVALID_DOC]
+        assert g == want
+
+
+def test_hits_count(setup):
+    corpus, idx, meta = setup
+    qb = make_query_batch([([7], None)], t_max=4, meta=meta)
+    _, hits = query_topk(idx, qb, k=10, window=2048)
+    want = len(brute_force_topk(corpus, [([7], None)], corpus.n_docs)[0])
+    assert int(hits[0]) == want

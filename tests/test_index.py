@@ -1,0 +1,91 @@
+"""Index build invariants and partitioning round-trips."""
+import numpy as np
+import pytest
+
+from repro.core.index import (
+    BLOCK,
+    INVALID_DOC,
+    build_index,
+    build_sharded_index,
+    partition_corpus,
+)
+from repro.data.corpus import CorpusConfig, generate_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_corpus(
+        CorpusConfig(n_docs=800, vocab_size=300, mean_doc_len=25, n_sites=15, seed=3)
+    )
+
+
+def test_corpus_terms_unique_and_sorted(corpus):
+    for d in range(0, corpus.n_docs, 97):
+        ts = corpus.terms_of(d)
+        assert np.all(np.diff(ts) > 0), "per-doc terms must be unique+sorted"
+
+
+def test_index_structure(corpus):
+    idx, meta = build_index(corpus)
+    offsets = np.asarray(idx.offsets)
+    lengths = np.asarray(idx.lengths)
+    postings = np.asarray(idx.postings)
+
+    assert np.all(offsets % BLOCK == 0), "lists must be BLOCK-aligned"
+    assert postings.shape[0] % BLOCK == 0
+    # each list ascending, padding INVALID at tail
+    for t in range(0, meta.n_terms, 41):
+        seg = postings[offsets[t]: offsets[t] + lengths[t]]
+        assert np.all(np.diff(seg) > 0), f"term {t} not strictly ascending"
+        pad = postings[offsets[t] + lengths[t]:
+                       offsets[t] + ((lengths[t] + BLOCK - 1) // BLOCK) * BLOCK]
+        assert np.all(pad == INVALID_DOC)
+
+
+def test_attribute_embedding_matches_doc_site(corpus):
+    idx, meta = build_index(corpus)
+    offsets = np.asarray(idx.offsets)
+    lengths = np.asarray(idx.lengths)
+    postings = np.asarray(idx.postings)
+    attrs = np.asarray(idx.attrs)
+    for t in range(0, meta.vocab_size, 37):
+        o, n = offsets[t], lengths[t]
+        docs, sites = postings[o:o + n], attrs[o:o + n]
+        np.testing.assert_array_equal(sites, corpus.doc_site[docs])
+
+
+def test_skip_table_is_block_max(corpus):
+    idx, _ = build_index(corpus)
+    postings = np.asarray(idx.postings)
+    bm = np.asarray(idx.block_max)
+    np.testing.assert_array_equal(bm, postings.reshape(-1, BLOCK).max(axis=1))
+
+
+def test_site_terms_posting_lists(corpus):
+    idx, meta = build_index(corpus, include_site_terms=True)
+    offsets = np.asarray(idx.offsets)
+    lengths = np.asarray(idx.lengths)
+    postings = np.asarray(idx.postings)
+    for site in range(0, corpus.n_sites, 4):
+        t = meta.vocab_size + site
+        o, n = offsets[t], lengths[t]
+        want = np.flatnonzero(corpus.doc_site == site)
+        np.testing.assert_array_equal(postings[o:o + n], want)
+
+
+def test_partition_striping_invertible(corpus):
+    ns = 4
+    parts = partition_corpus(corpus, ns)
+    assert sum(p.n_docs for p in parts) == corpus.n_docs
+    for s, p in enumerate(parts):
+        for local in range(0, p.n_docs, 53):
+            g = local * ns + s
+            np.testing.assert_array_equal(p.terms_of(local), corpus.terms_of(g))
+            assert p.doc_site[local] == corpus.doc_site[g]
+
+
+def test_sharded_index_shapes(corpus):
+    sharded, meta = build_sharded_index(corpus, 4)
+    assert sharded.postings.shape[0] == 4
+    assert sharded.offsets.shape == (4, meta.n_terms)
+    assert sharded.postings.shape[1] % BLOCK == 0

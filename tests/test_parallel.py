@@ -1,0 +1,19 @@
+"""Distributed engine selftest (needs multiple fake devices -> subprocess)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_distributed_engine_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch._parallel_selftest"],
+        capture_output=True, text=True, env=env, timeout=570,
+    )
+    assert "PARALLEL_SELFTEST_PASS" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,164 @@
+"""Hybrid performance model: M/D/1 queues, Formulas (1)-(18), paper claims."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perfmodel import (
+    MS,
+    ClusterConfig,
+    OdysPerfModel,
+    QUERY_MIX_DEFAULT,
+    SINGLE_10_ONLY,
+    QueryMix,
+    estimation_error,
+    md1_queue_length,
+    nodes_for_service,
+    per_sec,
+    sojourn,
+)
+from repro.core.slave_max import (
+    CalibratedSlaveModel,
+    calibrate,
+    expected_max_factor,
+    partitioning_method,
+)
+
+MODEL = OdysPerfModel()
+C5 = ClusterConfig(nm=1, ncm=4, ns=5, nh=1)
+C300 = ClusterConfig(nm=4, ncm=4, ns=300, nh=11)
+
+
+# ---------------------------------------------------------------- M/D/1 ----
+def test_md1_zero_load():
+    assert md1_queue_length(0.0, 0.01) == 0.0
+    assert sojourn(0.0, 0.01) == 0.01
+
+
+def test_md1_diverges_at_saturation():
+    st_ = 1e-3
+    assert math.isinf(md1_queue_length(1000.0, st_))
+    assert md1_queue_length(999.0, st_) > md1_queue_length(500.0, st_)
+
+
+@settings(max_examples=30, deadline=None)
+@given(lam=st.floats(0.1, 900.0), srv=st.floats(1e-5, 1e-3))
+def test_md1_sojourn_at_least_service(lam, srv):
+    if lam * srv < 0.99:
+        assert sojourn(lam, srv) >= srv * 0.999
+
+
+# ------------------------------------------------ Formulas (4)-(8), weights
+def test_master_service_time_components():
+    m = MODEL.master
+    # Formula (7): loser-tree merge grows with k and log2(ns)
+    assert m.T_merge(1000, 300) > m.T_merge(10, 300)
+    assert m.T_merge(10, 300) > m.T_merge(10, 5)
+    # Formula (8): context switches linear in ns
+    t5 = m.T_context_switch(10, 5)
+    t300 = m.T_context_switch(10, 300)
+    assert abs((t300 - t5) - 295 * m.ncs_per_slave[10] * m.t_per_context_switch) < 1e-12
+    # Formula (4) at the paper's five-node point (hand-computed: 3.118 ms)
+    assert abs(m.ST_master(10, 5) - 3.11776 * MS) < 1e-6
+    # alpha split (Formulas (5)-(6))
+    assert abs(
+        m.ST_master_cpu(10, 5) + m.ST_master_membus(10, 5) - m.ST_master(10, 5)
+    ) < 1e-12
+
+
+def test_weights_are_unit_normalized():
+    assert MODEL.master.w_master(10, 300) == 1.0
+    assert MODEL.network.w_network(10) == 1.0
+    assert MODEL.network.w_network(1000) == pytest.approx(0.318 / 0.129)
+
+
+def test_query_mix_validates():
+    with pytest.raises(AssertionError):
+        QueryMix({("single", 10): 0.5})
+
+
+# --------------------------------------------------------- paper headline --
+def test_headline_node_arithmetic():
+    """§5.2.4: 143 sets of 304 nodes = 43,472 nodes for 1B queries/day."""
+    sets, nodes = nodes_for_service(1e9, 7e6, C300)
+    assert (sets, nodes) == (143, 43472)
+    sets2, nodes2 = nodes_for_service(1e9, 3.5e6, C300)
+    assert (sets2, nodes2) == (286, 86944)
+
+
+def test_master_network_time_is_minor_share():
+    """§4: the slave dominates; master+network stays ~10% at 81 q/s."""
+    t = MODEL.master_network_time(81.0, C300, QUERY_MIX_DEFAULT, 10)
+    assert 0.005 < t < 0.06
+
+
+def test_five_node_stable_at_paper_load():
+    """Fig 11(a): 5-node ODYS stably processes 266 q/s (23M q/day)."""
+    assert MODEL.max_stable_load(C5, SINGLE_10_ONLY) > 266.0
+
+
+def test_total_response_reproduces_fig13_endpoints():
+    """Calibrated to Fig 13: 211 ms @ 81 q/s and 162 ms @ 40.5 q/s."""
+    targets = []
+    for lam, total in ((81.0, 0.211), (40.5, 0.162)):
+        mn = sum(
+            r * MODEL.master_network_time(lam, C300, QUERY_MIX_DEFAULT, k)
+            for (s, k), r in QUERY_MIX_DEFAULT.qmr.items()
+        )
+        targets.append((lam, total - mn))
+    slave = calibrate(targets, ns=300)
+    for (lam, total) in ((81.0, 0.211), (40.5, 0.162)):
+        est = MODEL.total_response_time(
+            lam, C300, QUERY_MIX_DEFAULT,
+            lambda sct, k, lam_, ns: slave.slave_max_time("single", 10, lam_, ns),
+        )
+        assert estimation_error(est, total) < 0.02, (lam, est)
+
+
+# --------------------------------------------------- partitioning method --
+def test_partitioning_method_exact():
+    times = np.arange(1, 13, dtype=np.float64).reshape(1, 12)
+    # ns=4: segments (1..4),(5..8),(9..12) -> maxima 4,8,12 -> mean 8
+    assert partitioning_method(times, 4)[0] == 8.0
+    # ns=1: every sample its own segment -> plain mean
+    assert partitioning_method(times, 1)[0] == times.mean()
+
+
+def test_partitioning_method_monotone_in_ns():
+    rng = np.random.default_rng(0)
+    times = rng.lognormal(0, 0.4, size=(5, 600))
+    prev = 0.0
+    for ns in (1, 5, 20, 100, 300):
+        cur = partitioning_method(times, ns).mean()
+        assert cur >= prev
+        prev = cur
+
+
+def test_partitioning_method_requires_enough_samples():
+    with pytest.raises(ValueError):
+        partitioning_method(np.ones((1, 10)), 11)
+
+
+def test_slave_max_converges_like_fig12():
+    """Fig 12: slave max converges to <2x the small-ns (ns=5) value
+    instead of diverging ("increases up to 1.5~2 times of the minimum")."""
+    f5 = expected_max_factor(0.25, 5)
+    f300 = expected_max_factor(0.25, 300)
+    assert 1.0 < f5 < f300
+    assert 1.5 < f300 / f5 < 2.0
+    assert f300 / expected_max_factor(0.25, 200) < 1.05  # flattening
+
+
+def test_calibration_hits_targets():
+    model = calibrate([(81.0, 0.18), (40.5, 0.14)], ns=300)
+    assert model.slave_max_time("single", 10, 81.0, 300) == pytest.approx(0.18, rel=1e-3)
+    assert model.slave_max_time("single", 10, 40.5, 300) == pytest.approx(0.14, rel=1e-3)
+
+
+def test_sampled_slave_times_match_partitioning_estimate():
+    model = CalibratedSlaveModel(s_base=0.05, lam_cap=200.0, sigma=0.25)
+    samples = model.sample("single", 10, 81.0, shape=(40, 1500), seed=1)
+    est = partitioning_method(samples, 300).mean()
+    closed = model.slave_max_time("single", 10, 81.0, 300)
+    assert abs(est - closed) / closed < 0.1

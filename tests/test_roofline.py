@@ -1,0 +1,90 @@
+"""Loop-aware HLO cost model vs hand-computed ground truth."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.hlo_cost import analyze, parse_computations
+from repro.roofline.analysis import model_flops_for
+from repro.configs import SHAPES_BY_NAME, get_config
+
+
+def _compile(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile()
+
+
+def test_single_matmul_flops():
+    n = 512
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, a)
+    cost = analyze(c.as_text(), default_group=1)
+    assert cost.flops == pytest.approx(2 * n**3, rel=0.01)
+
+
+def test_scan_trip_count_multiplies():
+    n, t = 256, 8
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    bs = jax.ShapeDtypeStruct((t, n, n), jnp.float32)
+
+    def f(x, ws):
+        def body(h, w):
+            return h @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    c = _compile(f, a, bs)
+    cost = analyze(c.as_text(), default_group=1)
+    assert cost.flops == pytest.approx(t * 2 * n**3, rel=0.02)
+
+
+def test_nested_scan_trip_counts():
+    n, t_in, t_out = 128, 4, 3
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    bs = jax.ShapeDtypeStruct((t_in, n, n), jnp.float32)
+
+    def f(x, ws):
+        def outer(h, _):
+            def inner(g, w):
+                return g @ w, None
+            g, _ = jax.lax.scan(inner, h, ws)
+            return g, None
+        y, _ = jax.lax.scan(outer, x, None, length=t_out)
+        return y
+
+    c = _compile(f, a, bs)
+    cost = analyze(c.as_text(), default_group=1)
+    assert cost.flops == pytest.approx(t_out * t_in * 2 * n**3, rel=0.02)
+
+
+def test_bytes_scale_with_loop():
+    n, t = 512, 16
+    xs = jax.ShapeDtypeStruct((t, n), jnp.float32)
+
+    def f(xs):
+        def body(acc, x):
+            return acc + 2.0 * x, None
+        acc, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), xs)
+        return acc
+
+    c = _compile(f, xs)
+    cost = analyze(c.as_text(), default_group=1)
+    # each trip reads+writes O(n) floats; total must scale ~t, not O(1)
+    assert cost.hbm_bytes > t * n * 4
+    assert cost.hbm_bytes < 20 * t * n * 4
+
+
+def test_parse_computations_finds_entry():
+    c = _compile(lambda x: x * 2.0, jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    comps, entry = parse_computations(c.as_text())
+    assert entry is not None and entry in comps
+
+
+def test_model_flops_formula():
+    cfg = get_config("deepseek-coder-33b")
+    sh = SHAPES_BY_NAME["train_4k"]
+    f = model_flops_for(cfg, sh)
+    # 6 * ~33B * (256*4096) within 20%
+    assert f == pytest.approx(6 * 33e9 * 256 * 4096, rel=0.2)
+    moe = get_config("mixtral-8x7b")
+    active = moe.n_active_params()
+    assert 11e9 < active < 15e9  # ~12.9B active

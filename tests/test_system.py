@@ -1,0 +1,41 @@
+"""End-to-end behaviour tests for the reproduced system."""
+import numpy as np
+
+from repro.core.engine import brute_force_topk, make_query_batch, query_topk
+from repro.core.index import INVALID_DOC, build_index
+from repro.core.perfmodel import (
+    ClusterConfig, OdysPerfModel, QUERY_MIX_DEFAULT, nodes_for_service,
+)
+from repro.core.slave_max import calibrate
+from repro.data.corpus import CorpusConfig, generate_corpus
+
+
+def test_end_to_end_search_pipeline():
+    """Corpus -> index -> all three query classes -> oracle-exact results."""
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=1200, vocab_size=400, mean_doc_len=35, n_sites=20)
+    )
+    index, meta = build_index(corpus)
+    queries = [([11], None), ([4, 17], None), ([2], 6)]
+    batch = make_query_batch(queries, meta=meta)
+    docs, _ = query_topk(index, batch, k=10, window=2048)
+    truth = brute_force_topk(corpus, queries, 10)
+    for i in range(len(queries)):
+        got = [int(d) for d in np.asarray(docs[i]) if d != INVALID_DOC]
+        assert got == truth[i]
+
+
+def test_end_to_end_capacity_planning():
+    """The full §5.2.4 pipeline: calibrate -> project -> headline numbers."""
+    model = OdysPerfModel()
+    c = ClusterConfig(nm=4, ncm=4, ns=300, nh=11)
+    mn = {lam: sum(r * model.master_network_time(lam, c, QUERY_MIX_DEFAULT, k)
+                   for (_, k), r in QUERY_MIX_DEFAULT.qmr.items())
+          for lam in (81.0, 40.5)}
+    slave = calibrate(
+        [(81.0, 0.211 - mn[81.0]), (40.5, 0.162 - mn[40.5])], ns=300)
+    total = model.total_response_time(
+        81.0, c, QUERY_MIX_DEFAULT,
+        lambda sct, k, lam, ns: slave.slave_max_time("single", 10, lam, ns))
+    assert abs(total - 0.211) / 0.211 < 0.02
+    assert nodes_for_service(1e9, 7e6, c) == (143, 43472)

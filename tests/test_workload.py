@@ -1,0 +1,83 @@
+"""Workload generator + DES simulator invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perfmodel import (
+    ClusterConfig,
+    OdysPerfModel,
+    QUERY_MIX_DEFAULT,
+)
+from repro.core.queries import WorkloadConfig, batch_by_k, generate_workload
+from repro.core.simulate import simulate
+from repro.core.slave_max import CalibratedSlaveModel
+from repro.data.corpus import CorpusConfig, generate_corpus
+from repro.core.index import build_index
+
+
+@pytest.fixture(scope="module")
+def meta():
+    corpus = generate_corpus(CorpusConfig(n_docs=200, vocab_size=100, n_sites=8))
+    _, m = build_index(corpus)
+    return m
+
+
+def test_workload_respects_mix(meta):
+    specs = generate_workload(
+        meta, QUERY_MIX_DEFAULT, WorkloadConfig(n_queries=4000, seed=0)
+    )
+    frac_single = sum(1 for s in specs if s.sct == "single") / len(specs)
+    want = sum(v for (sct, _), v in QUERY_MIX_DEFAULT.qmr.items() if sct == "single")
+    assert abs(frac_single - want) < 0.05
+    assert all(s.site is not None for s in specs if s.sct == "limited")
+    assert all(len(s.terms) == 1 for s in specs if s.sct == "single")
+    assert all(len(s.terms) >= 2 for s in specs if s.sct == "multiple")
+
+
+def test_workload_poisson_arrivals(meta):
+    specs = generate_workload(
+        meta, QUERY_MIX_DEFAULT, WorkloadConfig(n_queries=2000, arrival_rate=50.0)
+    )
+    arr = np.array([s.arrival for s in specs])
+    assert np.all(np.diff(arr) > 0)
+    mean_gap = np.diff(arr).mean()
+    assert abs(mean_gap - 1 / 50.0) / (1 / 50.0) < 0.1
+
+
+def test_batch_by_k_partitions(meta):
+    specs = generate_workload(meta, QUERY_MIX_DEFAULT, WorkloadConfig(n_queries=100))
+    groups = batch_by_k(specs, meta=meta)
+    assert sum(qb.n_queries for qb, _ in groups.values()) == 100
+    assert set(groups) <= {10, 50, 1000}
+
+
+# --------------------------------------------------------------- DES ------
+SLAVE = CalibratedSlaveModel(s_base=0.02, lam_cap=500.0, sigma=0.25)
+C5 = ClusterConfig(nm=1, ncm=4, ns=5, nh=1)
+MODEL = OdysPerfModel()
+
+
+def test_des_response_exceeds_components():
+    sim = simulate(50.0, 400, C5, QUERY_MIX_DEFAULT, MODEL.master,
+                   MODEL.network, SLAVE, seed=0)
+    assert np.all(sim.response > 0)
+    # response >= slave max sojourn (it also includes master+network)
+    assert np.all(sim.response >= sim.slave_sojourn.max(axis=1) - 1e-12)
+
+
+@settings(max_examples=8, deadline=None)
+@given(lam=st.floats(10.0, 150.0), seed=st.integers(0, 99))
+def test_des_load_monotonicity(lam, seed):
+    lo = simulate(lam, 300, C5, QUERY_MIX_DEFAULT, MODEL.master,
+                  MODEL.network, SLAVE, seed=seed)
+    hi = simulate(lam * 1.8, 300, C5, QUERY_MIX_DEFAULT, MODEL.master,
+                  MODEL.network, SLAVE, seed=seed)
+    # heavier load can't make mean response faster (same seeds/noise)
+    assert hi.mean_response >= lo.mean_response * 0.98
+
+
+def test_des_fixed_kinds_override():
+    kinds = [("single", 10)] * 100
+    sim = simulate(20.0, 100, C5, QUERY_MIX_DEFAULT, MODEL.master,
+                   MODEL.network, SLAVE, kinds=kinds)
+    assert sim.kinds == kinds
