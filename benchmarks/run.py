@@ -9,6 +9,7 @@ import time
 import traceback
 
 from benchmarks import (
+    bench_backends,
     bench_engine,
     bench_fig11,
     bench_fig12,
@@ -24,6 +25,7 @@ SUITES = {
     "fig13": bench_fig13.main,      # 300-node projection + 43,472-node headline
     "engine": bench_engine.main,    # measured JAX engine + §2 strategies
     "kernels": bench_kernels.main,  # Pallas kernel microbenches
+    "backends": bench_backends.main,  # jnp vs Pallas engine backend sweep
 }
 
 

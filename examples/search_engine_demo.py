@@ -28,8 +28,8 @@ from repro.launch.elastic import FailoverRouter, rescale          # noqa: E402
 
 def main():
     ns = 4
-    mesh = jax.make_mesh((ns,), ("data",), devices=jax.devices()[:ns],
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    backend = os.environ.get("ODYS_BACKEND", "jnp")  # jnp | pallas
+    mesh = jax.make_mesh((ns,), ("data",), devices=jax.devices()[:ns])
     corpus = generate_corpus(
         CorpusConfig(n_docs=8_000, vocab_size=1_200, mean_doc_len=50, n_sites=40)
     )
@@ -46,12 +46,14 @@ def main():
     for k, (qb, ss) in sorted(groups.items()):
         kk = min(k, 50)  # cap for the demo
         res = distributed_query_topk(
-            sharded, qb, mesh=mesh, ns=ns, k=kk, window=2048, merge="tournament"
+            sharded, qb, mesh=mesh, ns=ns, k=kk, window=2048,
+            merge="tournament", backend=backend,
         )
         jax.block_until_ready(res.docids)
         t0 = time.perf_counter()
         res = distributed_query_topk(
-            sharded, qb, mesh=mesh, ns=ns, k=kk, window=2048, merge="tournament"
+            sharded, qb, mesh=mesh, ns=ns, k=kk, window=2048,
+            merge="tournament", backend=backend,
         )
         jax.block_until_ready(res.docids)
         dt = (time.perf_counter() - t0) / qb.n_queries

@@ -1,0 +1,5 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact command CI and ROADMAP.md specify.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

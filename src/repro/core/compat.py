@@ -1,0 +1,39 @@
+"""JAX version-compatibility shims.
+
+The repo pins JAX 0.4.37, where ``shard_map`` still lives in
+``jax.experimental.shard_map`` and its replication-check kwarg is spelled
+``check_rep``.  Newer JAX exports ``jax.shard_map`` with the kwarg renamed
+to ``check_vma``.  Every ``shard_map`` call site in this repo imports the
+symbol from here so it runs unmodified on either side of the rename.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # JAX >= 0.6: top-level export
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # JAX <= 0.5: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+# The replication/varying-manual-axes check kwarg was renamed
+# check_rep -> check_vma; detect which one the installed JAX takes.
+_CHECK_KWARG = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map_impl).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None,
+              **kwargs):
+    """``jax.shard_map`` with the check kwarg normalized across versions.
+
+    Accepts either spelling (``check_vma`` preferred); omitting both keeps
+    the installed JAX's default.
+    """
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        kwargs[_CHECK_KWARG] = check
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

@@ -132,6 +132,16 @@ def _first_k_by_rank(docids: jnp.ndarray, mask: jnp.ndarray, k: int):
     return out, jnp.sum(mask.astype(jnp.int32))
 
 
+def _driver_slot(index: InvertedIndex, terms, n_terms):
+    """Shortest-list term slot (classic ZigZag driver ordering)."""
+    t_max = terms.shape[0]
+    tt = jnp.clip(terms, 0, index.offsets.shape[0] - 1)
+    lens = jnp.where(
+        (jnp.arange(t_max) < n_terms), index.lengths[tt], jnp.int32(2**31 - 1)
+    )
+    return jnp.argmin(lens)
+
+
 # ---------------------------------------------------------------------------
 # Query execution (single query; vmap'ed for the batch)
 # ---------------------------------------------------------------------------
@@ -150,11 +160,7 @@ def _query_topk_one(
 
     # Drive the join from the *shortest* list (classic ZigZag ordering —
     # the driver bounds the number of candidate postings).
-    tt = jnp.clip(terms, 0, index.offsets.shape[0] - 1)
-    lens = jnp.where(
-        (jnp.arange(t_max) < n_terms), index.lengths[tt], jnp.int32(2**31 - 1)
-    )
-    driver_slot = jnp.argmin(lens)
+    driver_slot = _driver_slot(index, terms, n_terms)
     driver_term = terms[driver_slot]
 
     docs, attrs, valid = term_window(index, driver_term, window)
@@ -183,7 +189,85 @@ def _query_topk_one(
     return _first_k_by_rank(docs, mask, k)
 
 
-@partial(jax.jit, static_argnames=("k", "window", "attr_strategy"))
+# ---------------------------------------------------------------------------
+# Kernel-backed execution (batched Pallas ZigZag join with posting skipping)
+# ---------------------------------------------------------------------------
+
+def _query_windows(
+    index: InvertedIndex,
+    batch: QueryBatch,
+    *,
+    window: int,
+    attr_strategy: str,
+):
+    """Stage the batch for the batched kernel: per-query driver window +
+    attribute stream, all T_MAX other-term windows, and active-slot flags.
+
+    The driver's slot rides along as an *inactive* other-term slot, so the
+    kernel sees a static (Q, T_MAX, window) layout regardless of n_terms.
+    """
+    t_max = batch.terms.shape[1]
+
+    def one(terms, n_terms):
+        driver_slot = _driver_slot(index, terms, n_terms)
+        others = jax.vmap(
+            lambda tm: term_window(index, tm, window)[0]
+        )(terms)  # (T_MAX, window)
+        # The driver window is one of the slot sweeps — select, don't regather.
+        docs = jnp.take(others, driver_slot, axis=0)
+        if attr_strategy in ("embed", "site_term"):
+            # Embedded-attribute stream of the driver window (for site_term
+            # the predicate is disabled downstream; the stream is unused).
+            # The unused docs/valid outputs are dead-code-eliminated by XLA.
+            _, astream, _ = term_window(index, terms[driver_slot], window)
+        elif attr_strategy == "gather":
+            astream = jnp.take(
+                index.doc_site, jnp.clip(docs, 0, None), mode="clip"
+            )
+        else:
+            raise ValueError(attr_strategy)
+        slots = jnp.arange(t_max)
+        active = ((slots < n_terms) & (slots != driver_slot)).astype(jnp.int32)
+        return docs, astream, others, active
+
+    return jax.vmap(one)(batch.terms, batch.n_terms)
+
+
+def _query_topk_batch_pallas(
+    index: InvertedIndex,
+    batch: QueryBatch,
+    *,
+    k: int,
+    window: int,
+    attr_strategy: str,
+    interpret: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One pallas_call for the whole batch: block-skipped ZigZag join with
+    the attribute predicate and validity fused in the same pass, then the
+    same rank-order selection as the jnp backend."""
+    from repro.kernels import ops
+
+    docs, astream, others, active = _query_windows(
+        index, batch, window=window, attr_strategy=attr_strategy
+    )
+    # site_term rewrites the restriction into a join term at build time; the
+    # jnp backend ignores attr_filter under this strategy, so disable the
+    # kernel's fused predicate too (it keys off attr_filter >= 0).
+    attr_filter = (
+        jnp.full_like(batch.attr_filter, NO_ATTR)
+        if attr_strategy == "site_term"
+        else batch.attr_filter
+    )
+    mask = ops.intersect_batched(
+        docs, astream, others, active, attr_filter, interpret=interpret
+    )
+    return jax.vmap(partial(_first_k_by_rank, k=k))(docs, mask > 0)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "window", "attr_strategy", "backend", "interpret"),
+)
 def query_topk(
     index: InvertedIndex,
     batch: QueryBatch,
@@ -191,20 +275,46 @@ def query_topk(
     k: int = 10,
     window: int = 4096,
     attr_strategy: str = "embed",
+    backend: str = "jnp",
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Batched local top-k.  Returns (docids[Q, k], n_hits[Q]).
 
     docids are local to this index/shard, ascending (= rank order), padded
     with INVALID_DOC when fewer than k documents match inside the window.
+
+    ``backend`` selects the execution engine:
+
+    - ``"jnp"``    — the pure-jnp reference join (searchsorted membership);
+    - ``"pallas"`` — the batched block-skipping Pallas kernel
+      (:func:`repro.kernels.posting_intersect.intersect_batched_block_skip`);
+      ``interpret=True`` runs it under the Pallas interpreter so CPU CI
+      checks the exact kernel the TPU compiles.  ``interpret=None`` picks
+      interpret mode automatically off-TPU.
     """
-    fn = partial(
-        _query_topk_one,
-        index,
-        k=k,
-        window=window,
-        attr_strategy=attr_strategy,
-    )
-    return jax.vmap(fn)(batch.terms, batch.n_terms, batch.attr_filter)
+    if backend == "jnp":
+        fn = partial(
+            _query_topk_one,
+            index,
+            k=k,
+            window=window,
+            attr_strategy=attr_strategy,
+        )
+        return jax.vmap(fn)(batch.terms, batch.n_terms, batch.attr_filter)
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        if interpret is None:
+            interpret = ops.default_interpret()
+        return _query_topk_batch_pallas(
+            index,
+            batch,
+            k=k,
+            window=window,
+            attr_strategy=attr_strategy,
+            interpret=interpret,
+        )
+    raise ValueError(f"unknown backend {backend!r}")
 
 
 @partial(jax.jit, static_argnames=("k",))

@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from repro.core.compat import shard_map
 from repro.core.engine import QueryBatch, query_topk
 from repro.core.index import (
     INVALID_DOC,
@@ -84,7 +84,10 @@ def allgather_merge(cands: jnp.ndarray, axis: str) -> jnp.ndarray:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("mesh", "ns", "k", "window", "attr_strategy", "merge", "axis"),
+    static_argnames=(
+        "mesh", "ns", "k", "window", "attr_strategy", "merge", "axis",
+        "backend", "interpret",
+    ),
 )
 def distributed_query_topk(
     index: ShardedIndex,
@@ -97,8 +100,15 @@ def distributed_query_topk(
     attr_strategy: str = "embed",
     merge: str = "tournament",
     axis: str = "data",
+    backend: str = "jnp",
+    interpret: bool | None = None,
 ) -> SearchResult:
-    """Broadcast the batch to all shards, local top-k, merge to global top-k."""
+    """Broadcast the batch to all shards, local top-k, merge to global top-k.
+
+    ``backend``/``interpret`` select the slave execution engine (see
+    :func:`repro.core.engine.query_topk`): ``backend="pallas"`` runs the
+    block-skipping kernel on every slave, inside ``shard_map``.
+    """
 
     index_spec = jax.tree.map(lambda _: P(axis), index)
     batch_spec = jax.tree.map(lambda _: P(), batch)
@@ -114,7 +124,8 @@ def distributed_query_topk(
         shard = lax.axis_index(axis)
         local = _local_index(idx)
         docs, hits = query_topk(
-            local, qb, k=k, window=window, attr_strategy=attr_strategy
+            local, qb, k=k, window=window, attr_strategy=attr_strategy,
+            backend=backend, interpret=interpret,
         )
         gdocs = local_to_global_docids(docs, shard, ns)
         if merge == "tournament":
@@ -132,7 +143,8 @@ def distributed_query_topk(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "mesh", "ns", "k", "window", "attr_strategy", "merge", "axis", "pod_axis"
+        "mesh", "ns", "k", "window", "attr_strategy", "merge", "axis",
+        "pod_axis", "backend", "interpret",
     ),
 )
 def replicated_query_topk(
@@ -147,6 +159,8 @@ def replicated_query_topk(
     merge: str = "tournament",
     axis: str = "data",
     pod_axis: str = "pod",
+    backend: str = "jnp",
+    interpret: bool | None = None,
 ) -> SearchResult:
     """Multi-pod serving: each pod is an independent ODYS set (replica).
 
@@ -169,7 +183,8 @@ def replicated_query_topk(
         shard = lax.axis_index(axis)
         local = _local_index(ShardedIndex(*(x[0] for x in idx)))
         docs, hits = query_topk(
-            local, qb, k=k, window=window, attr_strategy=attr_strategy
+            local, qb, k=k, window=window, attr_strategy=attr_strategy,
+            backend=backend, interpret=interpret,
         )
         gdocs = local_to_global_docids(docs, shard, ns)
         if merge == "tournament":

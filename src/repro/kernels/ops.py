@@ -11,6 +11,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.posting_intersect import (
     compute_skip_map,
+    intersect_batched_block_skip,
     intersect_block_skip,
     skip_fraction,
 )
@@ -30,6 +31,17 @@ def intersect(a_docs, a_attrs, b_docs, attr_filter=-1, *, s_max=None,
     )
 
 
+def intersect_batched(a_docs, a_attrs, b_docs, active, attr_filter, *,
+                      s_max=None, interpret: bool | None = None):
+    """Batched multi-query/multi-term ZigZag join (the engine's hot path)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return intersect_batched_block_skip(
+        a_docs, a_attrs, b_docs, active, attr_filter,
+        s_max=s_max, interpret=interpret,
+    )
+
+
 def sort(x, *, interpret: bool | None = None):
     if interpret is None:
         interpret = default_interpret()
@@ -44,6 +56,7 @@ def topk_merge(cands, k, *, interpret: bool | None = None):
 
 __all__ = [
     "intersect",
+    "intersect_batched",
     "sort",
     "topk_merge",
     "compute_skip_map",

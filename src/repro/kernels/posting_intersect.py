@@ -38,6 +38,31 @@ LANES = 128
 TILE = TILE_ROWS * LANES  # 1024 postings per skippable tile
 
 
+def _tile_member(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(8,128) membership of A-tile entries in the B tile: eight
+    (8,128,128) broadcast compares — the VPU-friendly formulation of
+    "is a in b" (sorted merge would be scalar/branchy)."""
+    m = jnp.zeros(a.shape, dtype=jnp.bool_)
+    for r in range(TILE_ROWS):
+        row = b[r, :]
+        m = m | jnp.any(a[:, :, None] == row[None, None, :], axis=-1)
+    return m
+
+
+def _fused_keep(a, a_attr, attr_filter, enabled) -> jnp.ndarray:
+    """Validity + embedded-attribute predicate, fused in one pass —
+    the paper's "one sequential scan of the posting list" (Fig 4(b))."""
+    valid = a != INVALID_DOC
+    attr_ok = a_attr == attr_filter
+    return (valid & jnp.where(enabled, attr_ok, True)).astype(jnp.int32)
+
+
+def _clamp_s_max(s_max: int | None, num_b: int) -> int:
+    if s_max is None:
+        s_max = num_b
+    return max(1, min(s_max, num_b))
+
+
 def _intersect_kernel(
     # scalar-prefetch (SMEM):
     b_start_ref,    # int32[num_a]  first overlapping B tile per A tile
@@ -61,23 +86,16 @@ def _intersect_kernel(
     # Posting skipping: only the precomputed overlap range does work.
     @pl.when(j < n_b_ref[i])
     def _compare():
-        a = a_ref[...]
-        b = b_ref[...]
-        m = jnp.zeros(a.shape, dtype=jnp.bool_)
-        for r in range(TILE_ROWS):  # 8 x (8,128,128) broadcast compares
-            row = b[r, :]
-            m = m | jnp.any(a[:, :, None] == row[None, None, :], axis=-1)
+        m = _tile_member(a_ref[...], b_ref[...])
         out_ref[...] = out_ref[...] | m.astype(jnp.int32)
 
     # Final step: fuse validity + embedded-attribute predicate (one pass).
     @pl.when(j == s_max - 1)
     def _finalize():
-        a = a_ref[...]
-        valid = a != INVALID_DOC
-        enabled = attr_ref[1] != 0
-        attr_ok = a_attr_ref[...] == attr_ref[0]
-        keep = valid & jnp.where(enabled, attr_ok, True)
-        out_ref[...] = out_ref[...] * keep.astype(jnp.int32)
+        keep = _fused_keep(
+            a_ref[...], a_attr_ref[...], attr_ref[0], attr_ref[1] != 0
+        )
+        out_ref[...] = out_ref[...] * keep
 
 
 def _pad_to_tile(x: jnp.ndarray, fill) -> jnp.ndarray:
@@ -140,9 +158,7 @@ def intersect_block_skip(
     b = _pad_to_tile(b_docs, INVALID_DOC)
     num_a = a.shape[0] // TILE
     num_b = b.shape[0] // TILE
-    if s_max is None:
-        s_max = num_b
-    s_max = max(1, min(s_max, num_b))
+    s_max = _clamp_s_max(s_max, num_b)
 
     b_start, n_b = compute_skip_map(a, b)
     n_b = jnp.minimum(n_b, s_max)  # cap (perf experiments); default = exact
@@ -180,6 +196,152 @@ def intersect_block_skip(
         interpret=interpret,
     )(b_start, n_b, attr_params, a2, aa2, b2)
     return out.reshape(-1)[:n_a]
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-query / multi-term variant (the engine's hot path)
+# ---------------------------------------------------------------------------
+
+def _intersect_batched_kernel(
+    # scalar-prefetch (SMEM):
+    b_start_ref,    # int32[Q, T, num_a]  first overlapping B tile per A tile
+    n_b_ref,        # int32[Q, T, num_a]  overlapping B tiles (0 = term inert)
+    active_ref,     # int32[Q, T]         1 iff term slot t joins query q
+    attr_ref,       # int32[Q, 2]         [attr_filter, attr_enabled] per query
+    # VMEM:
+    a_ref,          # (1,8,128)   driver-window docids of query q, tile i
+    a_attr_ref,     # (1,8,128)   driver attribute stream (embed or gathered)
+    b_ref,          # (1,1,8,128) current other-term tile
+    out_ref,        # (1,8,128)   int32 final mask (AND over terms)
+    member_ref,     # (8,128)     int32 scratch: per-term OR accumulator
+    *,
+    t_slots: int,
+    s_max: int,
+):
+    q = pl.program_id(0)
+    i = pl.program_id(1)
+    t = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when((t == 0) & (j == 0))
+    def _init_out():
+        # ZigZag AND-fold starts all-pass; inactive slots keep it that way,
+        # so a single-keyword query degrades to validity + attr predicate.
+        out_ref[...] = jnp.ones_like(out_ref)
+
+    @pl.when(j == 0)
+    def _init_member():
+        member_ref[...] = jnp.zeros_like(member_ref)
+
+    # Posting skipping: only the precomputed overlap range does compares
+    # (n_b is pre-zeroed for inactive slots, so they are inert here, and
+    # on TPU only overlapping tiles are ever DMA'd — see b_map below).
+    @pl.when(j < n_b_ref[q, t, i])
+    def _compare():
+        m = _tile_member(a_ref[0], b_ref[0, 0])
+        member_ref[...] = member_ref[...] | m.astype(jnp.int32)
+
+    # End of this term's B sweep: AND the term's membership into the mask.
+    @pl.when(j == s_max - 1)
+    def _fold_term():
+        active = active_ref[q, t] != 0
+        term_ok = jnp.where(active, member_ref[...], 1)
+        out_ref[0] = out_ref[0] * term_ok
+
+    # Last term slot: fuse validity + embedded-attribute predicate.
+    @pl.when((t == t_slots - 1) & (j == s_max - 1))
+    def _finalize():
+        keep = _fused_keep(
+            a_ref[0], a_attr_ref[0], attr_ref[q, 0], attr_ref[q, 1] != 0
+        )
+        out_ref[0] = out_ref[0] * keep
+
+
+@functools.partial(jax.jit, static_argnames=("s_max", "interpret"))
+def intersect_batched_block_skip(
+    a_docs: jnp.ndarray,       # int32[Q, W]    driver windows
+    a_attrs: jnp.ndarray,      # int32[Q, W]    driver attribute streams
+    b_docs: jnp.ndarray,       # int32[Q, T, W] other-term windows
+    active: jnp.ndarray,       # int32[Q, T]    1 iff slot t joins query q
+    attr_filter: jnp.ndarray,  # int32[Q]       NO_ATTR(-1) = unrestricted
+    *,
+    s_max: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched ZigZag join: mask of each query's driver postings that occur
+    in *every* active other-term window, fused with the per-query embedded-
+    attribute predicate and validity.  Returns int32[Q, W] in {0,1}.
+
+    One ``pallas_call`` serves the whole query batch: grid
+    ``(Q, num_a_tiles, T, s_max)``, with per-(query, term, A-tile) skip
+    ranges scalar-prefetched so non-overlapping B tiles are never DMA'd.
+    """
+    q_n, n_a = a_docs.shape
+    t_slots = b_docs.shape[1]
+    a = _pad_to_tile(a_docs, INVALID_DOC)
+    aa = _pad_to_tile(a_attrs, -1)
+    b = _pad_to_tile(b_docs, INVALID_DOC)
+    num_a = a.shape[1] // TILE
+    num_b = b.shape[2] // TILE
+    s_max = _clamp_s_max(s_max, num_b)
+
+    # Skip maps per (query, term) pair; inactive slots get zero tiles so
+    # they cost neither compares nor DMAs.  The inner in_axes=None keeps a
+    # single copy of each driver window across its term slots.
+    b_start, n_b = jax.vmap(
+        jax.vmap(compute_skip_map, in_axes=(None, 0))
+    )(a, b)
+    n_b = jnp.minimum(n_b, s_max)
+    active = active.astype(jnp.int32)
+    n_b = n_b * active[:, :, None]
+    attr_params = jnp.stack(
+        [attr_filter.astype(jnp.int32), (attr_filter >= 0).astype(jnp.int32)],
+        axis=-1,
+    )
+
+    a2 = a.reshape(q_n, num_a * TILE_ROWS, LANES)
+    aa2 = aa.reshape(q_n, num_a * TILE_ROWS, LANES)
+    b2 = b.reshape(q_n, t_slots, num_b * TILE_ROWS, LANES)
+
+    def a_map(q, i, t, j, b_start_ref, n_b_ref, active_ref, attr_ref):
+        return (q, i, 0)
+
+    def b_map(q, i, t, j, b_start_ref, n_b_ref, active_ref, attr_ref):
+        # Out-of-range steps remap to an already-resident tile, so Pallas
+        # elides the DMA — the "skip" is free.  Zero-tile slots (inactive
+        # or no overlap) pin to block (q,0,0) regardless of t: consecutive
+        # inert steps then map to the same block and coalesce instead of
+        # pulling one fresh tile per (A-tile, slot).
+        nb = n_b_ref[q, t, i]
+        jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
+        tt = jnp.where(nb == 0, 0, t)
+        bb = jnp.where(
+            nb == 0, 0, jnp.minimum(b_start_ref[q, t, i] + jj, num_b - 1)
+        )
+        return (q, tt, bb, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(q_n, num_a, t_slots, s_max),
+        in_specs=[
+            pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
+            pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
+            pl.BlockSpec((1, 1, TILE_ROWS, LANES), b_map),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
+        scratch_shapes=[pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _intersect_batched_kernel, t_slots=t_slots, s_max=s_max
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (q_n, num_a * TILE_ROWS, LANES), jnp.int32
+        ),
+        interpret=interpret,
+    )(b_start, n_b, active, attr_params, a2, aa2, b2)
+    return out.reshape(q_n, -1)[:, :n_a]
 
 
 def skip_fraction(a_docs: jnp.ndarray, b_docs: jnp.ndarray) -> jnp.ndarray:

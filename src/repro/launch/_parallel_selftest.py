@@ -49,6 +49,16 @@ def main() -> None:
         np.testing.assert_array_equal(np.asarray(got.n_hits), np.asarray(ref.n_hits))
         print(f"distributed merge={merge}: OK")
 
+    # Kernel backend end-to-end inside shard_map: every slave runs the
+    # batched block-skipping Pallas join (interpret mode keeps CPU honest).
+    got_k = distributed_query_topk(
+        sharded, batch, mesh=mesh, ns=ns, k=10, window=1024,
+        merge="tournament", backend="pallas", interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got_k.docids), np.asarray(ref.docids))
+    np.testing.assert_array_equal(np.asarray(got_k.n_hits), np.asarray(ref.n_hits))
+    print("distributed backend=pallas: OK")
+
     # Multi-pod (2 ODYS sets x 4 slaves): query stream sharded over pods.
     mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
     got2 = replicated_query_topk(

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.core.compat import shard_map
 
 
 def _merge_scored(av, ai, bv, bi, k: int):

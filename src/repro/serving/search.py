@@ -1,0 +1,100 @@
+"""Search serving front-end: the ODYS master's admission path.
+
+Host-side wrapper that owns a sharded index + mesh and turns raw
+``(terms, site)`` queries into merged global results, batching them through
+:func:`repro.core.parallel.distributed_query_topk`.  The execution backend
+(pure-jnp reference vs the batched block-skipping Pallas kernel) is a
+constructor knob, so the same service object serves CPU CI
+(``backend="pallas", interpret=True``) and TPU production
+(``backend="pallas"``) without touching the query path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+
+from repro.core.engine import make_query_batch
+from repro.core.index import INVALID_DOC, IndexMeta, ShardedIndex
+from repro.core.parallel import SearchResult, distributed_query_topk
+
+
+@dataclasses.dataclass
+class SearchHit:
+    """One query's merged result: global docIDs in rank order."""
+
+    docids: list[int]
+    n_hits: int
+
+
+class SearchService:
+    """Serve search queries over a sharded index on a device mesh.
+
+    Parameters mirror :func:`distributed_query_topk`; ``backend`` selects
+    the per-slave execution engine (see :func:`repro.core.engine.query_topk`).
+    """
+
+    def __init__(
+        self,
+        index: ShardedIndex,
+        meta: IndexMeta,
+        mesh: jax.sharding.Mesh,
+        *,
+        ns: int,
+        k: int = 10,
+        window: int = 4096,
+        t_max: int = 4,
+        strategy: str = "embed",
+        merge: str = "tournament",
+        backend: str = "jnp",
+        interpret: bool | None = None,
+    ):
+        self.index = index
+        self.meta = meta
+        self.mesh = mesh
+        self.ns = ns
+        self.k = k
+        self.window = window
+        self.t_max = t_max
+        self.strategy = strategy
+        self.merge = merge
+        self.backend = backend
+        self.interpret = interpret
+
+    def search_batch(
+        self, queries: list[tuple[list[int], int | None]]
+    ) -> SearchResult:
+        """Run one batch end-to-end on the mesh; returns device arrays."""
+        batch = make_query_batch(
+            queries, t_max=self.t_max, meta=self.meta, strategy=self.strategy
+        )
+        attr_strategy = self.strategy
+        return distributed_query_topk(
+            self.index,
+            batch,
+            mesh=self.mesh,
+            ns=self.ns,
+            k=self.k,
+            window=self.window,
+            attr_strategy=attr_strategy,
+            merge=self.merge,
+            backend=self.backend,
+            interpret=self.interpret,
+        )
+
+    def search(
+        self, queries: list[tuple[list[int], int | None]]
+    ) -> list[SearchHit]:
+        """Host-friendly entry point: lists of global docIDs per query."""
+        res = self.search_batch(queries)
+        docs = np.asarray(res.docids)
+        hits = np.asarray(res.n_hits)
+        return [
+            SearchHit(
+                docids=[int(d) for d in row if d != INVALID_DOC],
+                n_hits=int(h),
+            )
+            for row, h in zip(docs, hits)
+        ]

@@ -2,7 +2,12 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests degrade to skips in bare envs; plain tests still run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.index import INVALID_DOC
 from repro.kernels import ops
@@ -59,31 +64,36 @@ def test_skip_map_conservative():
             assert start[i] <= t < start[i] + n_b[i], (i, t)
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    va=st.integers(0, 300),
-    vb=st.integers(0, 300),
-    overlap=st.integers(0, 100),
-    attr=st.integers(-1, 3),
-    seed=st.integers(0, 2**16),
-)
-def test_intersect_property(va, vb, overlap, attr, seed):
-    rng = np.random.default_rng(seed)
-    shared = rng.choice(10_000, size=overlap, replace=False)
-    a_only = rng.choice(np.arange(10_000, 20_000), size=va, replace=False)
-    b_only = rng.choice(np.arange(20_000, 30_000), size=vb, replace=False)
-    a_v = np.sort(np.concatenate([shared, a_only])).astype(np.int32)
-    b_v = np.sort(np.concatenate([shared, b_only])).astype(np.int32)
-    a = jnp.asarray(np.concatenate(
-        [a_v, np.full(1024 - a_v.size, INVALID_DOC, np.int32)]))
-    b = jnp.asarray(np.concatenate(
-        [b_v, np.full(1024 - b_v.size, INVALID_DOC, np.int32)]))
-    attrs = jnp.asarray(rng.integers(0, 4, size=1024).astype(np.int32))
-    got = np.asarray(ops.intersect(a, attrs, b, attr))
-    want = np.asarray(intersect_mask_ref(a, attrs, b, attr))
-    np.testing.assert_array_equal(got, want)
-    if attr < 0:
-        assert got.sum() == overlap
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        va=st.integers(0, 300),
+        vb=st.integers(0, 300),
+        overlap=st.integers(0, 100),
+        attr=st.integers(-1, 3),
+        seed=st.integers(0, 2**16),
+    )
+    def test_intersect_property(va, vb, overlap, attr, seed):
+        rng = np.random.default_rng(seed)
+        shared = rng.choice(10_000, size=overlap, replace=False)
+        a_only = rng.choice(np.arange(10_000, 20_000), size=va, replace=False)
+        b_only = rng.choice(np.arange(20_000, 30_000), size=vb, replace=False)
+        a_v = np.sort(np.concatenate([shared, a_only])).astype(np.int32)
+        b_v = np.sort(np.concatenate([shared, b_only])).astype(np.int32)
+        a = jnp.asarray(np.concatenate(
+            [a_v, np.full(1024 - a_v.size, INVALID_DOC, np.int32)]))
+        b = jnp.asarray(np.concatenate(
+            [b_v, np.full(1024 - b_v.size, INVALID_DOC, np.int32)]))
+        attrs = jnp.asarray(rng.integers(0, 4, size=1024).astype(np.int32))
+        got = np.asarray(ops.intersect(a, attrs, b, attr))
+        want = np.asarray(intersect_mask_ref(a, attrs, b, attr))
+        np.testing.assert_array_equal(got, want)
+        if attr < 0:
+            assert got.sum() == overlap
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_intersect_property():
+        pass
 
 
 @pytest.mark.parametrize("n", [2, 7, 100, 256, 777, 2048])
@@ -97,14 +107,22 @@ def test_bitonic_sort_sweep(n, dtype):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(sort_ref(jnp.asarray(x))))
 
 
-@settings(max_examples=15, deadline=None)
-@given(ns=st.integers(1, 12), k=st.integers(1, 40), seed=st.integers(0, 999))
-def test_merge_topk_property(ns, k, seed):
-    rng = np.random.default_rng(seed)
-    c = np.sort(rng.integers(0, 1 << 28, size=(ns, k)).astype(np.int32), axis=1)
-    got = ops.topk_merge(jnp.asarray(c), k)
-    want = merge_topk_ref(jnp.asarray(c), k)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(ns=st.integers(1, 12), k=st.integers(1, 40),
+           seed=st.integers(0, 999))
+    def test_merge_topk_property(ns, k, seed):
+        rng = np.random.default_rng(seed)
+        c = np.sort(
+            rng.integers(0, 1 << 28, size=(ns, k)).astype(np.int32), axis=1
+        )
+        got = ops.topk_merge(jnp.asarray(c), k)
+        want = merge_topk_ref(jnp.asarray(c), k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_merge_topk_property():
+        pass
 
 
 def test_skip_fraction_increases_with_disjointness():

@@ -3,7 +3,12 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests degrade to skips in bare envs; plain tests still run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.perfmodel import (
     MS,
@@ -42,11 +47,16 @@ def test_md1_diverges_at_saturation():
     assert md1_queue_length(999.0, st_) > md1_queue_length(500.0, st_)
 
 
-@settings(max_examples=30, deadline=None)
-@given(lam=st.floats(0.1, 900.0), srv=st.floats(1e-5, 1e-3))
-def test_md1_sojourn_at_least_service(lam, srv):
-    if lam * srv < 0.99:
-        assert sojourn(lam, srv) >= srv * 0.999
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(lam=st.floats(0.1, 900.0), srv=st.floats(1e-5, 1e-3))
+    def test_md1_sojourn_at_least_service(lam, srv):
+        if lam * srv < 0.99:
+            assert sojourn(lam, srv) >= srv * 0.999
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_md1_sojourn_at_least_service():
+        pass
 
 
 # ------------------------------------------------ Formulas (4)-(8), weights

@@ -1,7 +1,12 @@
 """Workload generator + DES simulator invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests degrade to skips in bare envs; plain tests still run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.perfmodel import (
     ClusterConfig,
@@ -65,15 +70,20 @@ def test_des_response_exceeds_components():
     assert np.all(sim.response >= sim.slave_sojourn.max(axis=1) - 1e-12)
 
 
-@settings(max_examples=8, deadline=None)
-@given(lam=st.floats(10.0, 150.0), seed=st.integers(0, 99))
-def test_des_load_monotonicity(lam, seed):
-    lo = simulate(lam, 300, C5, QUERY_MIX_DEFAULT, MODEL.master,
-                  MODEL.network, SLAVE, seed=seed)
-    hi = simulate(lam * 1.8, 300, C5, QUERY_MIX_DEFAULT, MODEL.master,
-                  MODEL.network, SLAVE, seed=seed)
-    # heavier load can't make mean response faster (same seeds/noise)
-    assert hi.mean_response >= lo.mean_response * 0.98
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(lam=st.floats(10.0, 150.0), seed=st.integers(0, 99))
+    def test_des_load_monotonicity(lam, seed):
+        lo = simulate(lam, 300, C5, QUERY_MIX_DEFAULT, MODEL.master,
+                      MODEL.network, SLAVE, seed=seed)
+        hi = simulate(lam * 1.8, 300, C5, QUERY_MIX_DEFAULT, MODEL.master,
+                      MODEL.network, SLAVE, seed=seed)
+        # heavier load can't make mean response faster (same seeds/noise)
+        assert hi.mean_response >= lo.mean_response * 0.98
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_des_load_monotonicity():
+        pass
 
 
 def test_des_fixed_kinds_override():
