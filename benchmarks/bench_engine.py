@@ -31,7 +31,9 @@ def _timed(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps
 
 
-def main():
+def main(backend: str = "jnp"):
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = None if backend == "jnp" else (not on_tpu)
     corpus = generate_corpus(
         CorpusConfig(n_docs=20_000, vocab_size=3_000, mean_doc_len=60,
                      n_sites=100, seed=0)
@@ -51,7 +53,8 @@ def main():
         per_query_shard = np.zeros((len(ss), 5 * r))
         for rep in range(r):
             for s, (idx, _) in enumerate(meta_idx):
-                dt = _timed(query_topk, idx, qb, k=k, window=2048, reps=1)
+                dt = _timed(query_topk, idx, qb, k=k, window=2048,
+                            backend=backend, interpret=interpret, reps=1)
                 per_query_shard[:, rep * 5 + s] = dt / len(ss)
         sojourns.append(per_query_shard)
         us = per_query_shard.mean() * 1e6
@@ -68,7 +71,7 @@ def main():
     for strat in ("embed", "gather", "site_term"):
         qb = make_query_batch(q, t_max=4, meta=meta_full, strategy=strat)
         dt = _timed(query_topk, idx_full, qb, k=10, window=2048,
-                    attr_strategy=strat)
+                    attr_strategy=strat, backend=backend, interpret=interpret)
         print(f"engine,limited_search_{strat},{dt/len(q)*1e6:.1f},per_query_us")
 
     # posting skipping effectiveness.  Tile skipping pays when the driver

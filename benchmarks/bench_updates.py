@@ -1,0 +1,121 @@
+"""Ingest + freshness benchmark for the online-update path (repro.indexing).
+
+Reports, as ``updates,<metric>,<value>,<note>`` CSV lines:
+
+- **updates/sec** for pure-insert, mixed, and pure-update streams through
+  the DeltaWriter (host write path + device snapshot refresh);
+- **query latency** of the merge-on-read engine at 0% / 50% / 100% delta
+  fill — the freshness tax a query pays as the delta grows — against the
+  no-delta baseline, under the selected execution engine;
+- **compaction**: wall time of the fold + rebuild, and the post-compaction
+  query latency (which should return to the baseline).
+
+On CPU the pallas backend runs under the interpreter (semantics, not
+speed); the jnp numbers are the meaningful CPU baseline.
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.core.engine import make_query_batch, query_topk
+from repro.core.index import build_index
+from repro.data.corpus import (
+    CorpusConfig,
+    MutationConfig,
+    generate_corpus,
+    generate_mutations,
+)
+from repro.indexing import DeltaWriter, compact
+from repro.indexing.delta import local_delta
+
+
+def _timed(fn, *args, reps=3, **kw):
+    jax.block_until_ready(fn(*args, **kw))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps
+
+
+def _query_latency(idx, delta, qb, *, window, backend, interpret):
+    return _timed(
+        query_topk, idx, qb, delta=delta, k=10, window=window,
+        backend=backend, interpret=interpret, reps=2,
+    )
+
+
+def main(backend: str = "jnp"):
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = None if backend == "jnp" else (not on_tpu)
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=20_000, vocab_size=2_000, mean_doc_len=60,
+                     n_sites=50, seed=3)
+    )
+    idx, meta = build_index(corpus)
+    term_cap = 1024
+    # Zipf-head lists absorb ~one posting per mutated doc; size the ingest
+    # writer for the three 400-op streams below without compacting.
+    writer = DeltaWriter(corpus, meta, ns=1, term_capacity=2 * term_cap,
+                         doc_headroom=4096)
+
+    # --- ingest throughput -------------------------------------------------
+    for name, mcfg in (
+        ("insert", MutationConfig(n_ops=400, p_insert=1.0, p_delete=0.0,
+                                  p_update=0.0, mean_doc_len=60, seed=1)),
+        ("mixed", MutationConfig(n_ops=400, p_insert=0.4, p_delete=0.3,
+                                 p_update=0.3, mean_doc_len=60, seed=2)),
+        ("update", MutationConfig(n_ops=400, p_insert=0.0, p_delete=0.0,
+                                  p_update=1.0, mean_doc_len=60, seed=3)),
+    ):
+        muts = generate_mutations(writer.mutated_corpus(), mcfg)
+        t0 = time.perf_counter()
+        writer.apply(muts)
+        jax.block_until_ready(writer.device_delta())  # include snapshot cost
+        dt = time.perf_counter() - t0
+        print(f"updates,ingest_{name},{len(muts)/dt:.1f},updates_per_sec")
+    print(f"updates,delta_fill_after_ingest,{writer.fill():.4f},fraction")
+
+    # --- freshness: query latency vs delta fill ----------------------------
+    rng = np.random.default_rng(0)
+    q = [(list(rng.integers(0, 64, size=2)), None) for _ in range(8)]
+    qb = make_query_batch(q, t_max=4, meta=meta)
+    window = 4096
+    mode = "compiled" if on_tpu else (
+        "interpret" if backend == "pallas" else "jnp"
+    )
+
+    dt = _query_latency(idx, None, qb, window=window, backend=backend,
+                        interpret=interpret)
+    print(f"updates,query_nodelta,{dt/len(q)*1e6:.1f},per_query_us_{mode}")
+
+    # Drive the delta's hottest list to the target fill with inserts over
+    # the head of the vocabulary (Zipf head = worst-case merge cost).
+    writer2 = DeltaWriter(corpus, meta, ns=1, term_capacity=term_cap,
+                          doc_headroom=4 * term_cap)
+    for target in (0.0, 0.5, 1.0):
+        while writer2.posting_fill() < target:
+            terms = np.unique(rng.integers(0, 64, size=60))
+            writer2.insert_docs([(terms, int(rng.integers(50)))])
+        delta = local_delta(writer2.device_delta())
+        dt = _query_latency(idx, delta, qb, window=window, backend=backend,
+                            interpret=interpret)
+        print(f"updates,query_fill{int(target*100)},"
+              f"{dt/len(q)*1e6:.1f},per_query_us_{mode}")
+
+    # --- compaction --------------------------------------------------------
+    t0 = time.perf_counter()
+    new_sharded, new_meta = compact(writer2, verify=False)
+    dt = time.perf_counter() - t0
+    print(f"updates,compaction_time,{dt*1e3:.1f},ms")
+    from repro.core.index import InvertedIndex
+    new_local = InvertedIndex(*(x[0] for x in new_sharded))
+    delta0 = local_delta(writer2.device_delta())
+    dt = _query_latency(new_local, delta0, qb, window=window, backend=backend,
+                        interpret=interpret)
+    print(f"updates,query_post_compaction,{dt/len(q)*1e6:.1f},"
+          f"per_query_us_{mode}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
 Emits ``name,metric,value,derived`` CSV lines.  Run as:
-    PYTHONPATH=src python -m benchmarks.run [--only fig13]
+    PYTHONPATH=src python -m benchmarks.run [--only fig13] [--backend pallas]
+
+``--backend jnp|pallas`` selects the execution engine for every suite that
+actually runs the JAX query engine (engine, updates; the dedicated
+``backends`` sweep always measures both).  The fig/table suites drive the
+analytic performance model and DES prototype, which have no execution
+engine — the flag is accepted and ignored there.
 """
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -16,6 +23,7 @@ from benchmarks import (
     bench_fig13,
     bench_kernels,
     bench_table3,
+    bench_updates,
 )
 
 SUITES = {
@@ -26,20 +34,32 @@ SUITES = {
     "engine": bench_engine.main,    # measured JAX engine + §2 strategies
     "kernels": bench_kernels.main,  # Pallas kernel microbenches
     "backends": bench_backends.main,  # jnp vs Pallas engine backend sweep
+    "updates": bench_updates.main,  # online-update ingest + freshness
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(SUITES))
+    ap.add_argument(
+        "--backend", default=None, choices=["jnp", "pallas"],
+        help="execution engine for the suites that run the JAX engine",
+    )
     args = ap.parse_args()
     names = [args.only] if args.only else list(SUITES)
     failures = 0
     for name in names:
+        fn = SUITES[name]
+        kw = {}
+        if (
+            args.backend is not None
+            and "backend" in inspect.signature(fn).parameters
+        ):
+            kw["backend"] = args.backend
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:
-            SUITES[name]()
+            fn(**kw)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures += 1

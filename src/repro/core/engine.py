@@ -25,6 +25,20 @@ mean a top-k never needs more than the window unless the query is extremely
 selective (the paper makes the same argument for its 22.8M-page shards,
 §5.1 footnote 12).
 
+**Merge-on-read** (online updates, :mod:`repro.indexing`): when a
+:class:`~repro.indexing.delta.DeltaIndex` is attached, every term's logical
+posting list is the merge of its main list and its delta list, with the
+tombstone bitmap deciding per-posting liveness (a main posting dies when
+its doc is deleted *or* superseded by an updated version in the delta; a
+delta posting dies only on delete).  Other-term windows are masked before
+the membership probe; the driver window keeps tombstoned postings in their
+rank slots and filters them in the same fused pass as validity and the
+embedded-attribute predicate — in the Pallas backend that predicate is
+fused *inside the kernel* (``a_live`` operand), mirroring the paper's
+one-sequential-scan argument.  Both backends therefore return bit-identical
+results, equal to a from-scratch rebuild over the mutated corpus whenever
+the window covers the merged list (the engine's standing assumption).
+
 This module is also the *oracle* for the Pallas kernels in
 :mod:`repro.kernels` and runs inside ``shard_map`` for the distributed
 engine (:mod:`repro.core.parallel`).
@@ -47,6 +61,7 @@ from repro.core.index import (
     InvertedIndex,
     site_term_id,
 )
+from repro.indexing.delta import DOC_DEAD, DOC_SUPERSEDED, DeltaIndex
 
 NO_TERM = np.int32(-1)
 NO_ATTR = np.int32(-1)
@@ -132,14 +147,94 @@ def _first_k_by_rank(docids: jnp.ndarray, mask: jnp.ndarray, k: int):
     return out, jnp.sum(mask.astype(jnp.int32))
 
 
-def _driver_slot(index: InvertedIndex, terms, n_terms):
-    """Shortest-list term slot (classic ZigZag driver ordering)."""
+def _driver_slot(index: InvertedIndex, terms, n_terms, delta=None):
+    """Shortest-list term slot (classic ZigZag driver ordering).
+
+    With a delta attached the ordering key is the *merged* physical length
+    (main + delta postings) — the logical list the join will stream.
+    """
     t_max = terms.shape[0]
     tt = jnp.clip(terms, 0, index.offsets.shape[0] - 1)
+    lens = index.lengths[tt]
+    if delta is not None:
+        lens = lens + delta.lengths[tt]
     lens = jnp.where(
-        (jnp.arange(t_max) < n_terms), index.lengths[tt], jnp.int32(2**31 - 1)
+        (jnp.arange(t_max) < n_terms), lens, jnp.int32(2**31 - 1)
     )
     return jnp.argmin(lens)
+
+
+# ---------------------------------------------------------------------------
+# Merge-on-read: logical windows over main + delta with tombstone filtering
+# ---------------------------------------------------------------------------
+
+def delta_term_window(
+    delta: DeltaIndex, term: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(docids[cap], attrs[cap], valid[cap]) for one term's delta list.
+
+    Same access pattern as :func:`term_window` — the delta shares the main
+    index's CSR layout, just with a fixed per-term capacity.
+    """
+    cap = delta.term_capacity
+    t = jnp.clip(term, 0, delta.offsets.shape[0] - 1)
+    off = delta.offsets[t]
+    ln = jnp.where(term < 0, 0, delta.lengths[t])
+    docs = _window(delta.postings, off, cap, INVALID_DOC)
+    attrs = _window(delta.attrs, off, cap, INVALID_ATTR)
+    valid = jnp.arange(cap, dtype=jnp.int32) < ln
+    docs = jnp.where(valid, docs, INVALID_DOC)
+    return docs, attrs, valid
+
+
+def posting_live(
+    delta: DeltaIndex, docs: jnp.ndarray, *, from_delta: bool
+) -> jnp.ndarray:
+    """Per-posting tombstone predicate.
+
+    A *main* posting is live iff its doc is neither deleted nor superseded
+    (the updated version lives in the delta); a *delta* posting is live iff
+    its doc is not deleted.  INVALID/padding docIDs read flag 0 (live) and
+    are killed by the validity predicate instead.
+    """
+    flags = jnp.take(delta.doc_flags, docs, mode="fill", fill_value=0)
+    kill = DOC_DEAD if from_delta else (DOC_DEAD | DOC_SUPERSEDED)
+    return (flags & jnp.int32(kill)) == 0
+
+
+def merged_term_window(
+    index: InvertedIndex,
+    delta: DeltaIndex,
+    term: jnp.ndarray,
+    window: int,
+    *,
+    drop_dead: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Merge-on-read window: (docids, attrs, live), each ``[window]``.
+
+    Merges the main window and the term's delta list into one ascending
+    docID stream (both inputs are sorted; a single rank-order sort realizes
+    the ZigZag-friendly merge).  ``drop_dead=True`` removes tombstoned
+    postings *before* the merge — the form membership probes need.
+    ``drop_dead=False`` keeps them in their rank slots with ``live=0`` so
+    the driver stream can defer the tombstone predicate to the same fused
+    pass as validity + attribute filtering (in-kernel for Pallas).
+    """
+    m_docs, m_attrs, m_valid = term_window(index, term, window)
+    m_live = posting_live(delta, m_docs, from_delta=False) & m_valid
+    d_docs, d_attrs, d_valid = delta_term_window(delta, term)
+    d_live = posting_live(delta, d_docs, from_delta=True) & d_valid
+
+    docs = jnp.concatenate([m_docs, d_docs])
+    attrs = jnp.concatenate([m_attrs, d_attrs])
+    live = jnp.concatenate([m_live, d_live])
+    if drop_dead:
+        docs = jnp.where(live, docs, INVALID_DOC)
+    order = jnp.argsort(docs, stable=True)
+    docs = jnp.take(docs, order)[:window]
+    attrs = jnp.take(attrs, order)[:window]
+    live = jnp.take(live, order)[:window]
+    return docs, attrs, (live & (docs != INVALID_DOC)).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +243,7 @@ def _driver_slot(index: InvertedIndex, terms, n_terms):
 
 def _query_topk_one(
     index: InvertedIndex,
+    delta: DeltaIndex | None,
     terms: jnp.ndarray,       # int32[T_MAX]
     n_terms: jnp.ndarray,     # int32[]
     attr_filter: jnp.ndarray, # int32[]
@@ -160,17 +256,30 @@ def _query_topk_one(
 
     # Drive the join from the *shortest* list (classic ZigZag ordering —
     # the driver bounds the number of candidate postings).
-    driver_slot = _driver_slot(index, terms, n_terms)
+    driver_slot = _driver_slot(index, terms, n_terms, delta)
     driver_term = terms[driver_slot]
 
-    docs, attrs, valid = term_window(index, driver_term, window)
-    mask = valid
+    if delta is None:
+        docs, attrs, valid = term_window(index, driver_term, window)
+        mask = valid
+    else:
+        # Merge-on-read driver: tombstoned postings keep their rank slots
+        # and die in the same fused pass as validity (kernel parity).
+        docs, attrs, live = merged_term_window(
+            index, delta, driver_term, window, drop_dead=False
+        )
+        mask = live > 0
 
     # Join every other term's list (statically unrolled over T_MAX slots).
     for slot in range(t_max):
         other = terms[slot]
         active = (jnp.arange(t_max)[slot] < n_terms) & (slot != driver_slot)
-        b_docs, _, _ = term_window(index, other, window)
+        if delta is None:
+            b_docs, _, _ = term_window(index, other, window)
+        else:
+            b_docs, _, _ = merged_term_window(
+                index, delta, other, window, drop_dead=True
+            )
         m = member_sorted(docs, b_docs)
         mask = mask & jnp.where(active, m, True)
 
@@ -178,7 +287,8 @@ def _query_topk_one(
     if attr_strategy == "embed":
         ok = attrs == attr_filter
     elif attr_strategy == "gather":
-        site = jnp.take(index.doc_site, jnp.clip(docs, 0, None), mode="clip")
+        doc_site = index.doc_site if delta is None else delta.doc_site
+        site = jnp.take(doc_site, jnp.clip(docs, 0, None), mode="clip")
         ok = site == attr_filter
     elif attr_strategy == "site_term":
         ok = jnp.ones_like(mask)  # rewritten into a term at build time
@@ -199,36 +309,62 @@ def _query_windows(
     *,
     window: int,
     attr_strategy: str,
+    delta: DeltaIndex | None = None,
 ):
     """Stage the batch for the batched kernel: per-query driver window +
-    attribute stream, all T_MAX other-term windows, and active-slot flags.
+    attribute stream + tombstone/live stream, all T_MAX other-term windows,
+    and active-slot flags.
 
     The driver's slot rides along as an *inactive* other-term slot, so the
     kernel sees a static (Q, T_MAX, window) layout regardless of n_terms.
+    With a delta attached every window is the merge-on-read logical window;
+    the driver keeps tombstoned postings (``live=0``) so the kernel can
+    apply the tombstone predicate in its fused finalize pass.
     """
     t_max = batch.terms.shape[1]
 
     def one(terms, n_terms):
-        driver_slot = _driver_slot(index, terms, n_terms)
-        others = jax.vmap(
-            lambda tm: term_window(index, tm, window)[0]
-        )(terms)  # (T_MAX, window)
-        # The driver window is one of the slot sweeps — select, don't regather.
-        docs = jnp.take(others, driver_slot, axis=0)
-        if attr_strategy in ("embed", "site_term"):
-            # Embedded-attribute stream of the driver window (for site_term
-            # the predicate is disabled downstream; the stream is unused).
-            # The unused docs/valid outputs are dead-code-eliminated by XLA.
-            _, astream, _ = term_window(index, terms[driver_slot], window)
-        elif attr_strategy == "gather":
-            astream = jnp.take(
-                index.doc_site, jnp.clip(docs, 0, None), mode="clip"
-            )
+        driver_slot = _driver_slot(index, terms, n_terms, delta)
+        if delta is None:
+            others = jax.vmap(
+                lambda tm: term_window(index, tm, window)[0]
+            )(terms)  # (T_MAX, window)
+            # The driver window is one of the slot sweeps — select, don't
+            # regather.
+            docs = jnp.take(others, driver_slot, axis=0)
+            live = jnp.ones_like(docs)
+            if attr_strategy in ("embed", "site_term"):
+                # Embedded-attribute stream of the driver window (for
+                # site_term the predicate is disabled downstream; the
+                # stream is unused).  The unused docs/valid outputs are
+                # dead-code-eliminated by XLA.
+                _, astream, _ = term_window(index, terms[driver_slot], window)
+            elif attr_strategy == "gather":
+                astream = jnp.take(
+                    index.doc_site, jnp.clip(docs, 0, None), mode="clip"
+                )
+            else:
+                raise ValueError(attr_strategy)
         else:
-            raise ValueError(attr_strategy)
+            others = jax.vmap(
+                lambda tm: merged_term_window(
+                    index, delta, tm, window, drop_dead=True
+                )[0]
+            )(terms)  # (T_MAX, window), tombstones dropped pre-probe
+            docs, mattrs, live = merged_term_window(
+                index, delta, terms[driver_slot], window, drop_dead=False
+            )
+            if attr_strategy in ("embed", "site_term"):
+                astream = mattrs
+            elif attr_strategy == "gather":
+                astream = jnp.take(
+                    delta.doc_site, jnp.clip(docs, 0, None), mode="clip"
+                )
+            else:
+                raise ValueError(attr_strategy)
         slots = jnp.arange(t_max)
         active = ((slots < n_terms) & (slots != driver_slot)).astype(jnp.int32)
-        return docs, astream, others, active
+        return docs, astream, live, others, active
 
     return jax.vmap(one)(batch.terms, batch.n_terms)
 
@@ -241,14 +377,16 @@ def _query_topk_batch_pallas(
     window: int,
     attr_strategy: str,
     interpret: bool,
+    delta: DeltaIndex | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One pallas_call for the whole batch: block-skipped ZigZag join with
-    the attribute predicate and validity fused in the same pass, then the
-    same rank-order selection as the jnp backend."""
+    the attribute predicate, validity, and (when a delta is attached) the
+    tombstone predicate fused in the same pass, then the same rank-order
+    selection as the jnp backend."""
     from repro.kernels import ops
 
-    docs, astream, others, active = _query_windows(
-        index, batch, window=window, attr_strategy=attr_strategy
+    docs, astream, live, others, active = _query_windows(
+        index, batch, window=window, attr_strategy=attr_strategy, delta=delta
     )
     # site_term rewrites the restriction into a join term at build time; the
     # jnp backend ignores attr_filter under this strategy, so disable the
@@ -259,7 +397,9 @@ def _query_topk_batch_pallas(
         else batch.attr_filter
     )
     mask = ops.intersect_batched(
-        docs, astream, others, active, attr_filter, interpret=interpret
+        docs, astream, others, active, attr_filter,
+        a_live=None if delta is None else live,
+        interpret=interpret,
     )
     return jax.vmap(partial(_first_k_by_rank, k=k))(docs, mask > 0)
 
@@ -272,6 +412,7 @@ def query_topk(
     index: InvertedIndex,
     batch: QueryBatch,
     *,
+    delta: DeltaIndex | None = None,
     k: int = 10,
     window: int = 4096,
     attr_strategy: str = "embed",
@@ -282,6 +423,11 @@ def query_topk(
 
     docids are local to this index/shard, ascending (= rank order), padded
     with INVALID_DOC when fewer than k documents match inside the window.
+
+    ``delta`` attaches a per-shard online-update delta
+    (:mod:`repro.indexing`): every posting access becomes merge-on-read
+    over main + delta with tombstone filtering, so inserts/updates/deletes
+    are visible without touching the main index.
 
     ``backend`` selects the execution engine:
 
@@ -296,6 +442,7 @@ def query_topk(
         fn = partial(
             _query_topk_one,
             index,
+            delta,
             k=k,
             window=window,
             attr_strategy=attr_strategy,
@@ -313,6 +460,7 @@ def query_topk(
             window=window,
             attr_strategy=attr_strategy,
             interpret=interpret,
+            delta=delta,
         )
     raise ValueError(f"unknown backend {backend!r}")
 

@@ -21,6 +21,15 @@ Mesh mapping (DESIGN.md §2):
     Bytes on the busiest link drop from ns·k to k·log2(ns) — the
     loser-tree's O(k log ns) compare count, achieved in *communication*.
 
+  Both merge strategies honor the same ``backend`` flag as the slave join:
+  under ``backend="pallas"`` the per-round best-k reduction runs the
+  bitonic top-k merge kernel (kernels/topk_merge.py) instead of jnp.sort.
+
+- online updates (repro.indexing) -> an optional ShardedDelta rides next
+  to the index with the same P(axis) sharding; each slave then answers
+  with merge-on-read over its main partition + delta, so mutations are
+  visible to live traffic without rebuilding or resharding the main index.
+
 - ODYS sets (§3.1 fault tolerance) -> the ``pod`` axis: each pod is an
   independent replica engine; the query stream is sharded across pods and
   no collective crosses them on the query path (see
@@ -44,6 +53,7 @@ from repro.core.index import (
     ShardedIndex,
     local_to_global_docids,
 )
+from repro.indexing.delta import DeltaIndex, ShardedDelta, local_delta
 
 
 class SearchResult(NamedTuple):
@@ -56,30 +66,54 @@ def _local_index(stacked: ShardedIndex) -> InvertedIndex:
     return InvertedIndex(*(x[0] for x in stacked))
 
 
-def _merge_pair(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+def _row_topk(cands: jnp.ndarray, k: int, backend: str,
+              interpret: bool | None) -> jnp.ndarray:
+    """Per-query best-k of concatenated candidates, ascending.
+
+    ``backend="pallas"`` runs the bitonic top-k merge kernel
+    (:func:`repro.kernels.topk_merge.merge_topk_rows`) — the same flag the
+    slave join honors, closing the ROADMAP item on the master merge.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        shape = cands.shape
+        rows = cands.reshape(-1, shape[-1])
+        out = ops.topk_merge_rows(rows, k, interpret=interpret)
+        return out.reshape(*shape[:-1], k)
+    return jnp.sort(cands, axis=-1)[..., :k]
+
+
+def _merge_pair(a: jnp.ndarray, b: jnp.ndarray, *, backend: str = "jnp",
+                interpret: bool | None = None) -> jnp.ndarray:
     """Merge two ascending (Q, k) candidate sets -> best-k ascending."""
     k = a.shape[-1]
-    return jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)[..., :k]
+    return _row_topk(
+        jnp.concatenate([a, b], axis=-1), k, backend, interpret
+    )
 
 
-def tournament_merge(cands: jnp.ndarray, axis: str, ns: int) -> jnp.ndarray:
+def tournament_merge(cands: jnp.ndarray, axis: str, ns: int, *,
+                     backend: str = "jnp",
+                     interpret: bool | None = None) -> jnp.ndarray:
     """Butterfly top-k merge over mesh axis ``axis`` (ns must be a pow2)."""
     assert ns & (ns - 1) == 0, "tournament merge needs power-of-two shards"
     d = 1
     while d < ns:
         perm = [(i, i ^ d) for i in range(ns)]
         other = lax.ppermute(cands, axis, perm)
-        cands = _merge_pair(cands, other)
+        cands = _merge_pair(cands, other, backend=backend, interpret=interpret)
         d *= 2
     return cands
 
 
-def allgather_merge(cands: jnp.ndarray, axis: str) -> jnp.ndarray:
+def allgather_merge(cands: jnp.ndarray, axis: str, *, backend: str = "jnp",
+                    interpret: bool | None = None) -> jnp.ndarray:
     """Paper-faithful centralized merge: gather all, one top-k."""
     k = cands.shape[-1]
     allc = lax.all_gather(cands, axis, axis=0)          # (ns, Q, k)
     allc = jnp.moveaxis(allc, 0, -2).reshape(*cands.shape[:-1], -1)
-    return jnp.sort(allc, axis=-1)[..., :k]
+    return _row_topk(allc, k, backend, interpret)
 
 
 @functools.partial(
@@ -92,6 +126,7 @@ def allgather_merge(cands: jnp.ndarray, axis: str) -> jnp.ndarray:
 def distributed_query_topk(
     index: ShardedIndex,
     batch: QueryBatch,
+    delta: ShardedDelta | None = None,
     *,
     mesh: Mesh,
     ns: int,
@@ -105,39 +140,53 @@ def distributed_query_topk(
 ) -> SearchResult:
     """Broadcast the batch to all shards, local top-k, merge to global top-k.
 
-    ``backend``/``interpret`` select the slave execution engine (see
-    :func:`repro.core.engine.query_topk`): ``backend="pallas"`` runs the
-    block-skipping kernel on every slave, inside ``shard_map``.
+    ``delta`` attaches the per-shard online-update deltas
+    (:class:`~repro.indexing.delta.ShardedDelta`, sharded over the same
+    mesh axis as the index): every slave runs merge-on-read over its main
+    partition + delta, so live traffic sees inserts/updates/deletes at the
+    next batch without an index rebuild.
+
+    ``backend``/``interpret`` select the execution engine on BOTH sides of
+    the paper's architecture (see :func:`repro.core.engine.query_topk`):
+    ``backend="pallas"`` runs the block-skipping join kernel on every
+    slave, inside ``shard_map``, and the bitonic top-k merge kernel in the
+    master merge.
     """
 
     index_spec = jax.tree.map(lambda _: P(axis), index)
     batch_spec = jax.tree.map(lambda _: P(), batch)
+    delta_spec = jax.tree.map(lambda _: P(axis), delta)
 
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(index_spec, batch_spec),
+        in_specs=(index_spec, batch_spec, delta_spec),
         out_specs=SearchResult(P(), P()),
         check_vma=False,
     )
-    def run(idx: ShardedIndex, qb: QueryBatch) -> SearchResult:
+    def run(idx: ShardedIndex, qb: QueryBatch, dlt) -> SearchResult:
         shard = lax.axis_index(axis)
         local = _local_index(idx)
+        ldelta = None if dlt is None else local_delta(dlt)
         docs, hits = query_topk(
-            local, qb, k=k, window=window, attr_strategy=attr_strategy,
-            backend=backend, interpret=interpret,
+            local, qb, delta=ldelta, k=k, window=window,
+            attr_strategy=attr_strategy, backend=backend, interpret=interpret,
         )
         gdocs = local_to_global_docids(docs, shard, ns)
         if merge == "tournament":
-            merged = tournament_merge(gdocs, axis, ns)
+            merged = tournament_merge(
+                gdocs, axis, ns, backend=backend, interpret=interpret
+            )
         elif merge == "allgather":
-            merged = allgather_merge(gdocs, axis)
+            merged = allgather_merge(
+                gdocs, axis, backend=backend, interpret=interpret
+            )
         else:
             raise ValueError(merge)
         total_hits = lax.psum(hits, axis)
         return SearchResult(merged, total_hits)
 
-    return run(index, batch)
+    return run(index, batch, delta)
 
 
 @functools.partial(
@@ -150,6 +199,7 @@ def distributed_query_topk(
 def replicated_query_topk(
     index: ShardedIndex,
     batch: QueryBatch,
+    delta: ShardedDelta | None = None,
     *,
     mesh: Mesh,
     ns: int,
@@ -164,36 +214,49 @@ def replicated_query_topk(
 ) -> SearchResult:
     """Multi-pod serving: each pod is an independent ODYS set (replica).
 
-    The index is replicated across pods (sharded over ``data`` inside each
-    pod); the *query stream* is sharded over pods.  No collective crosses
-    the pod axis on the query path — the paper's ODYS-set isolation, which
-    is also what makes set-granular failover trivial (core/faults.py).
+    The index — and the online-update ``delta``, when attached — is
+    replicated across pods (sharded over ``data`` inside each pod); the
+    *query stream* is sharded over pods.  No collective crosses the pod
+    axis on the query path — the paper's ODYS-set isolation, which is also
+    what makes set-granular failover trivial (core/faults.py).
     """
     index_spec = jax.tree.map(lambda _: P(None, axis), _stack_for_pods(index))
     batch_spec = jax.tree.map(lambda _: P(pod_axis), batch)
+    pod_delta = None if delta is None else ShardedDelta(
+        *(x[None] for x in delta)
+    )
+    delta_spec = jax.tree.map(lambda _: P(None, axis), pod_delta)
 
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(index_spec, batch_spec),
+        in_specs=(index_spec, batch_spec, delta_spec),
         out_specs=SearchResult(P(pod_axis), P(pod_axis)),
         check_vma=False,
     )
-    def run(idx, qb: QueryBatch) -> SearchResult:
+    def run(idx, qb: QueryBatch, dlt) -> SearchResult:
         shard = lax.axis_index(axis)
         local = _local_index(ShardedIndex(*(x[0] for x in idx)))
+        ldelta = (
+            None if dlt is None
+            else local_delta(ShardedDelta(*(x[0] for x in dlt)))
+        )
         docs, hits = query_topk(
-            local, qb, k=k, window=window, attr_strategy=attr_strategy,
-            backend=backend, interpret=interpret,
+            local, qb, delta=ldelta, k=k, window=window,
+            attr_strategy=attr_strategy, backend=backend, interpret=interpret,
         )
         gdocs = local_to_global_docids(docs, shard, ns)
         if merge == "tournament":
-            merged = tournament_merge(gdocs, axis, ns)
+            merged = tournament_merge(
+                gdocs, axis, ns, backend=backend, interpret=interpret
+            )
         else:
-            merged = allgather_merge(gdocs, axis)
+            merged = allgather_merge(
+                gdocs, axis, backend=backend, interpret=interpret
+            )
         return SearchResult(merged, lax.psum(hits, axis))
 
-    return run(_stack_for_pods(index), batch)
+    return run(_stack_for_pods(index), batch, pod_delta)
 
 
 def _stack_for_pods(index: ShardedIndex) -> ShardedIndex:
@@ -213,13 +276,20 @@ def sequential_reference(
     k: int,
     window: int,
     attr_strategy: str = "embed",
+    deltas: list[DeltaIndex] | None = None,
+    backend: str = "jnp",
+    interpret: bool | None = None,
 ) -> SearchResult:
     """Run each shard sequentially on one device and merge on host —
-    the oracle for :func:`distributed_query_topk`."""
+    the oracle for :func:`distributed_query_topk`.  ``deltas`` supplies
+    the per-shard online-update deltas (``DeltaWriter.shard_deltas()``)."""
     all_cands, all_hits = [], []
     for s, idx in enumerate(shard_indexes):
         docs, hits = query_topk(
-            idx, batch, k=k, window=window, attr_strategy=attr_strategy
+            idx, batch,
+            delta=None if deltas is None else deltas[s],
+            k=k, window=window, attr_strategy=attr_strategy,
+            backend=backend, interpret=interpret,
         )
         all_cands.append(local_to_global_docids(docs, jnp.int32(s), ns))
         all_hits.append(hits)

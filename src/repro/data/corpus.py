@@ -11,12 +11,20 @@ The paper crawls 114M real web pages; offline we synthesize a corpus whose
 - every document belongs to a site (Zipf-sized sites) for the
   limited-search / attribute-embedding experiments (paper Fig 1(c)/(d), Fig 4).
 
+For the *online-update* scenario (repro.indexing) this module also
+synthesizes **mutation streams** — interleaved insert/delete/update ops
+with the same Zipf term statistics as the base corpus — plus
+:func:`apply_mutations`, which materializes the post-stream corpus
+(deleted docs become empty docs so every surviving docID keeps its rank)
+as the from-scratch-rebuild ground truth for merge-on-read parity tests.
+
 Everything here is host-side numpy: it is the "crawl + load" stage of the
 pipeline and feeds :mod:`repro.core.index`.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import numpy as np
 
@@ -57,6 +65,30 @@ def _zipf_probs(n: int, s: float) -> np.ndarray:
     ranks = np.arange(1, n + 1, dtype=np.float64)
     p = ranks ** (-s)
     return p / p.sum()
+
+
+def corpus_from_docs(
+    docs: list[np.ndarray],
+    sites,
+    *,
+    vocab_size: int,
+    n_sites: int,
+) -> Corpus:
+    """Assemble a Corpus from per-doc term arrays + sites (docID = index)."""
+    lens = np.array([d.shape[0] for d in docs], dtype=np.int64)
+    offsets = np.zeros(len(docs) + 1, dtype=np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    terms = (
+        np.concatenate(docs) if docs else np.zeros(0, dtype=np.int32)
+    ).astype(np.int32)
+    return Corpus(
+        doc_offsets=offsets,
+        doc_terms=terms,
+        doc_site=np.asarray(sites, dtype=np.int32),
+        n_docs=len(docs),
+        vocab_size=vocab_size,
+        n_sites=n_sites,
+    )
 
 
 def generate_corpus(cfg: CorpusConfig) -> Corpus:
@@ -105,4 +137,114 @@ def generate_corpus(cfg: CorpusConfig) -> Corpus:
         n_docs=cfg.n_docs,
         vocab_size=cfg.vocab_size,
         n_sites=cfg.n_sites,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mutation streams (online-update workload, repro.indexing)
+# ---------------------------------------------------------------------------
+
+class Mutation(NamedTuple):
+    """One ingest operation.
+
+    ``op`` is ``"insert"`` (terms+site, docid assigned by the writer),
+    ``"delete"`` (docid only) or ``"update"`` (docid + new terms; ``site``
+    is the new site, or None to keep the old one).
+    """
+
+    op: str
+    docid: int | None
+    terms: np.ndarray | None
+    site: int | None
+
+
+@dataclasses.dataclass(frozen=True)
+class MutationConfig:
+    n_ops: int = 100
+    p_insert: float = 0.5
+    p_delete: float = 0.2
+    p_update: float = 0.3
+    mean_doc_len: int = 32
+    zipf_s: float = 1.1
+    site_zipf_s: float = 1.2
+    p_site_change: float = 0.25   # fraction of updates that move sites
+    seed: int = 0
+
+
+def _draw_terms(rng, cfg: MutationConfig, probs: np.ndarray) -> np.ndarray:
+    n = max(1, int(rng.poisson(lam=cfg.mean_doc_len)))
+    return np.unique(
+        rng.choice(probs.shape[0], size=n, p=probs)
+    ).astype(np.int32)
+
+
+def generate_mutations(corpus: Corpus, cfg: MutationConfig) -> list[Mutation]:
+    """Synthesize an interleaved insert/delete/update stream over ``corpus``.
+
+    Deletes and updates target uniformly-random *live* docs (tracking the
+    stream's own inserts and deletes); inserts draw term sets and sites
+    from the same Zipf laws as the base corpus, so posting-list length
+    statistics — what posting skipping and the delta capacity care about —
+    stay representative while the stream runs.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    probs = np.array([cfg.p_insert, cfg.p_delete, cfg.p_update], np.float64)
+    probs = probs / probs.sum()
+    site_probs = _zipf_probs(corpus.n_sites, cfg.site_zipf_s)
+    term_probs = _zipf_probs(corpus.vocab_size, cfg.zipf_s)
+
+    # Empty docs are deletion tombstones (apply_mutations leaves them in
+    # place to keep ranks stable) — never valid delete/update targets.
+    live = [
+        d for d in range(corpus.n_docs)
+        if corpus.doc_offsets[d + 1] > corpus.doc_offsets[d]
+    ]
+    n_docs = corpus.n_docs
+    out: list[Mutation] = []
+    for _ in range(cfg.n_ops):
+        kind = ["insert", "delete", "update"][rng.choice(3, p=probs)]
+        if kind != "insert" and not live:
+            kind = "insert"
+        if kind == "insert":
+            terms = _draw_terms(rng, cfg, term_probs)
+            site = int(rng.choice(corpus.n_sites, p=site_probs))
+            out.append(Mutation("insert", None, terms, site))
+            live.append(n_docs)
+            n_docs += 1
+        elif kind == "delete":
+            i = int(rng.integers(len(live)))
+            gid = live.pop(i)
+            out.append(Mutation("delete", gid, None, None))
+        else:
+            gid = live[int(rng.integers(len(live)))]
+            terms = _draw_terms(rng, cfg, term_probs)
+            site = (
+                int(rng.choice(corpus.n_sites, p=site_probs))
+                if rng.random() < cfg.p_site_change
+                else None
+            )
+            out.append(Mutation("update", gid, terms, site))
+    return out
+
+
+def apply_mutations(corpus: Corpus, mutations: list[Mutation]) -> Corpus:
+    """Materialize the post-stream corpus — the ground truth a from-scratch
+    rebuild sees.  Deleted docs become *empty* docs (zero terms, site kept)
+    so docIDs, and therefore ranks, never shift."""
+    docs = [np.asarray(corpus.terms_of(d), np.int32) for d in range(corpus.n_docs)]
+    sites = [int(x) for x in corpus.doc_site]
+    for m in mutations:
+        if m.op == "insert":
+            docs.append(np.unique(np.asarray(m.terms, np.int32)))
+            sites.append(int(m.site))
+        elif m.op == "delete":
+            docs[m.docid] = np.zeros(0, dtype=np.int32)
+        elif m.op == "update":
+            docs[m.docid] = np.unique(np.asarray(m.terms, np.int32))
+            if m.site is not None:
+                sites[m.docid] = int(m.site)
+        else:
+            raise ValueError(m.op)
+    return corpus_from_docs(
+        docs, sites, vocab_size=corpus.vocab_size, n_sites=corpus.n_sites
     )

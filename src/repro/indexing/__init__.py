@@ -1,0 +1,49 @@
+"""Online index updates — the "DB" half of ODYS's DB-IR integration.
+
+The read-only reproduction builds its index once (`repro.core.index`);
+this package adds the transactional write path the paper argues a
+DB-IR-integrated engine owns natively:
+
+- :mod:`repro.indexing.delta` — per-shard fixed-capacity **DeltaIndex**
+  (same CSR + skip-table layout as the main index), the **tombstone
+  bitmap** covering main + delta, and the host-side :class:`DeltaWriter`
+  with ``insert_docs`` / ``delete_docs`` / ``update_docs``;
+- :mod:`repro.indexing.compaction` — fold a full (or threshold-crossed)
+  delta back into a fresh main ShardedIndex, verified against a
+  from-scratch rebuild.
+
+The read side — merge-on-read over main + delta with tombstone filtering —
+lives in the query engine (:func:`repro.core.engine.query_topk` and the
+Pallas kernel's fused tombstone predicate), threaded through
+`repro.core.parallel` and `repro.serving.search` so live traffic sees every
+mutation at the next batch snapshot.
+"""
+from repro.indexing.compaction import (
+    CompactionMismatch,
+    compact,
+    fold_corpus,
+    maybe_compact,
+)
+from repro.indexing.delta import (
+    DOC_DEAD,
+    DOC_SUPERSEDED,
+    DeltaFullError,
+    DeltaIndex,
+    DeltaWriter,
+    ShardedDelta,
+    local_delta,
+)
+
+__all__ = [
+    "DOC_DEAD",
+    "DOC_SUPERSEDED",
+    "CompactionMismatch",
+    "DeltaFullError",
+    "DeltaIndex",
+    "DeltaWriter",
+    "ShardedDelta",
+    "compact",
+    "fold_corpus",
+    "local_delta",
+    "maybe_compact",
+]

@@ -1,0 +1,133 @@
+"""Background compaction: fold the delta back into a fresh main index.
+
+The merge-on-read path (:mod:`repro.core.engine`) keeps queries exact while
+the delta fills, but every query pays the merge and tombstoned docs keep
+occupying window slots.  Compaction is the amortizing pass: it folds the
+*index-side structures* — the base corpus the main index was built from,
+the tombstone bitmap, and the delta posting slabs (inverted back to per-doc
+term sets) — into one compacted corpus, rebuilds a fresh
+:class:`~repro.core.index.ShardedIndex` from it, and rebases the writer so
+the delta starts empty again.
+
+The fold is intentionally *not* a rebuild from the writer's mutated-corpus
+mirror: it consumes only what the index structures record (base postings,
+flags, delta postings).  That is what makes ``verify=True`` meaningful —
+it cross-checks the folded build, array for array, against a from-scratch
+``build_sharded_index`` over the independently-maintained mutated corpus,
+the online-updates analogue of the paper's recovery/consistency guarantees.
+
+Typical serving loop::
+
+    if writer.needs_compaction(0.5):
+        index, meta = compact(writer, verify=False)
+        # swap into the SearchService; queries in flight keep the old
+        # (still-correct) snapshot, new batches see the compacted index.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.index import (
+    IndexMeta,
+    ShardedIndex,
+    build_sharded_index,
+)
+from repro.data.corpus import Corpus, corpus_from_docs
+from repro.indexing.delta import DOC_DEAD, DeltaWriter
+
+
+class CompactionMismatch(AssertionError):
+    """Folded index differs from the from-scratch rebuild (corruption)."""
+
+
+def fold_corpus(writer: DeltaWriter) -> Corpus:
+    """Fold base + delta + tombstones into the compacted corpus.
+
+    Sources, in precedence order, per global docID ``g``:
+
+    - DOC_DEAD set            -> empty document (rank slot preserved);
+    - live postings in delta  -> term set recovered by *inverting* the
+      delta CSR (per-term local docID lists -> per-doc term lists);
+    - otherwise               -> the base corpus's term set, unchanged.
+
+    Sites come from the delta's authoritative ``doc_site`` table.
+    """
+    ns, vocab = writer.ns, writer.vocab_size
+    base = writer.base_corpus
+    n_total = writer.n_docs
+    delta_docs = writer.delta_doc_ids
+
+    # Invert the delta posting slabs (vocabulary terms only; site pseudo
+    # lists are re-derived from doc_site at build time).
+    inverted: dict[int, list[int]] = {}
+    for s, st in enumerate(writer._shards):
+        for t in range(vocab):
+            ln = int(st.lengths[t])
+            for local in st.postings[t, :ln]:
+                inverted.setdefault(int(local) * ns + s, []).append(t)
+
+    docs: list[np.ndarray] = []
+    sites = np.empty(n_total, dtype=np.int32)
+    for g in range(n_total):
+        st, local = writer._shard_of(g)
+        site = int(st.doc_site[local])
+        if site < 0 and g < base.n_docs:
+            site = int(base.doc_site[g])
+        sites[g] = site
+        if st.doc_flags[local] & DOC_DEAD:
+            docs.append(np.zeros(0, dtype=np.int32))
+        elif g in delta_docs:
+            # terms appended in ascending t by the inversion loop
+            docs.append(np.asarray(inverted.get(g, []), dtype=np.int32))
+        else:
+            docs.append(np.asarray(base.terms_of(g), dtype=np.int32))
+
+    return corpus_from_docs(
+        docs, sites, vocab_size=vocab, n_sites=writer.n_sites
+    )
+
+
+def compact(
+    writer: DeltaWriter, *, verify: bool = False
+) -> tuple[ShardedIndex, IndexMeta]:
+    """Fold the delta into a fresh main ShardedIndex and rebase the writer.
+
+    With ``verify=True`` the folded build is checked, array for array,
+    against a from-scratch ``build_sharded_index`` over the writer's
+    mutated-corpus mirror; a mismatch raises :class:`CompactionMismatch`
+    and leaves the writer untouched.
+    """
+    folded = fold_corpus(writer)
+    new_index, new_meta = build_sharded_index(
+        folded, writer.ns, include_site_terms=writer.include_site_terms
+    )
+    if verify:
+        ref = writer.mutated_corpus()
+        ref_index, ref_meta = build_sharded_index(
+            ref, writer.ns, include_site_terms=writer.include_site_terms
+        )
+        if new_meta != ref_meta:
+            raise CompactionMismatch(f"meta: {new_meta} != {ref_meta}")
+        for name, got, want in zip(
+            ShardedIndex._fields, new_index, ref_index
+        ):
+            if not np.array_equal(np.asarray(got), np.asarray(want)):
+                raise CompactionMismatch(f"field {name!r} diverged")
+    writer.rebase(folded)
+    return new_index, new_meta
+
+
+def maybe_compact(
+    writer: DeltaWriter,
+    index: ShardedIndex,
+    meta: IndexMeta,
+    *,
+    threshold: float = 0.5,
+    verify: bool = False,
+) -> tuple[ShardedIndex, IndexMeta, bool]:
+    """Compact iff the delta crossed ``threshold``; returns the (possibly
+    unchanged) index/meta plus whether compaction ran."""
+    if not writer.needs_compaction(threshold):
+        return index, meta, False
+    new_index, new_meta = compact(writer, verify=verify)
+    return new_index, new_meta, True

@@ -1,0 +1,512 @@
+"""Per-shard delta index: the online-update half of DB-IR.
+
+ODYS's central claim (PAPER.md; §1, §3) is that a search engine built on a
+tightly-integrated parallel DBMS can update its IR index *transactionally,
+online* — no batch rebuild, no stale-index window — which GFS-style
+engines cannot.  This module supplies that write path for the TPU index
+layout of :mod:`repro.core.index`:
+
+**DeltaIndex** (device view, one per shard) is a small, fixed-capacity
+posting buffer with the *same* CSR + skip-table layout as the main
+:class:`~repro.core.index.InvertedIndex`:
+
+- ``offsets[t] = t * term_capacity`` — every term owns a fixed,
+  BLOCK-aligned slab (the delta's analogue of the main CSR; kept as an
+  explicit array so the two structures are interchangeable to readers);
+- ``postings``/``attrs`` — local docIDs ascending per list, the embedded
+  siteId riding alongside exactly as in the main index;
+- ``block_max`` — the per-BLOCK skip table over the delta slab;
+- ``doc_flags`` — the **tombstone bitmap**.  One int32 of flag bits per
+  local docID, sized to cover *both* structures (all base docs plus the
+  insert headroom):
+
+  * ``DOC_DEAD`` — the document is deleted; every posting of it, in main
+    *and* delta, is masked at read time;
+  * ``DOC_SUPERSEDED`` — the document was updated; its *main* postings are
+    stale (masked), its live postings are in the delta.  A delta posting is
+    therefore live iff its doc is not DEAD; a main posting is live iff its
+    doc is neither DEAD nor SUPERSEDED.
+
+- ``doc_site`` — the authoritative local docID -> siteId table covering
+  base + delta docs (updates may move a document between sites).
+
+**DeltaWriter** is the host-side transaction manager: ``insert_docs`` /
+``delete_docs`` / ``update_docs`` mutate per-shard numpy mirrors and a
+monotone version counter; :meth:`DeltaWriter.device_delta` snapshots the
+mirrors into a :class:`ShardedDelta` pytree (fixed shapes — mutations
+never retrigger XLA compilation).  New documents take the next global
+docIDs and stripe across shards with the existing ``d % ns`` map, so
+:func:`repro.core.index.local_to_global_docids` needs no change.
+
+**Freshness semantics** (merge-on-read, see :mod:`repro.core.engine`):
+a query that starts after ``device_delta()`` returns sees every mutation
+applied before the snapshot — per-batch snapshot isolation.  Results are
+identical to a from-scratch rebuild over the mutated corpus as long as the
+query window covers the merged list (the same bounded-window assumption
+the read-only engine already makes); deleted docs continue to occupy
+driver-window slots until compaction folds them out
+(:mod:`repro.indexing.compaction`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.index import (
+    BLOCK,
+    INVALID_ATTR,
+    INVALID_DOC,
+    IndexMeta,
+)
+from repro.data.corpus import Corpus, corpus_from_docs
+
+# doc_flags bits.  DEAD masks postings in both structures; SUPERSEDED masks
+# main postings only (the live version of the doc lives in the delta).
+DOC_DEAD = np.int32(1)
+DOC_SUPERSEDED = np.int32(2)
+
+
+class DeltaFullError(RuntimeError):
+    """The delta is out of posting or document capacity.
+
+    Batches apply document-by-document: when this is raised mid-batch the
+    *earlier* documents remain applied (and visible to the next snapshot);
+    ``applied`` tells the caller how many, so a retry after compaction must
+    resume from that offset instead of re-submitting the whole batch.
+    """
+
+    def __init__(self, msg: str, *, applied: int = 0):
+        super().__init__(msg)
+        self.applied = applied
+
+
+class DeltaIndex(NamedTuple):
+    """Device-side delta for ONE shard (same layout family as the main index)."""
+
+    offsets: jnp.ndarray    # int32[n_terms]   t * term_capacity (BLOCK-aligned)
+    lengths: jnp.ndarray    # int32[n_terms]   valid postings per list
+    postings: jnp.ndarray   # int32[n_terms * cap] local docIDs, ascending/list
+    attrs: jnp.ndarray      # int32[n_terms * cap] embedded siteId per posting
+    block_max: jnp.ndarray  # int32[(n_terms*cap)//BLOCK] skip table
+    doc_flags: jnp.ndarray  # int32[nd_cap]    tombstone bitmap (both structures)
+    doc_site: jnp.ndarray   # int32[nd_cap]    authoritative docID -> siteId
+
+    @property
+    def term_capacity(self) -> int:
+        return self.postings.shape[-1] // self.offsets.shape[-1]
+
+
+class ShardedDelta(NamedTuple):
+    """ns stacked per-shard deltas (leading axis = shard, like ShardedIndex)."""
+
+    offsets: jnp.ndarray    # int32[ns, n_terms]
+    lengths: jnp.ndarray    # int32[ns, n_terms]
+    postings: jnp.ndarray   # int32[ns, n_terms * cap]
+    attrs: jnp.ndarray      # int32[ns, n_terms * cap]
+    block_max: jnp.ndarray  # int32[ns, (n_terms*cap)//BLOCK]
+    doc_flags: jnp.ndarray  # int32[ns, nd_cap]
+    doc_site: jnp.ndarray   # int32[ns, nd_cap]
+
+
+def local_delta(stacked: ShardedDelta) -> DeltaIndex:
+    """Inside shard_map each device sees a leading shard dim of 1."""
+    return DeltaIndex(*(x[0] for x in stacked))
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_block(n: int) -> int:
+    return _ceil_div(n, BLOCK) * BLOCK
+
+
+@dataclasses.dataclass
+class _ShardState:
+    """Host-side numpy mirror of one shard's delta."""
+
+    lengths: np.ndarray    # int32[n_terms]
+    postings: np.ndarray   # int32[n_terms, cap]  (2D host-side; flat on device)
+    attrs: np.ndarray      # int32[n_terms, cap]
+    doc_flags: np.ndarray  # int32[nd_cap]
+    doc_site: np.ndarray   # int32[nd_cap]
+
+
+class DeltaWriter:
+    """Host-side write path over a sharded corpus: the ODYS master's
+    transactional ingest, mirrored per shard.
+
+    Parameters
+    ----------
+    corpus:
+        The corpus the *current main index* was built from (the base).
+    meta:
+        The main index's :class:`IndexMeta` (term layout must match).
+    ns:
+        Shard count — must equal the main index's.
+    term_capacity:
+        Delta postings per term (rounded up to BLOCK).  A term list that
+        fills up raises :class:`DeltaFullError`; compact and retry.
+    doc_headroom:
+        Total number of *inserted* documents the writer can ever hold
+        (sized at creation so device shapes stay static; compaction does
+        not reclaim it — create a new writer to regrow).
+    """
+
+    def __init__(
+        self,
+        corpus: Corpus,
+        meta: IndexMeta,
+        ns: int,
+        *,
+        term_capacity: int = 2 * BLOCK,
+        doc_headroom: int = 1024,
+    ):
+        assert ns >= 1
+        self.ns = ns
+        self.meta = meta
+        self.include_site_terms = meta.include_site_terms
+        self.vocab_size = meta.vocab_size
+        self.n_sites = meta.n_sites
+        self.n_terms = meta.n_terms
+        self.term_capacity = _pad_block(max(term_capacity, 1))
+        self._base = corpus
+        self._base_n_docs = corpus.n_docs
+
+        n_base_local = _ceil_div(corpus.n_docs, ns)
+        self._doc_cap_local = _ceil_div(doc_headroom, ns)
+        self._n_base_local_init = n_base_local
+        # Local-docID admission limit (exact headroom); nd_cap is the
+        # BLOCK-padded *array* width and may exceed it.
+        self._doc_limit_local = n_base_local + self._doc_cap_local
+        self.nd_cap = _pad_block(self._doc_limit_local)
+
+        self._shards = [self._fresh_shard(corpus, s) for s in range(ns)]
+
+        # Mutated-corpus mirror: authoritative per-doc state, maintained
+        # independently of the delta structures so compaction can be
+        # *verified* against a from-scratch rebuild (compaction.py).
+        self._docs: list[np.ndarray] = [
+            np.asarray(corpus.terms_of(d), dtype=np.int32).copy()
+            for d in range(corpus.n_docs)
+        ]
+        self._sites: list[int] = [int(x) for x in corpus.doc_site]
+        self.n_docs = corpus.n_docs            # total, including inserts
+        self._delta_docs: set[int] = set()     # gids whose live postings are in delta
+        self._version = 0
+        self._snapshot: ShardedDelta | None = None
+        self._snapshot_version = -1
+
+    # ------------------------------------------------------------------
+    # construction / rebase
+    # ------------------------------------------------------------------
+
+    def _fresh_shard(self, base: Corpus, s: int) -> _ShardState:
+        st = _ShardState(
+            lengths=np.zeros(self.n_terms, dtype=np.int32),
+            postings=np.full(
+                (self.n_terms, self.term_capacity), INVALID_DOC, dtype=np.int32
+            ),
+            attrs=np.full(
+                (self.n_terms, self.term_capacity), INVALID_ATTR, dtype=np.int32
+            ),
+            doc_flags=np.zeros(self.nd_cap, dtype=np.int32),
+            doc_site=np.full(self.nd_cap, INVALID_ATTR, dtype=np.int32),
+        )
+        base_sites = base.doc_site[s::self.ns]
+        st.doc_site[: base_sites.shape[0]] = base_sites
+        return st
+
+    def rebase(self, folded: Corpus) -> None:
+        """Point the writer at a freshly-compacted main index (folded is the
+        corpus the new main was built from).  Resets every delta structure;
+        doc shapes stay fixed so jitted query functions keep their traces
+        for the *delta* operands (the main index itself changed shape)."""
+        if _ceil_div(folded.n_docs, self.ns) > self._doc_limit_local:
+            raise DeltaFullError(
+                "folded corpus exceeds the writer's fixed doc capacity"
+            )
+        self._base = folded
+        self._base_n_docs = folded.n_docs
+        self._shards = [self._fresh_shard(folded, s) for s in range(self.ns)]
+        self._delta_docs = set()
+        self._bump()
+
+    # ------------------------------------------------------------------
+    # low-level sorted posting ops (host numpy, per shard)
+    # ------------------------------------------------------------------
+
+    def _insert_posting(self, st: _ShardState, t: int, local: int, attr: int):
+        ln = int(st.lengths[t])
+        row, arow = st.postings[t], st.attrs[t]
+        pos = int(np.searchsorted(row[:ln], local))
+        row[pos + 1: ln + 1] = row[pos:ln]
+        arow[pos + 1: ln + 1] = arow[pos:ln]
+        row[pos] = local
+        arow[pos] = attr
+        st.lengths[t] = ln + 1
+
+    def _remove_posting(self, st: _ShardState, t: int, local: int):
+        ln = int(st.lengths[t])
+        row, arow = st.postings[t], st.attrs[t]
+        pos = int(np.searchsorted(row[:ln], local))
+        if pos >= ln or row[pos] != local:
+            return
+        row[pos: ln - 1] = row[pos + 1: ln]
+        arow[pos: ln - 1] = arow[pos + 1: ln]
+        row[ln - 1] = INVALID_DOC
+        arow[ln - 1] = INVALID_ATTR
+        st.lengths[t] = ln - 1
+
+    def _posting_terms(self, gid: int) -> list[int]:
+        """All term ids carrying postings for gid's *current* version."""
+        ts = [int(t) for t in self._docs[gid]]
+        if self.include_site_terms:
+            ts.append(self.vocab_size + self._sites[gid])
+        return ts
+
+    def _check_terms(self, terms: np.ndarray, site: int):
+        if terms.size and (terms[0] < 0 or terms[-1] >= self.vocab_size):
+            raise ValueError(f"term out of range: {terms}")
+        if not (0 <= site < self.n_sites):
+            raise ValueError(f"site out of range: {site}")
+
+    def _shard_of(self, gid: int) -> tuple[_ShardState, int]:
+        return self._shards[gid % self.ns], gid // self.ns
+
+    def _bump(self):
+        self._version += 1
+
+    # ------------------------------------------------------------------
+    # transactional ops
+    # ------------------------------------------------------------------
+
+    def insert_docs(
+        self, docs: Sequence[tuple[Sequence[int], int]]
+    ) -> list[int]:
+        """Insert new documents; returns their global docIDs.
+
+        docIDs are assigned monotonically (new docs rank below all existing
+        ones — the synthetic corpus's rank-order-by-docID convention) and
+        stripe across shards with the same ``d % ns`` map as the base.
+        Each document is admitted atomically (capacity is checked for every
+        affected posting list before any is touched) and bumps the snapshot
+        version as it lands, so a mid-batch :class:`DeltaFullError` leaves
+        the earlier documents applied AND visible — resume the batch from
+        the exception's ``applied`` offset after compacting.
+        """
+        gids = []
+        for terms, site in docs:
+            terms_u = np.unique(np.asarray(terms, dtype=np.int64)).astype(
+                np.int32
+            )
+            self._check_terms(terms_u, site)
+            gid = self.n_docs
+            st, local = self._shard_of(gid)
+            if local >= self._doc_limit_local:
+                raise DeltaFullError(
+                    "document headroom exhausted", applied=len(gids)
+                )
+            plist = [int(t) for t in terms_u]
+            if self.include_site_terms:
+                plist.append(self.vocab_size + site)
+            for t in plist:
+                if st.lengths[t] >= self.term_capacity:
+                    raise DeltaFullError(
+                        f"delta list full for term {t}", applied=len(gids)
+                    )
+            for t in plist:
+                self._insert_posting(st, t, local, site)
+            st.doc_site[local] = site
+            self._docs.append(terms_u)
+            self._sites.append(int(site))
+            self._delta_docs.add(gid)
+            self.n_docs += 1
+            gids.append(gid)
+            self._bump()
+        return gids
+
+    def delete_docs(self, docids: Sequence[int]) -> None:
+        """Tombstone documents.  Postings already in the delta are removed
+        physically (reclaiming capacity); main postings are masked by the
+        DOC_DEAD bit until compaction folds them out."""
+        for gid in docids:
+            gid = int(gid)
+            if not (0 <= gid < self.n_docs):
+                raise KeyError(f"unknown docID {gid}")
+            st, local = self._shard_of(gid)
+            if st.doc_flags[local] & DOC_DEAD:
+                continue
+            if gid in self._delta_docs:
+                for t in self._posting_terms(gid):
+                    self._remove_posting(st, t, local)
+                self._delta_docs.discard(gid)
+            st.doc_flags[local] |= DOC_DEAD
+            self._docs[gid] = np.zeros(0, dtype=np.int32)
+            self._bump()
+
+    def update_docs(
+        self, updates: Sequence[tuple[int, Sequence[int], int | None]]
+    ) -> None:
+        """Replace documents in place: ``(docid, new_terms, new_site|None)``.
+
+        The docID (= rank) is preserved.  The old version's main postings
+        are masked via DOC_SUPERSEDED; an older delta version is removed
+        physically; the new postings land in the delta.  As with inserts,
+        each update is atomic and versioned individually: a mid-batch
+        :class:`DeltaFullError` (``applied`` = count landed) or ``KeyError``
+        leaves the earlier updates applied and visible.
+        """
+        applied = 0
+        for gid, terms, site in updates:
+            gid = int(gid)
+            if not (0 <= gid < self.n_docs):
+                raise KeyError(f"unknown docID {gid}")
+            st, local = self._shard_of(gid)
+            if st.doc_flags[local] & DOC_DEAD:
+                raise KeyError(f"docID {gid} is deleted")
+            new_site = self._sites[gid] if site is None else int(site)
+            terms_u = np.unique(np.asarray(terms, dtype=np.int64)).astype(
+                np.int32
+            )
+            self._check_terms(terms_u, new_site)
+            in_delta = gid in self._delta_docs
+            old_plist = set(self._posting_terms(gid)) if in_delta else set()
+            new_plist = [int(t) for t in terms_u]
+            if self.include_site_terms:
+                new_plist.append(self.vocab_size + new_site)
+            for t in new_plist:
+                drop = 1 if t in old_plist else 0
+                if st.lengths[t] - drop >= self.term_capacity:
+                    raise DeltaFullError(
+                        f"delta list full for term {t}", applied=applied
+                    )
+            if in_delta:
+                for t in old_plist:
+                    self._remove_posting(st, t, local)
+            else:
+                st.doc_flags[local] |= DOC_SUPERSEDED
+            for t in new_plist:
+                self._insert_posting(st, t, local, new_site)
+            st.doc_site[local] = new_site
+            self._docs[gid] = terms_u
+            self._sites[gid] = new_site
+            self._delta_docs.add(gid)
+            applied += 1
+            self._bump()
+
+    def apply(self, mutations) -> None:
+        """Apply a :func:`repro.data.corpus.generate_mutations` stream."""
+        for m in mutations:
+            if m.op == "insert":
+                self.insert_docs([(m.terms, m.site)])
+            elif m.op == "delete":
+                self.delete_docs([m.docid])
+            elif m.op == "update":
+                self.update_docs([(m.docid, m.terms, m.site)])
+            else:
+                raise ValueError(m.op)
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def base_corpus(self) -> Corpus:
+        """The corpus the current main index was built from."""
+        return self._base
+
+    @property
+    def delta_doc_ids(self) -> frozenset[int]:
+        """Global docIDs whose live postings are in the delta."""
+        return frozenset(self._delta_docs)
+
+    def device_delta(self) -> ShardedDelta:
+        """Snapshot the host mirrors into a stacked device pytree.
+
+        Shapes are fixed at construction, so repeated snapshots never
+        retrigger compilation of jitted query functions; the snapshot is
+        cached per version (mutation batches invalidate it).
+        """
+        if self._snapshot is not None and self._snapshot_version == self._version:
+            return self._snapshot
+        ns, cap = self.ns, self.term_capacity
+        lengths = np.stack([s.lengths for s in self._shards])
+        postings = np.stack([s.postings.reshape(-1) for s in self._shards])
+        attrs = np.stack([s.attrs.reshape(-1) for s in self._shards])
+        # Skip table, computed sparsely: all-padding blocks reduce to
+        # INVALID_DOC, so only occupied term slabs need the max-reduction
+        # (the snapshot sits on the ingest hot path).
+        bpt = cap // BLOCK
+        block_max = np.full((ns, self.n_terms * bpt), INVALID_DOC, np.int32)
+        for s, st in enumerate(self._shards):
+            for t in np.flatnonzero(st.lengths):
+                block_max[s, t * bpt:(t + 1) * bpt] = (
+                    st.postings[t].reshape(bpt, BLOCK).max(axis=1)
+                )
+        offsets = np.broadcast_to(
+            (np.arange(self.n_terms, dtype=np.int32) * cap)[None], (ns, self.n_terms)
+        )
+        self._snapshot = ShardedDelta(
+            offsets=jnp.asarray(np.ascontiguousarray(offsets)),
+            lengths=jnp.asarray(lengths),
+            postings=jnp.asarray(postings),
+            attrs=jnp.asarray(attrs),
+            block_max=jnp.asarray(block_max),
+            doc_flags=jnp.asarray(np.stack([s.doc_flags for s in self._shards])),
+            doc_site=jnp.asarray(np.stack([s.doc_site for s in self._shards])),
+        )
+        self._snapshot_version = self._version
+        return self._snapshot
+
+    def shard_deltas(self) -> list[DeltaIndex]:
+        """Per-shard device views (for the sequential reference path)."""
+        stacked = self.device_delta()
+        return [DeltaIndex(*(x[s] for x in stacked)) for s in range(self.ns)]
+
+    def mutated_corpus(self) -> Corpus:
+        """Materialize the authoritative post-mutation corpus (deleted docs
+        become empty docs so docIDs — and thus ranks — stay stable)."""
+        return corpus_from_docs(
+            self._docs, self._sites,
+            vocab_size=self.vocab_size, n_sites=self.n_sites,
+        )
+
+    # ------------------------------------------------------------------
+    # fill / compaction triggers
+    # ------------------------------------------------------------------
+
+    def posting_fill(self) -> float:
+        """Max posting-list fill fraction across shards and terms."""
+        return max(
+            float(s.lengths.max()) / self.term_capacity for s in self._shards
+        )
+
+    def doc_fill(self) -> float:
+        """Inserted-document headroom consumed (whole writer lifetime)."""
+        used = _ceil_div(self.n_docs, self.ns) - self._n_base_local_init
+        return max(0.0, used / self._doc_cap_local)
+
+    def fill(self) -> float:
+        """Worst capacity dimension (reporting/monitoring)."""
+        return max(self.posting_fill(), self.doc_fill())
+
+    def needs_compaction(self, threshold: float = 0.5) -> bool:
+        """True once the *posting* fill crosses ``threshold``.
+
+        Deliberately ignores :meth:`doc_fill`: document headroom is
+        consumed for the writer's lifetime (compaction cannot drain it),
+        so triggering on it would re-compact on every mutation forever.
+        Headroom exhaustion surfaces as :class:`DeltaFullError` at insert
+        time instead — recover by creating a new writer over the
+        compacted corpus.
+        """
+        return self.posting_fill() >= threshold

@@ -15,7 +15,7 @@ from repro.kernels.posting_intersect import (
     intersect_block_skip,
     skip_fraction,
 )
-from repro.kernels.topk_merge import bitonic_sort, merge_topk
+from repro.kernels.topk_merge import bitonic_sort, merge_topk, merge_topk_rows
 
 
 def default_interpret() -> bool:
@@ -32,13 +32,17 @@ def intersect(a_docs, a_attrs, b_docs, attr_filter=-1, *, s_max=None,
 
 
 def intersect_batched(a_docs, a_attrs, b_docs, active, attr_filter, *,
-                      s_max=None, interpret: bool | None = None):
-    """Batched multi-query/multi-term ZigZag join (the engine's hot path)."""
+                      a_live=None, s_max=None, interpret: bool | None = None):
+    """Batched multi-query/multi-term ZigZag join (the engine's hot path).
+
+    ``a_live`` is the optional per-posting tombstone stream of the driver
+    windows (online updates, repro.indexing); omitted = all live.
+    """
     if interpret is None:
         interpret = default_interpret()
     return intersect_batched_block_skip(
         a_docs, a_attrs, b_docs, active, attr_filter,
-        s_max=s_max, interpret=interpret,
+        a_live=a_live, s_max=s_max, interpret=interpret,
     )
 
 
@@ -54,11 +58,19 @@ def topk_merge(cands, k, *, interpret: bool | None = None):
     return merge_topk(cands, k, interpret=interpret)
 
 
+def topk_merge_rows(cands, k, *, interpret: bool | None = None):
+    """Row-wise (per-query) top-k merge — the batched master merge."""
+    if interpret is None:
+        interpret = default_interpret()
+    return merge_topk_rows(cands, k, interpret=interpret)
+
+
 __all__ = [
     "intersect",
     "intersect_batched",
     "sort",
     "topk_merge",
+    "topk_merge_rows",
     "compute_skip_map",
     "skip_fraction",
     "ref",

@@ -49,12 +49,18 @@ def _tile_member(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return m
 
 
-def _fused_keep(a, a_attr, attr_filter, enabled) -> jnp.ndarray:
-    """Validity + embedded-attribute predicate, fused in one pass —
-    the paper's "one sequential scan of the posting list" (Fig 4(b))."""
+def _fused_keep(a, a_attr, attr_filter, enabled, live=None) -> jnp.ndarray:
+    """Validity + embedded-attribute predicate — plus, when ``live`` is
+    given, the online-update tombstone predicate (repro.indexing): a
+    posting whose document was deleted (or superseded by a delta version)
+    arrives with live=0 and dies here.  All fused in one pass — the
+    paper's "one sequential scan of the posting list" (Fig 4(b))."""
     valid = a != INVALID_DOC
     attr_ok = a_attr == attr_filter
-    return (valid & jnp.where(enabled, attr_ok, True)).astype(jnp.int32)
+    keep = valid & jnp.where(enabled, attr_ok, True)
+    if live is not None:
+        keep = keep & (live != 0)
+    return keep.astype(jnp.int32)
 
 
 def _clamp_s_max(s_max: int | None, num_b: int) -> int:
@@ -211,6 +217,7 @@ def _intersect_batched_kernel(
     # VMEM:
     a_ref,          # (1,8,128)   driver-window docids of query q, tile i
     a_attr_ref,     # (1,8,128)   driver attribute stream (embed or gathered)
+    a_live_ref,     # (1,8,128)   driver tombstone stream (0 = dead posting)
     b_ref,          # (1,1,8,128) current other-term tile
     out_ref,        # (1,8,128)   int32 final mask (AND over terms)
     member_ref,     # (8,128)     int32 scratch: per-term OR accumulator
@@ -248,11 +255,12 @@ def _intersect_batched_kernel(
         term_ok = jnp.where(active, member_ref[...], 1)
         out_ref[0] = out_ref[0] * term_ok
 
-    # Last term slot: fuse validity + embedded-attribute predicate.
+    # Last term slot: fuse validity + attribute + tombstone predicates.
     @pl.when((t == t_slots - 1) & (j == s_max - 1))
     def _finalize():
         keep = _fused_keep(
-            a_ref[0], a_attr_ref[0], attr_ref[q, 0], attr_ref[q, 1] != 0
+            a_ref[0], a_attr_ref[0], attr_ref[q, 0], attr_ref[q, 1] != 0,
+            live=a_live_ref[0],
         )
         out_ref[0] = out_ref[0] * keep
 
@@ -265,12 +273,17 @@ def intersect_batched_block_skip(
     active: jnp.ndarray,       # int32[Q, T]    1 iff slot t joins query q
     attr_filter: jnp.ndarray,  # int32[Q]       NO_ATTR(-1) = unrestricted
     *,
+    a_live: jnp.ndarray | None = None,  # int32[Q, W] tombstone stream; None = all live
     s_max: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Batched ZigZag join: mask of each query's driver postings that occur
     in *every* active other-term window, fused with the per-query embedded-
-    attribute predicate and validity.  Returns int32[Q, W] in {0,1}.
+    attribute predicate, validity, and — when ``a_live`` is given — the
+    online-update tombstone predicate (a deleted/superseded posting carries
+    live=0 and is filtered in the same finalize pass, so the merge-on-read
+    path never needs a separate host-side masking sweep over the driver).
+    Returns int32[Q, W] in {0,1}.
 
     One ``pallas_call`` serves the whole query batch: grid
     ``(Q, num_a_tiles, T, s_max)``, with per-(query, term, A-tile) skip
@@ -278,8 +291,11 @@ def intersect_batched_block_skip(
     """
     q_n, n_a = a_docs.shape
     t_slots = b_docs.shape[1]
+    if a_live is None:
+        a_live = jnp.ones_like(a_docs)
     a = _pad_to_tile(a_docs, INVALID_DOC)
     aa = _pad_to_tile(a_attrs, -1)
+    al = _pad_to_tile(a_live.astype(jnp.int32), 0)
     b = _pad_to_tile(b_docs, INVALID_DOC)
     num_a = a.shape[1] // TILE
     num_b = b.shape[2] // TILE
@@ -301,6 +317,7 @@ def intersect_batched_block_skip(
 
     a2 = a.reshape(q_n, num_a * TILE_ROWS, LANES)
     aa2 = aa.reshape(q_n, num_a * TILE_ROWS, LANES)
+    al2 = al.reshape(q_n, num_a * TILE_ROWS, LANES)
     b2 = b.reshape(q_n, t_slots, num_b * TILE_ROWS, LANES)
 
     def a_map(q, i, t, j, b_start_ref, n_b_ref, active_ref, attr_ref):
@@ -326,6 +343,7 @@ def intersect_batched_block_skip(
         in_specs=[
             pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
             pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
+            pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
             pl.BlockSpec((1, 1, TILE_ROWS, LANES), b_map),
         ],
         out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
@@ -340,7 +358,7 @@ def intersect_batched_block_skip(
             (q_n, num_a * TILE_ROWS, LANES), jnp.int32
         ),
         interpret=interpret,
-    )(b_start, n_b, active, attr_params, a2, aa2, b2)
+    )(b_start, n_b, active, attr_params, a2, aa2, al2, b2)
     return out.reshape(q_n, -1)[:, :n_a]
 
 

@@ -82,3 +82,36 @@ def merge_topk(
     """
     flat = cands.reshape(-1)
     return bitonic_sort(flat, interpret=interpret)[:k]
+
+
+# ---------------------------------------------------------------------------
+# Batched (per-query-row) variant — the master merge of the engine
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def merge_topk_rows(
+    cands: jnp.ndarray, k: int, *, interpret: bool = False
+) -> jnp.ndarray:
+    """Row-wise top-k merge: ``(Q, m)`` candidate ids -> ``(Q, k)`` best,
+    ascending per row.
+
+    This is the master's loser tree for a whole query batch in ONE
+    pallas_call: the grid walks queries, each step bitonic-sorts one row's
+    concatenated per-slave candidates (m = 2k for a tournament round,
+    ns*k for the centralized all-gather merge) and keeps the k smallest.
+    Used by the distributed merge (:mod:`repro.core.parallel`) when the
+    engine runs under ``backend="pallas"``.
+    """
+    q_n, m = cands.shape
+    mpad = max(256, _next_pow2(m))  # >=2 lane rows keeps the layout 2D-friendly
+    rows = mpad // 128
+    xp = jnp.pad(cands, ((0, 0), (0, mpad - m)), constant_values=INVALID_DOC)
+    out = pl.pallas_call(
+        _sort_kernel,  # grid block (1, rows, 128): same flatten-sort body
+        grid=(q_n,),
+        out_shape=jax.ShapeDtypeStruct((q_n, rows, 128), cands.dtype),
+        in_specs=[pl.BlockSpec((1, rows, 128), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, rows, 128), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(xp.reshape(q_n, rows, 128))
+    return out.reshape(q_n, -1)[:, :k]

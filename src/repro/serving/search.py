@@ -7,6 +7,16 @@ Host-side wrapper that owns a sharded index + mesh and turns raw
 constructor knob, so the same service object serves CPU CI
 (``backend="pallas", interpret=True``) and TPU production
 (``backend="pallas"``) without touching the query path.
+
+**Online updates** (repro.indexing): constructing the service with
+``updatable=True`` (or passing an existing :class:`DeltaWriter`) attaches
+the transactional write path.  :meth:`SearchService.insert` /
+:meth:`~SearchService.delete` / :meth:`~SearchService.update` mutate the
+delta; the next ``search``/``search_batch`` snapshots it and every slave
+answers with merge-on-read, so live traffic sees each mutation at the
+following batch — the paper's "no batch rebuild" freshness story.
+:meth:`SearchService.compact` (or ``auto_compact``) folds a filled delta
+back into a fresh main index between batches.
 """
 from __future__ import annotations
 
@@ -19,6 +29,9 @@ import jax
 from repro.core.engine import make_query_batch
 from repro.core.index import INVALID_DOC, IndexMeta, ShardedIndex
 from repro.core.parallel import SearchResult, distributed_query_topk
+from repro.data.corpus import Corpus
+from repro.indexing.compaction import compact as _compact
+from repro.indexing.delta import DeltaWriter
 
 
 @dataclasses.dataclass
@@ -33,7 +46,16 @@ class SearchService:
     """Serve search queries over a sharded index on a device mesh.
 
     Parameters mirror :func:`distributed_query_topk`; ``backend`` selects
-    the per-slave execution engine (see :func:`repro.core.engine.query_topk`).
+    the execution engine for the slave join *and* the master merge (see
+    :func:`repro.core.engine.query_topk`).
+
+    Online updates: pass ``updatable=True`` together with the ``corpus``
+    the index was built from (a :class:`DeltaWriter` is created), or pass
+    a ready ``writer``.  ``auto_compact`` (a fill fraction in (0, 1], or
+    None to disable) folds the delta into a fresh main index whenever a
+    mutation pushes the *posting* fill past the threshold (document
+    headroom is lifetime-fixed and never triggers compaction; exhausting
+    it raises DeltaFullError at insert time).
     """
 
     def __init__(
@@ -50,6 +72,12 @@ class SearchService:
         merge: str = "tournament",
         backend: str = "jnp",
         interpret: bool | None = None,
+        corpus: Corpus | None = None,
+        updatable: bool = False,
+        writer: DeltaWriter | None = None,
+        term_capacity: int = 256,
+        doc_headroom: int = 1024,
+        auto_compact: float | None = None,
     ):
         self.index = index
         self.meta = meta
@@ -62,18 +90,84 @@ class SearchService:
         self.merge = merge
         self.backend = backend
         self.interpret = interpret
+        self.auto_compact = auto_compact
+        if writer is None and updatable:
+            if corpus is None:
+                raise ValueError("updatable=True needs the base corpus")
+            writer = DeltaWriter(
+                corpus, meta, ns,
+                term_capacity=term_capacity, doc_headroom=doc_headroom,
+            )
+        if writer is not None:
+            # A mismatched writer would stripe delta docIDs with the wrong
+            # d % ns map (silently wrong results) — fail loudly instead.
+            if writer.ns != ns:
+                raise ValueError(
+                    f"writer.ns={writer.ns} != service ns={ns}"
+                )
+            if writer.n_terms != meta.n_terms:
+                raise ValueError(
+                    f"writer n_terms={writer.n_terms} != index {meta.n_terms}"
+                )
+        self.writer = writer
+
+    # ------------------------------------------------------------------
+    # write path
+    # ------------------------------------------------------------------
+
+    def _require_writer(self) -> DeltaWriter:
+        if self.writer is None:
+            raise RuntimeError("service is read-only (no DeltaWriter attached)")
+        return self.writer
+
+    def insert(self, docs) -> list[int]:
+        """Insert ``(terms, site)`` documents; returns global docIDs."""
+        gids = self._require_writer().insert_docs(docs)
+        self._maybe_compact()
+        return gids
+
+    def delete(self, docids) -> None:
+        self._require_writer().delete_docs(docids)
+        self._maybe_compact()
+
+    def update(self, updates) -> None:
+        """Apply ``(docid, new_terms, new_site_or_None)`` updates."""
+        self._require_writer().update_docs(updates)
+        self._maybe_compact()
+
+    def compact(self, *, verify: bool = False) -> None:
+        """Fold the delta into a fresh main index and swap it in."""
+        writer = self._require_writer()
+        self.index, self.meta = _compact(writer, verify=verify)
+
+    def _maybe_compact(self) -> None:
+        if (
+            self.auto_compact is not None
+            and self.writer is not None
+            and self.writer.needs_compaction(self.auto_compact)
+        ):
+            self.compact()
+
+    # ------------------------------------------------------------------
+    # read path
+    # ------------------------------------------------------------------
 
     def search_batch(
         self, queries: list[tuple[list[int], int | None]]
     ) -> SearchResult:
-        """Run one batch end-to-end on the mesh; returns device arrays."""
+        """Run one batch end-to-end on the mesh; returns device arrays.
+
+        With a writer attached the batch runs merge-on-read against the
+        current delta snapshot (per-batch snapshot isolation)."""
         batch = make_query_batch(
             queries, t_max=self.t_max, meta=self.meta, strategy=self.strategy
         )
         attr_strategy = self.strategy
+        delta = None if self.writer is None else self.writer.device_delta()
         return distributed_query_topk(
             self.index,
             batch,
+            delta,
             mesh=self.mesh,
             ns=self.ns,
             k=self.k,

@@ -1,0 +1,250 @@
+"""DeltaIndex/DeltaWriter structure invariants: layout parity with the
+main index, tombstone semantics, capacity accounting, compaction."""
+import numpy as np
+import pytest
+
+from repro.core.index import BLOCK, INVALID_ATTR, INVALID_DOC, build_index
+from repro.data.corpus import (
+    CorpusConfig,
+    MutationConfig,
+    apply_mutations,
+    generate_corpus,
+    generate_mutations,
+)
+from repro.indexing import (
+    DOC_DEAD,
+    DOC_SUPERSEDED,
+    CompactionMismatch,
+    DeltaFullError,
+    DeltaWriter,
+    compact,
+    fold_corpus,
+    maybe_compact,
+)
+
+
+@pytest.fixture()
+def setup():
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=240, vocab_size=90, mean_doc_len=15, n_sites=6, seed=9)
+    )
+    _, meta = build_index(corpus)
+    return corpus, meta
+
+
+def _mutated_writer(corpus, meta, ns=2, n_ops=60, seed=4):
+    w = DeltaWriter(corpus, meta, ns, term_capacity=BLOCK, doc_headroom=128)
+    muts = generate_mutations(
+        corpus, MutationConfig(n_ops=n_ops, mean_doc_len=15, seed=seed)
+    )
+    w.apply(muts)
+    return w, muts
+
+
+def test_delta_layout_invariants(setup):
+    """Same CSR + skip-table layout family as the main index."""
+    corpus, meta = setup
+    w, _ = _mutated_writer(corpus, meta)
+    d = w.device_delta()
+    cap = w.term_capacity
+    assert cap % BLOCK == 0
+    offsets = np.asarray(d.offsets)
+    lengths = np.asarray(d.lengths)
+    postings = np.asarray(d.postings)
+    attrs = np.asarray(d.attrs)
+    bm = np.asarray(d.block_max)
+    assert np.all(offsets % BLOCK == 0), "delta lists must be BLOCK-aligned"
+    assert postings.shape[-1] % BLOCK == 0
+    np.testing.assert_array_equal(
+        bm, postings.reshape(w.ns, -1, BLOCK).max(axis=2)
+    )
+    for s in range(w.ns):
+        for t in range(0, meta.n_terms, 7):
+            o, n = offsets[s, t], lengths[s, t]
+            seg = postings[s, o:o + n]
+            assert np.all(np.diff(seg) > 0), (s, t, seg)
+            assert np.all(postings[s, o + n:o + cap] == INVALID_DOC)
+            assert np.all(attrs[s, o + n:o + cap] == INVALID_ATTR)
+
+
+def test_delta_attrs_embed_doc_site(setup):
+    """Embedded attribute of every delta posting == its doc's current site."""
+    corpus, meta = setup
+    w, _ = _mutated_writer(corpus, meta)
+    d = w.device_delta()
+    offsets, lengths = np.asarray(d.offsets), np.asarray(d.lengths)
+    postings, attrs = np.asarray(d.postings), np.asarray(d.attrs)
+    doc_site = np.asarray(d.doc_site)
+    for s in range(w.ns):
+        for t in range(meta.n_terms):
+            o, n = offsets[s, t], lengths[s, t]
+            docs, sites = postings[s, o:o + n], attrs[s, o:o + n]
+            np.testing.assert_array_equal(sites, doc_site[s, docs])
+
+
+def test_tombstone_bits(setup):
+    corpus, meta = setup
+    w = DeltaWriter(corpus, meta, ns=2, term_capacity=BLOCK, doc_headroom=64)
+    w.delete_docs([3])
+    w.update_docs([(10, [1, 2], None)])
+    gid = w.insert_docs([([4, 5], 1)])[0]
+    flags = np.asarray(w.device_delta().doc_flags)
+
+    def flag_of(g):
+        return flags[g % 2, g // 2]
+
+    assert flag_of(3) & int(DOC_DEAD)
+    assert flag_of(10) & int(DOC_SUPERSEDED)
+    assert not flag_of(10) & int(DOC_DEAD)
+    assert flag_of(gid) == 0
+    # deleting an updated doc kills it everywhere and reclaims delta room
+    before = int(np.asarray(w.device_delta().lengths).sum())
+    w.delete_docs([10])
+    after = int(np.asarray(w.device_delta().lengths).sum())
+    assert after < before
+    flags2 = np.asarray(w.device_delta().doc_flags)
+    assert flags2[10 % 2, 10 // 2] & int(DOC_DEAD)
+
+
+def test_insert_striping(setup):
+    """New docIDs stripe with the same d % ns map as the base partition."""
+    corpus, meta = setup
+    ns = 3
+    w = DeltaWriter(corpus, meta, ns, term_capacity=BLOCK, doc_headroom=99)
+    gids = w.insert_docs([([1], 0), ([2], 1), ([3], 2), ([4], 3)])
+    assert gids == [corpus.n_docs + i for i in range(4)]
+    d = w.device_delta()
+    lengths = np.asarray(d.lengths)
+    postings = np.asarray(d.postings)
+    offsets = np.asarray(d.offsets)
+    for gid, t in zip(gids, [1, 2, 3, 4]):
+        s, local = gid % ns, gid // ns
+        o, n = offsets[s, t], lengths[s, t]
+        assert local in postings[s, o:o + n]
+
+
+def test_capacity_errors(setup):
+    corpus, meta = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=2, doc_headroom=512)
+    assert w.term_capacity == BLOCK  # rounded up to one block
+    docs = [([0], 0)] * (BLOCK + 1)
+    with pytest.raises(DeltaFullError):
+        w.insert_docs(docs)
+    # the failing insert is atomic: exactly BLOCK postings landed
+    assert int(np.asarray(w.device_delta().lengths)[0, 0]) == BLOCK
+
+    # doc headroom is exact, not rounded up to the BLOCK-padded array width
+    w2 = DeltaWriter(corpus, meta, ns=1, term_capacity=8 * BLOCK,
+                     doc_headroom=2)
+    w2.insert_docs([([1], 0), ([2], 0)])
+    assert w2.doc_fill() == 1.0
+    with pytest.raises(DeltaFullError) as ei:
+        w2.insert_docs([([1], 0)])
+    assert ei.value.applied == 0
+
+
+def test_partial_batch_stays_visible(setup):
+    """A mid-batch DeltaFullError leaves the applied prefix visible to the
+    next snapshot (per-item version bumps) and reports the resume offset."""
+    corpus, meta = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=BLOCK, doc_headroom=512)
+    pre = w.device_delta()
+    docs = [([0], 0)] * (BLOCK + 5)
+    with pytest.raises(DeltaFullError) as ei:
+        w.insert_docs(docs)
+    assert ei.value.applied == BLOCK
+    post = w.device_delta()
+    assert post is not pre, "applied prefix must invalidate the snapshot"
+    assert int(np.asarray(post.lengths)[0, 0]) == BLOCK
+    assert w.n_docs == corpus.n_docs + BLOCK  # mirror agrees with snapshot
+
+
+def test_needs_compaction_ignores_doc_headroom(setup):
+    """doc headroom is lifetime-fixed: it must not trigger (futile)
+    compaction; only the drainable posting fill does."""
+    corpus, meta = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=4 * BLOCK,
+                    doc_headroom=8)
+    for i in range(8):
+        w.insert_docs([([i], 0)])
+    assert w.doc_fill() == 1.0
+    assert not w.needs_compaction(0.5)
+    compact(w)  # drains postings; doc_fill stays consumed
+    assert w.doc_fill() == 1.0
+    assert not w.needs_compaction(0.5)
+
+
+def test_fill_and_needs_compaction(setup):
+    corpus, meta = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=BLOCK, doc_headroom=400)
+    assert w.fill() == 0.0
+    assert not w.needs_compaction(0.01)
+    for _ in range(BLOCK // 2):
+        w.insert_docs([([7], 0)])
+    assert w.posting_fill() == pytest.approx(0.5)
+    assert w.needs_compaction(0.5)
+    assert not w.needs_compaction(0.9)
+
+
+def test_update_moves_site(setup):
+    """A site-changing update rewrites doc_site, the embedded attrs, and the
+    site pseudo-term posting lists (Fig 1(d)) in the delta."""
+    corpus, meta = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=BLOCK, doc_headroom=64)
+    gid = 17
+    old_site = int(corpus.doc_site[gid])
+    new_site = (old_site + 1) % meta.n_sites
+    w.update_docs([(gid, [3], new_site)])
+    d = w.device_delta()
+    assert int(np.asarray(d.doc_site)[0, gid]) == new_site
+    t = meta.vocab_size + new_site
+    o = int(np.asarray(d.offsets)[0, t])
+    n = int(np.asarray(d.lengths)[0, t])
+    assert gid in np.asarray(d.postings)[0, o:o + n]
+
+
+def test_snapshot_cached_per_version(setup):
+    corpus, meta = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=BLOCK, doc_headroom=64)
+    a = w.device_delta()
+    assert w.device_delta() is a
+    w.insert_docs([([1], 0)])
+    assert w.device_delta() is not a
+
+
+def test_fold_and_compaction_verify(setup):
+    """fold_corpus == apply_mutations, and compact(verify=True) passes;
+    corrupting the writer's mirror makes verification fail."""
+    corpus, meta = setup
+    w, muts = _mutated_writer(corpus, meta, ns=2)
+    folded = fold_corpus(w)
+    want = apply_mutations(corpus, muts)
+    assert folded.n_docs == want.n_docs
+    np.testing.assert_array_equal(folded.doc_offsets, want.doc_offsets)
+    np.testing.assert_array_equal(folded.doc_terms, want.doc_terms)
+    np.testing.assert_array_equal(folded.doc_site, want.doc_site)
+
+    new_index, new_meta = compact(w, verify=True)
+    assert new_meta.n_docs == want.n_docs
+    assert w.fill() == w.doc_fill()  # posting delta drained
+    # post-compaction writer keeps accepting mutations
+    w.insert_docs([([1, 2], 0)])
+
+    w2, _ = _mutated_writer(corpus, meta, ns=2, seed=5)
+    w2._docs[0] = np.asarray([0, 1, 2], np.int32)  # corrupt the mirror
+    with pytest.raises(CompactionMismatch):
+        compact(w2, verify=True)
+
+
+def test_maybe_compact_threshold(setup):
+    corpus, meta = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=BLOCK, doc_headroom=400)
+    from repro.core.index import build_sharded_index
+
+    index, meta_s = build_sharded_index(corpus, 1)
+    i2, m2, ran = maybe_compact(w, index, meta_s, threshold=0.5)
+    assert not ran and i2 is index
+    for _ in range(BLOCK // 2):
+        w.insert_docs([([7], 0)])
+    i3, m3, ran = maybe_compact(w, index, meta_s, threshold=0.5, verify=True)
+    assert ran and m3.n_docs == corpus.n_docs + BLOCK // 2

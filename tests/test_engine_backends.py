@@ -130,6 +130,26 @@ def test_distributed_backend_flag_forwards(setup):
     np.testing.assert_array_equal(np.asarray(rj.n_hits), np.asarray(rp.n_hits))
 
 
+def test_distributed_pallas_master_merge(setup):
+    """backend='pallas' also routes the master merge through the bitonic
+    top-k kernel (allgather exercises it even on a 1-device mesh)."""
+    corpus, _, meta = setup
+    ns = 1
+    sharded, smeta = build_sharded_index(corpus, ns)
+    mesh = jax.make_mesh((ns,), ("data",))
+    qb = make_query_batch(QUERIES, t_max=4, meta=smeta)
+    rj = distributed_query_topk(
+        sharded, qb, mesh=mesh, ns=ns, k=10, window=1024,
+        merge="allgather", backend="jnp",
+    )
+    rp = distributed_query_topk(
+        sharded, qb, mesh=mesh, ns=ns, k=10, window=1024,
+        merge="allgather", backend="pallas", interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(rj.docids), np.asarray(rp.docids))
+    np.testing.assert_array_equal(np.asarray(rj.n_hits), np.asarray(rp.n_hits))
+
+
 def test_search_service_backends(setup):
     """The serving front-end threads backend= down to the slaves."""
     corpus, _, _ = setup

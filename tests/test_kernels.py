@@ -125,6 +125,27 @@ else:
         pass
 
 
+@pytest.mark.parametrize("q,m,k", [(1, 20, 10), (8, 20, 10), (5, 64, 16),
+                                   (3, 7, 7), (16, 300, 10)])
+def test_merge_topk_rows_sweep(q, m, k):
+    """Batched master merge: per-row best-k of concatenated candidates."""
+    c = np.sort(RNG.integers(0, 1 << 28, size=(q, m)).astype(np.int32), axis=1)
+    got = ops.topk_merge_rows(jnp.asarray(c), k)
+    want = np.sort(c, axis=1)[:, :k]
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_merge_topk_rows_with_invalid_padding():
+    """INVALID_DOC candidates (shards with < k hits) sort after real ids."""
+    c = np.full((4, 24), INVALID_DOC, np.int32)
+    c[0, :3] = [5, 9, 11]
+    c[2, :1] = [7]
+    got = np.asarray(ops.topk_merge_rows(jnp.asarray(c), 5))
+    np.testing.assert_array_equal(got[0], [5, 9, 11, INVALID_DOC, INVALID_DOC])
+    np.testing.assert_array_equal(got[1], [INVALID_DOC] * 5)
+    np.testing.assert_array_equal(got[2], [7] + [INVALID_DOC] * 4)
+
+
 def test_skip_fraction_increases_with_disjointness():
     """Disjoint ranges skip everything; identical ranges skip nothing."""
     a = sorted_list(4096, 4000, hi=50_000)

@@ -1,0 +1,110 @@
+"""Striping round-trip: partition_corpus and local_to_global_docids invert
+each other — for base docs, for freshly inserted (delta) docIDs, and when
+ns does not divide n_docs."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:  # property tests degrade to skips in bare envs; plain tests still run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.index import (
+    INVALID_DOC,
+    build_index,
+    local_to_global_docids,
+    partition_corpus,
+)
+from repro.data.corpus import CorpusConfig, generate_corpus
+from repro.indexing import DeltaWriter
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    # 101 docs: prime, so most ns choices do NOT divide it
+    return generate_corpus(
+        CorpusConfig(n_docs=101, vocab_size=60, mean_doc_len=10, n_sites=5, seed=2)
+    )
+
+
+@pytest.mark.parametrize("ns", [1, 2, 3, 4, 7, 101, 128])
+def test_partition_covers_each_doc_once(corpus, ns):
+    parts = partition_corpus(corpus, ns)
+    assert len(parts) == ns
+    seen = []
+    for s, p in enumerate(parts):
+        # shard sizes differ by at most one when ns does not divide n_docs
+        expect = len(range(s, corpus.n_docs, ns))
+        assert p.n_docs == expect
+        seen.extend(local * ns + s for local in range(p.n_docs))
+    assert sorted(seen) == list(range(corpus.n_docs))
+
+
+@pytest.mark.parametrize("ns", [2, 3, 7])
+def test_roundtrip_content_identity(corpus, ns):
+    """global -> (shard, local) -> global preserves content and metadata."""
+    parts = partition_corpus(corpus, ns)
+    for g in range(corpus.n_docs):
+        s, local = g % ns, g // ns
+        p = parts[s]
+        back = int(
+            local_to_global_docids(jnp.int32(local), jnp.int32(s), ns)
+        )
+        assert back == g
+        np.testing.assert_array_equal(p.terms_of(local), corpus.terms_of(g))
+        assert p.doc_site[local] == corpus.doc_site[g]
+
+
+@pytest.mark.parametrize("ns", [2, 3, 4])
+def test_roundtrip_inserted_delta_docids(corpus, ns):
+    """Inserted docs extend the striping map seamlessly: the writer's
+    (shard, local) placement inverts back to the assigned global id."""
+    _, meta = build_index(corpus)
+    w = DeltaWriter(corpus, meta, ns, doc_headroom=32)
+    gids = w.insert_docs([([1, 2], 0)] * 10)
+    assert gids == list(range(corpus.n_docs, corpus.n_docs + 10))
+    for g in gids:
+        s, local = g % ns, g // ns
+        back = int(
+            local_to_global_docids(jnp.int32(local), jnp.int32(s), ns)
+        )
+        assert back == g
+    # per-shard insert counts are balanced to within one doc
+    counts = [sum(1 for g in gids if g % ns == s) for s in range(ns)]
+    assert max(counts) - min(counts) <= 1
+
+
+def test_invalid_passes_through():
+    out = local_to_global_docids(
+        jnp.asarray([0, INVALID_DOC, 5], jnp.int32), jnp.int32(1), 4
+    )
+    assert list(np.asarray(out)) == [1, INVALID_DOC, 21]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_docs=st.integers(1, 300),
+        ns=st.integers(1, 17),
+        extra=st.integers(0, 40),
+    )
+    def test_striping_bijection_property(n_docs, ns, extra):
+        """local*ns + shard is a bijection over base + inserted docIDs."""
+        total = n_docs + extra
+        gids = np.arange(total)
+        shards = gids % ns
+        locals_ = gids // ns
+        back = np.asarray(
+            local_to_global_docids(
+                jnp.asarray(locals_, jnp.int32), jnp.asarray(shards, jnp.int32), ns
+            )
+        )
+        np.testing.assert_array_equal(back, gids)
+        # inverse direction: each (shard, local) pair is unique
+        assert len({(int(s), int(l)) for s, l in zip(shards, locals_)}) == total
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_striping_bijection_property():
+        pass

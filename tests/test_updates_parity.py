@@ -1,0 +1,204 @@
+"""Acceptance: merge-on-read over a randomized insert/delete/update stream
+is IDENTICAL (docids + n_hits) to a from-scratch rebuild over the mutated
+corpus — on both the jnp and pallas (interpret) backends, with and without
+compaction, for single shards, striped multi-shard layouts, and the full
+SearchService front-end."""
+import numpy as np
+import pytest
+import jax
+
+from repro.core.engine import make_query_batch, query_topk
+from repro.core.index import build_index, build_sharded_index, partition_corpus
+from repro.core.parallel import sequential_reference
+from repro.data.corpus import (
+    CorpusConfig,
+    MutationConfig,
+    apply_mutations,
+    generate_corpus,
+    generate_mutations,
+)
+from repro.indexing import DeltaWriter, compact
+from repro.indexing.delta import local_delta
+from repro.serving.search import SearchService
+
+WINDOW = 1024
+BACKENDS = ("jnp", "pallas")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=400, vocab_size=150, mean_doc_len=25,
+                     n_sites=10, seed=13)
+    )
+    _, meta = build_index(corpus)
+    muts = generate_mutations(
+        corpus,
+        MutationConfig(n_ops=80, p_insert=0.45, p_delete=0.25, p_update=0.3,
+                       mean_doc_len=25, seed=21),
+    )
+    mutated = apply_mutations(corpus, muts)
+    return corpus, meta, muts, mutated
+
+
+QUERIES = [
+    ([3], None),            # single keyword, hot list
+    ([3, 9], None),         # join
+    ([1, 4, 12], None),     # 3-way join
+    ([2], 3),               # limited search
+    ([5, 8], 1),            # limited search join
+    ([140], None),          # rare keyword
+    ([0, 7], 5),            # limited join, hot terms
+]
+
+
+def _run(idx, delta, qb, backend):
+    return query_topk(
+        idx, qb, delta=delta, k=10, window=WINDOW,
+        backend=backend, interpret=True if backend == "pallas" else None,
+    )
+
+
+def _assert_equal(got, want, ctx):
+    np.testing.assert_array_equal(
+        np.asarray(got[0]), np.asarray(want[0]), err_msg=str(ctx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got[1]), np.asarray(want[1]), err_msg=str(ctx)
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_single_shard_stream_parity(setup, backend):
+    """Parity is maintained at every prefix checkpoint of the stream."""
+    corpus, meta, muts, _ = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=256, doc_headroom=128)
+    idx, _ = build_index(corpus)
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    checkpoints = (20, 50, 80)
+    done = 0
+    for stop in checkpoints:
+        w.apply(muts[done:stop])
+        done = stop
+        delta = local_delta(w.device_delta())
+        got = _run(idx, delta, qb, backend)
+        rebuilt, _ = build_index(apply_mutations(corpus, muts[:stop]))
+        want = _run(rebuilt, None, qb, "jnp")
+        _assert_equal(got, want, (backend, stop))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("strategy", ["embed", "gather", "site_term"])
+def test_single_shard_all_strategies(setup, backend, strategy):
+    corpus, meta, muts, mutated = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=256, doc_headroom=128)
+    w.apply(muts)
+    idx, _ = build_index(corpus)
+    rebuilt, rmeta = build_index(mutated)
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta, strategy=strategy)
+    delta = local_delta(w.device_delta())
+    got = query_topk(idx, qb, delta=delta, k=10, window=WINDOW,
+                     attr_strategy=strategy, backend=backend,
+                     interpret=True if backend == "pallas" else None)
+    want = query_topk(rebuilt, qb, k=10, window=WINDOW,
+                      attr_strategy=strategy)
+    _assert_equal(got, want, (backend, strategy))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_multi_shard_striped_parity(setup, backend):
+    """ns=2: per-shard merge-on-read + global merge == rebuild, and the
+    striping map keeps global docIDs consistent across inserts."""
+    corpus, meta, muts, mutated = setup
+    ns = 2
+    w = DeltaWriter(corpus, meta, ns, term_capacity=256, doc_headroom=128)
+    w.apply(muts)
+    base_shards = [build_index(p)[0] for p in partition_corpus(corpus, ns)]
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    got = sequential_reference(
+        base_shards, qb, ns=ns, k=10, window=WINDOW,
+        deltas=w.shard_deltas(), backend=backend,
+        interpret=True if backend == "pallas" else None,
+    )
+    rebuilt_shards = [build_index(p)[0] for p in partition_corpus(mutated, ns)]
+    want = sequential_reference(rebuilt_shards, qb, ns=ns, k=10, window=WINDOW)
+    _assert_equal(got, want, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_with_compaction(setup, backend):
+    """Compaction folds the delta into a fresh main index (verified against
+    a from-scratch rebuild) and post-compaction queries still match; the
+    writer stays usable for further mutations."""
+    corpus, meta, muts, mutated = setup
+    ns = 2
+    w = DeltaWriter(corpus, meta, ns, term_capacity=256, doc_headroom=128)
+    w.apply(muts[:50])
+    new_sharded, new_meta = compact(w, verify=True)
+
+    # continue mutating after compaction
+    w.apply(muts[50:])
+    from repro.core.index import InvertedIndex
+
+    new_shards = [
+        InvertedIndex(*(x[s] for x in new_sharded)) for s in range(ns)
+    ]
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    got = sequential_reference(
+        new_shards, qb, ns=ns, k=10, window=WINDOW,
+        deltas=w.shard_deltas(), backend=backend,
+        interpret=True if backend == "pallas" else None,
+    )
+    rebuilt_shards = [build_index(p)[0] for p in partition_corpus(mutated, ns)]
+    want = sequential_reference(rebuilt_shards, qb, ns=ns, k=10, window=WINDOW)
+    _assert_equal(got, want, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_search_service_end_to_end(setup, backend):
+    """SearchService write + read path on the mesh (ns=1): live traffic
+    sees every mutation at the next batch; auto-compaction is transparent."""
+    corpus, meta, muts, mutated = setup
+    ns = 1
+    sharded, smeta = build_sharded_index(corpus, ns)
+    mesh = jax.make_mesh((ns,), ("data",))
+    svc = SearchService(
+        sharded, smeta, mesh, ns=ns, k=10, window=WINDOW,
+        backend=backend, interpret=True if backend == "pallas" else None,
+        updatable=True, corpus=corpus, term_capacity=256, doc_headroom=128,
+    )
+    for m in muts:
+        if m.op == "insert":
+            svc.insert([(m.terms, m.site)])
+        elif m.op == "delete":
+            svc.delete([m.docid])
+        else:
+            svc.update([(m.docid, m.terms, m.site)])
+    queries = QUERIES
+    got = svc.search(queries)
+
+    rb_sharded, rb_meta = build_sharded_index(mutated, ns)
+    ref = SearchService(rb_sharded, rb_meta, mesh, ns=ns, k=10, window=WINDOW)
+    want = ref.search(queries)
+    assert [h.docids for h in got] == [h.docids for h in want]
+    assert [h.n_hits for h in got] == [h.n_hits for h in want]
+
+    # compaction through the service front-end
+    svc.compact(verify=True)
+    post = svc.search(queries)
+    assert [h.docids for h in post] == [h.docids for h in want]
+    assert [h.n_hits for h in post] == [h.n_hits for h in want]
+
+
+def test_backend_bit_parity_under_delta(setup):
+    """jnp and pallas agree bit-for-bit on the SAME delta snapshot."""
+    corpus, meta, muts, _ = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=256, doc_headroom=128)
+    w.apply(muts)
+    idx, _ = build_index(corpus)
+    delta = local_delta(w.device_delta())
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    dj, hj = _run(idx, delta, qb, "jnp")
+    dp, hp = _run(idx, delta, qb, "pallas")
+    np.testing.assert_array_equal(np.asarray(dj), np.asarray(dp))
+    np.testing.assert_array_equal(np.asarray(hj), np.asarray(hp))
