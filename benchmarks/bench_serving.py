@@ -1,0 +1,163 @@
+"""Serving-pipeline benchmark: measured vs perf-model-projected response.
+
+Closes the loop the paper closes in §5.1/Fig 11, but against OUR engine:
+
+1. **Calibrate** — :func:`repro.core.calibrate.calibrate_from_engine`
+   measures the slave phase, the master merge, and the slave max from the
+   live mesh and fits a :class:`MasterParams` (never ``PAPER_TABLE3``).
+2. **Measure** — Poisson arrival traces at several rates are replayed
+   through the unified master scheduler
+   (:meth:`repro.serving.scheduler.MasterScheduler.replay`): virtual
+   arrivals + batch-formation deadlines, *real* measured batch service
+   times, per-set occupancy.  The replayed tickets' mean response is the
+   measured curve.
+3. **Project** — Formula (17) via :class:`OdysPerfModel` with the fitted
+   parameters; Formula (18) reports the estimation error per rate.
+
+Also reports the result cache's effect: the same trace replayed with the
+cache enabled (Zipf-repeating queries), with hit rate and mean response.
+
+Emits ``serving,<metric>,<value>,<note>`` CSV lines.  On CPU the pallas
+backend runs under the interpreter (semantics, not speed); the jnp numbers
+are the meaningful CPU baseline.  ``smoke=True`` shrinks everything for
+the CI lambda-sweep smoke step.
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.core.calibrate import calibrate_from_engine
+from repro.core.index import build_sharded_index
+from repro.core.perfmodel import (
+    OdysPerfModel,
+    SINGLE_10_ONLY,
+    engine_cluster,
+    estimation_error,
+)
+from repro.data.corpus import CorpusConfig, generate_corpus
+from repro.serving.search import SearchService
+
+
+def poisson_trace(lam: float, n: int, vocab_head: int, *, repeat_frac: float,
+                  seed: int):
+    """(arrival_time, terms, site) tuples: Poisson arrivals at ``lam``,
+    single-keyword queries, a ``repeat_frac`` share drawn from a small hot
+    set (the cacheable mass of a production stream)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n))
+    hot = rng.integers(0, max(2, vocab_head // 8), size=n)
+    cold = rng.integers(0, vocab_head, size=n)
+    use_hot = rng.random(n) < repeat_frac
+    return [
+        (float(t), [int(h if uh else c)], None)
+        for t, h, c, uh in zip(arrivals, hot, cold, use_hot)
+    ]
+
+
+def _mean_response(tickets) -> float:
+    return float(np.mean([t.response_time for t in tickets]))
+
+
+def main(backend: str = "jnp", smoke: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = None if backend == "jnp" else (not on_tpu)
+    mode = "compiled" if on_tpu else (
+        "interpret" if backend == "pallas" else "jnp"
+    )
+    n_docs = 600 if smoke else 8000
+    vocab = 200 if smoke else 1200
+    window = 512 if smoke else 1024
+    n_queries = 48 if smoke else 240
+    reps = 3 if smoke else 5
+    k_values = (10,) if smoke else (10, 50)
+    batch_size = 4
+
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=n_docs, vocab_size=vocab, mean_doc_len=40,
+                     n_sites=20, seed=7)
+    )
+    ns = 1
+    sharded, meta = build_sharded_index(corpus, ns)
+    mesh = jax.make_mesh((ns,), ("data",))
+
+    # --- 1. closed-loop calibration from the live engine -------------------
+    cal = calibrate_from_engine(
+        sharded, meta, mesh, ns=ns, k_values=k_values, window=window,
+        q=batch_size, reps=reps, backend=backend, interpret=interpret,
+    )
+    for k in k_values:
+        print(f"serving,st_slave_k{k},{cal.st_slave[k]*1e6:.2f},us_{mode}")
+        print(f"serving,st_master_k{k},{cal.st_master[k]*1e6:.2f},us_{mode}")
+        print(f"serving,slave_max_k{k},{cal.slave_max[k]*1e6:.2f},us_{mode}")
+    print(f"serving,t_comparison,{cal.t_comparison*1e9:.2f},ns_fitted")
+    print(f"serving,t_base,{cal.t_base*1e9:.2f},ns_fitted")
+
+    # --- 2. open-loop lambda sweep through the scheduler -------------------
+    def make_service(cache_size: int) -> SearchService:
+        svc = SearchService(
+            sharded, meta, mesh, ns=ns, k=10, window=window, t_max=2,
+            t_max_buckets=(2,), backend=backend, interpret=interpret,
+            batch_size=batch_size, cache_size=cache_size,
+        )
+        return svc
+
+    # capacity probe: one warmed batch's wall time bounds the service rate
+    probe = make_service(cache_size=0)
+    probe_q = [([int(t)], None) for t in range(batch_size)]
+    probe.search(probe_q)
+    t0 = time.perf_counter()
+    probe.search(probe_q)
+    batch_wall = time.perf_counter() - t0
+    mu = batch_size / batch_wall
+    print(f"serving,capacity,{mu:.1f},queries_per_sec_{mode}")
+
+    model = OdysPerfModel(master=cal.master, network=cal.network)
+    cluster = engine_cluster(ns, n_sets=1)
+    mix = SINGLE_10_ONLY
+    for frac in (0.25, 0.5, 0.75):
+        lam = frac * mu
+        svc = make_service(cache_size=0)
+        svc.scheduler.max_wait = batch_wall  # batch-formation deadline
+        trace = poisson_trace(lam, n_queries, min(64, vocab),
+                              repeat_frac=0.0, seed=int(frac * 100))
+        # warm the bucket's trace so replay measures steady-state service
+        svc.search([(terms, site) for _, terms, site in trace[:batch_size]])
+        tickets = svc.scheduler.replay(trace)
+        measured = _mean_response(tickets)
+        # Formula (17) with the fitted params, plus the micro-batcher's
+        # admission delay — a scheduler parameter, not a queueing effect:
+        # a query waits for batch_size-1 more arrivals or the deadline.
+        formation = min(
+            svc.scheduler.max_wait, (batch_size - 1) / (2.0 * lam)
+        )
+        projected = model.total_response_time(
+            lam, cluster, mix, cal.slave_max_time
+        ) + formation
+        err = estimation_error(projected, measured)
+        tag = f"lam{frac:.2f}mu"
+        print(f"serving,{tag}_measured,{measured*1e6:.1f},mean_response_us")
+        print(f"serving,{tag}_model,{projected*1e6:.1f},"
+              f"err_formula18={err:.4f} formation_us={formation*1e6:.1f}")
+
+    # --- 3. result cache under a Zipf-repeating stream ---------------------
+    lam = 0.5 * mu
+    trace = poisson_trace(lam, n_queries, min(64, vocab),
+                          repeat_frac=0.6, seed=11)
+    for cache_size, tag in ((0, "cache_off"), (1024, "cache_on")):
+        svc = make_service(cache_size=cache_size)
+        svc.scheduler.max_wait = batch_wall
+        svc.search([(terms, site) for _, terms, site in trace[:batch_size]])
+        tickets = svc.scheduler.replay(trace)
+        stats = svc.stats()
+        hit_rate = (
+            svc.scheduler.cache.stats.hit_rate()
+            if svc.scheduler.cache is not None else 0.0
+        )
+        print(f"serving,{tag}_response,{_mean_response(tickets)*1e6:.1f},"
+              f"mean_response_us hit_rate={hit_rate:.2f} "
+              f"batches={stats['n_batches']}")
+
+
+if __name__ == "__main__":
+    main()

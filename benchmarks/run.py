@@ -1,13 +1,14 @@
 """Benchmark harness: one module per paper table/figure.
 
 Emits ``name,metric,value,derived`` CSV lines.  Run as:
-    PYTHONPATH=src python -m benchmarks.run [--only fig13] [--backend pallas]
+    PYTHONPATH=src python -m benchmarks.run [--suite fig13] [--backend pallas]
 
 ``--backend jnp|pallas`` selects the execution engine for every suite that
-actually runs the JAX query engine (engine, updates; the dedicated
-``backends`` sweep always measures both).  The fig/table suites drive the
-analytic performance model and DES prototype, which have no execution
-engine — the flag is accepted and ignored there.
+actually runs the JAX query engine (engine, updates, serving; the
+dedicated ``backends`` sweep always measures both).  The fig/table suites
+drive the analytic performance model and DES prototype, which have no
+execution engine — the flag is accepted and ignored there.  ``--smoke``
+shrinks the suites that support it (serving) to CI-sized runs.
 """
 import argparse
 import inspect
@@ -22,6 +23,7 @@ from benchmarks import (
     bench_fig12,
     bench_fig13,
     bench_kernels,
+    bench_serving,
     bench_table3,
     bench_updates,
 )
@@ -35,27 +37,35 @@ SUITES = {
     "kernels": bench_kernels.main,  # Pallas kernel microbenches
     "backends": bench_backends.main,  # jnp vs Pallas engine backend sweep
     "updates": bench_updates.main,  # online-update ingest + freshness
+    "serving": bench_serving.main,  # calibrated lambda sweep, measured vs model
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=sorted(SUITES))
+    ap.add_argument(
+        "--suite", "--only", dest="suite", default=None,
+        choices=sorted(SUITES),
+    )
     ap.add_argument(
         "--backend", default=None, choices=["jnp", "pallas"],
         help="execution engine for the suites that run the JAX engine",
     )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized runs for the suites that support it",
+    )
     args = ap.parse_args()
-    names = [args.only] if args.only else list(SUITES)
+    names = [args.suite] if args.suite else list(SUITES)
     failures = 0
     for name in names:
         fn = SUITES[name]
+        params = inspect.signature(fn).parameters
         kw = {}
-        if (
-            args.backend is not None
-            and "backend" in inspect.signature(fn).parameters
-        ):
+        if args.backend is not None and "backend" in params:
             kw["backend"] = args.backend
+        if args.smoke and "smoke" in params:
+            kw["smoke"] = True
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:

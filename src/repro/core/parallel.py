@@ -192,6 +192,62 @@ def distributed_query_topk(
 @functools.partial(
     jax.jit,
     static_argnames=(
+        "mesh", "ns", "k", "window", "attr_strategy", "axis",
+        "backend", "interpret",
+    ),
+)
+def slave_topk_unmerged(
+    index: ShardedIndex,
+    batch: QueryBatch,
+    delta: ShardedDelta | None = None,
+    *,
+    mesh: Mesh,
+    ns: int,
+    k: int = 10,
+    window: int = 4096,
+    attr_strategy: str = "embed",
+    axis: str = "data",
+    backend: str = "jnp",
+    interpret: bool | None = None,
+) -> SearchResult:
+    """Slave phase only: per-shard local top-k with NO master merge.
+
+    Returns stacked per-shard candidates — ``docids`` int32[ns, Q, k]
+    (already globalized) and ``n_hits`` int32[ns, Q].  This is the
+    calibration probe (:mod:`repro.core.calibrate`): timing it against
+    :func:`distributed_query_topk` on the same batch isolates the master's
+    merge + dispatch cost (Formula (4)'s ``ST_master``) from the slave
+    service time, which is what lets the hybrid perf model be fitted from
+    the live engine instead of the paper's Table 3.
+    """
+    index_spec = jax.tree.map(lambda _: P(axis), index)
+    batch_spec = jax.tree.map(lambda _: P(), batch)
+    delta_spec = jax.tree.map(lambda _: P(axis), delta)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(index_spec, batch_spec, delta_spec),
+        out_specs=SearchResult(P(axis), P(axis)),
+        check_vma=False,
+    )
+    def run(idx: ShardedIndex, qb: QueryBatch, dlt) -> SearchResult:
+        shard = lax.axis_index(axis)
+        local = _local_index(idx)
+        ldelta = None if dlt is None else local_delta(dlt)
+        docs, hits = query_topk(
+            local, qb, delta=ldelta, k=k, window=window,
+            attr_strategy=attr_strategy, backend=backend, interpret=interpret,
+        )
+        gdocs = local_to_global_docids(docs, shard, ns)
+        return SearchResult(gdocs[None], hits[None])
+
+    return run(index, batch, delta)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
         "mesh", "ns", "k", "window", "attr_strategy", "merge", "axis",
         "pod_axis", "backend", "interpret",
     ),

@@ -260,6 +260,14 @@ class OdysPerfModel:
         return lo
 
 
+def engine_cluster(ns: int, n_sets: int = 1) -> ClusterConfig:
+    """ClusterConfig of OUR in-process JAX engine: each replicated set is a
+    single-CPU master pipeline over ``ns`` mesh shards, with no hub tier —
+    used when fitting/projecting against live measurements
+    (:mod:`repro.core.calibrate`) rather than the paper's 5-node system."""
+    return ClusterConfig(nm=n_sets, ncm=1, ns=ns, nh=1, nps=1)
+
+
 def estimation_error(estimated: float, measured: float) -> float:
     """Formula (18)."""
     return abs(estimated - measured) / measured

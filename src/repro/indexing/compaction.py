@@ -88,7 +88,11 @@ def fold_corpus(writer: DeltaWriter) -> Corpus:
 
 
 def compact(
-    writer: DeltaWriter, *, verify: bool = False
+    writer: DeltaWriter,
+    *,
+    verify: bool = False,
+    term_capacity: int | None = None,
+    doc_headroom: int | None = None,
 ) -> tuple[ShardedIndex, IndexMeta]:
     """Fold the delta into a fresh main ShardedIndex and rebase the writer.
 
@@ -96,6 +100,11 @@ def compact(
     against a from-scratch ``build_sharded_index`` over the writer's
     mutated-corpus mirror; a mismatch raises :class:`CompactionMismatch`
     and leaves the writer untouched.
+
+    ``term_capacity``/``doc_headroom`` re-size the delta generation at the
+    boundary (:meth:`DeltaWriter.rebase`): the main index recompiles here
+    anyway, so handing the writer larger delta shapes is free — this is
+    how a growing corpus escapes the otherwise lifetime-fixed headroom.
     """
     folded = fold_corpus(writer)
     new_index, new_meta = build_sharded_index(
@@ -113,7 +122,9 @@ def compact(
         ):
             if not np.array_equal(np.asarray(got), np.asarray(want)):
                 raise CompactionMismatch(f"field {name!r} diverged")
-    writer.rebase(folded)
+    writer.rebase(
+        folded, term_capacity=term_capacity, doc_headroom=doc_headroom
+    )
     return new_index, new_meta
 
 

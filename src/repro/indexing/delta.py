@@ -152,9 +152,12 @@ class DeltaWriter:
         Delta postings per term (rounded up to BLOCK).  A term list that
         fills up raises :class:`DeltaFullError`; compact and retry.
     doc_headroom:
-        Total number of *inserted* documents the writer can ever hold
-        (sized at creation so device shapes stay static; compaction does
-        not reclaim it — create a new writer to regrow).
+        Total number of *inserted* documents the current delta generation
+        can hold (sized so device shapes stay static between compactions).
+        A compaction may hand the writer a larger generation via
+        :meth:`rebase`'s ``doc_headroom``/``term_capacity`` — shapes may
+        change at that boundary because the main index recompiles there
+        anyway.
     """
 
     def __init__(
@@ -185,6 +188,7 @@ class DeltaWriter:
         self._doc_limit_local = n_base_local + self._doc_cap_local
         self.nd_cap = _pad_block(self._doc_limit_local)
 
+        self.generation = 0
         self._shards = [self._fresh_shard(corpus, s) for s in range(ns)]
 
         # Mutated-corpus mirror: authoritative per-doc state, maintained
@@ -221,11 +225,37 @@ class DeltaWriter:
         st.doc_site[: base_sites.shape[0]] = base_sites
         return st
 
-    def rebase(self, folded: Corpus) -> None:
+    def rebase(
+        self,
+        folded: Corpus,
+        *,
+        term_capacity: int | None = None,
+        doc_headroom: int | None = None,
+    ) -> None:
         """Point the writer at a freshly-compacted main index (folded is the
         corpus the new main was built from).  Resets every delta structure;
-        doc shapes stay fixed so jitted query functions keep their traces
-        for the *delta* operands (the main index itself changed shape)."""
+        by default doc shapes stay fixed so jitted query functions keep
+        their traces for the *delta* operands (the main index itself
+        changed shape).
+
+        ``term_capacity``/``doc_headroom`` start a new delta **generation**
+        with re-sized device shapes.  A compaction boundary is the one
+        place this is free: the main index recompiles there anyway, so the
+        delta operands may change shape alongside it.  The new headroom
+        budget counts from the folded corpus (the drained delta's inserts
+        are now base documents), which is what lets a growing corpus keep
+        ingesting past the original lifetime-fixed headroom.
+        """
+        if term_capacity is not None or doc_headroom is not None:
+            if term_capacity is not None:
+                self.term_capacity = _pad_block(max(term_capacity, 1))
+            if doc_headroom is not None:
+                self._doc_cap_local = _ceil_div(max(doc_headroom, 1), self.ns)
+            self._n_base_local_init = _ceil_div(folded.n_docs, self.ns)
+            self._doc_limit_local = self._n_base_local_init + self._doc_cap_local
+            self.nd_cap = _pad_block(self._doc_limit_local)
+            self.generation += 1
+            self._snapshot = None
         if _ceil_div(folded.n_docs, self.ns) > self._doc_limit_local:
             raise DeltaFullError(
                 "folded corpus exceeds the writer's fixed doc capacity"
@@ -418,6 +448,11 @@ class DeltaWriter:
     @property
     def version(self) -> int:
         return self._version
+
+    @property
+    def doc_headroom(self) -> int:
+        """Total inserted-document capacity of the current generation."""
+        return self._doc_cap_local * self.ns
 
     @property
     def base_corpus(self) -> Corpus:

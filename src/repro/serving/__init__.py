@@ -1,0 +1,30 @@
+"""Serving layer: the ODYS master pipeline, unified.
+
+One admission pipeline (:mod:`repro.serving.scheduler`) serves both
+front-ends:
+
+- :mod:`repro.serving.search` — `SearchService`, a thin façade binding the
+  scheduler to the distributed DB-IR query engine: admission queue ->
+  ``(t_max, k)``-bucketed micro-batches (padded, never recompiling) ->
+  version-stamped LRU result cache -> multi-set router -> slave broadcast +
+  master merge on the mesh.
+- :mod:`repro.serving.engine` — `ServingEngine`, the LM decode loop, which
+  reuses the scheduler's micro-batch formation for its request queue.
+
+Closing the loop with the paper's hybrid performance model (§4-§5):
+:mod:`repro.core.calibrate` fits `MasterParams` from this pipeline's live
+measurements, and ``benchmarks/bench_serving.py`` replays Poisson arrival
+traces through `MasterScheduler.replay` to report measured vs projected
+response time with Formula (18) estimation error.
+
+(`repro.serving.engine` is not imported here: it pulls in the LM model
+stack, which search-only users don't need.)
+"""
+from repro.serving.scheduler import (  # noqa: F401
+    MasterScheduler,
+    MultiSetRouter,
+    QueryTicket,
+    ResultCache,
+    form_batch,
+)
+from repro.serving.search import SearchHit, SearchService  # noqa: F401

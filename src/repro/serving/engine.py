@@ -1,10 +1,12 @@
-"""Batched serving engine: request queue -> prefill -> decode loop.
+"""Batched LM serving engine: request queue -> prefill -> decode loop.
 
-Host-side scheduler in the ODYS master role: it admits requests into
-fixed-size batches (the engine's unit of broadcast), runs prefill once and
-then the decode loop, with greedy sampling through the distributed
-vocab-top-k router.  Designed so the same object drives a reduced config
-on CPU (examples/serve_lm.py) and the full mesh on TPU.
+Host-side front-end in the ODYS master role: it admits requests through
+the shared micro-batch formation of :mod:`repro.serving.scheduler`
+(fixed-size batches padded with inert clones — the engine's unit of
+broadcast, never a fresh device shape), runs prefill once and then the
+decode loop, with greedy sampling through the distributed vocab-top-k
+router.  Designed so the same object drives a reduced config on CPU
+(examples/serve_lm.py) and the full mesh on TPU.
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models.model import decode_step, init_model, make_inputs, prefill
 from repro.serving.router import greedy_token
+from repro.serving.scheduler import form_batch
 
 
 @dataclasses.dataclass
@@ -45,16 +48,20 @@ class ServingEngine:
         self.queue.append(req)
 
     def _form_batch(self) -> list[Request]:
-        batch = self.queue[: self.batch_size]
-        self.queue = self.queue[self.batch_size:]
-        while len(batch) < self.batch_size:   # pad with a dummy clone
-            batch.append(Request(rid=-1, prompt=batch[0].prompt,
-                                 max_new_tokens=batch[0].max_new_tokens))
-        return batch
+        """Pop one micro-batch; [] on an empty queue, padded when partial."""
+        return form_batch(
+            self.queue, self.batch_size,
+            pad=lambda first: Request(rid=-1, prompt=first.prompt,
+                                      max_new_tokens=first.max_new_tokens),
+        )
 
     def step_batch(self) -> list[Request]:
-        """Serve one full batch to completion (prefill + decode loop)."""
+        """Serve one full batch to completion (prefill + decode loop).
+
+        No-op (returns ``[]``) when the queue is empty."""
         batch = self._form_batch()
+        if not batch:
+            return []
         plen = max(len(r.prompt) for r in batch)
         toks = np.zeros((self.batch_size, plen), np.int32)
         for i, r in enumerate(batch):

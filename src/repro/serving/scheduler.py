@@ -1,0 +1,475 @@
+"""Unified master scheduler: the ODYS admission pipeline (paper §3.1, §4.1).
+
+The paper's master is not a one-shot function call — it is a pipeline:
+queries arrive at a rate lambda, are weighted into unit queries, queued
+(M/D/1, Formulas (1)-(16)), batched to the slaves, and merged.  This module
+is that pipeline for the JAX engine, shared by both serving front-ends
+(:mod:`repro.serving.search` wraps it around the distributed query engine;
+:mod:`repro.serving.engine` reuses its micro-batch formation for the LM
+decode loop):
+
+- **Admission queue + dynamic micro-batch formation**: submitted queries
+  are bucketed by ``(t_max, k)`` — the two shape-determining parameters of
+  the jitted query path — and dispatched as fixed-size batches.  Partial
+  batches are padded with *inert* clones of a real query (results
+  discarded), so every dispatch reuses one of a small, fixed set of traced
+  shapes: a mixed-``t_max`` workload never retriggers XLA compilation.
+
+- **LRU result cache**, keyed on ``(terms, site, k)`` and stamped with the
+  :class:`~repro.indexing.delta.DeltaWriter` snapshot version at dispatch
+  time.  A lookup whose stamp no longer matches the live version is evicted
+  (lazy invalidation), so merge-on-read freshness is preserved: a cached
+  result is never served across an insert/delete/update/compaction.
+  Orlando et al. (PAPERS.md) put the broker's result cache first among the
+  throughput levers; the version stamp is what makes it safe next to the
+  paper's online-update story.
+
+- **Multi-set router** (paper §5.2): batches spread across ``n_sets``
+  replicated sets with per-set in-flight accounting; the router picks the
+  set that can start earliest.  In-process the sets time-share one mesh
+  (the accounting still models §5.2's linear scale-out in the replay
+  below); a multi-pod deployment dispatches on ``set_id`` instead.
+
+- **Trace-driven replay** (:meth:`MasterScheduler.replay`): an open-loop
+  lambda sweep that advances a *virtual* clock over a Poisson arrival trace
+  while measuring *real* batch service times — the measured half of the
+  paper's hybrid model validation (benchmarks/bench_serving.py feeds it to
+  Formula (18) against :class:`~repro.core.perfmodel.OdysPerfModel`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Sequence
+
+__all__ = [
+    "CacheStats",
+    "MasterScheduler",
+    "MultiSetRouter",
+    "QueryTicket",
+    "ResultCache",
+    "SetState",
+    "form_batch",
+]
+
+
+def form_batch(queue: list, batch_size: int, *, pad: Callable | None = None):
+    """Pop up to ``batch_size`` items off the front of ``queue``.
+
+    Returns ``[]`` on an empty queue (no crash, no dispatch).  With ``pad``,
+    a partial batch is filled to exactly ``batch_size`` with ``pad(first)``
+    clones of its first element, so downstream device shapes stay fixed.
+    Shared by the search scheduler and the LM
+    :class:`~repro.serving.engine.ServingEngine`.
+    """
+    if not queue:
+        return []
+    batch = queue[:batch_size]
+    del queue[:batch_size]
+    if pad is not None:
+        first = batch[0]
+        while len(batch) < batch_size:
+            batch.append(pad(first))
+    return batch
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    """One admitted query's lifecycle record.
+
+    ``qid < 0`` marks an inert padding clone (never returned to callers).
+    Times are in the scheduler's clock domain — wall seconds live, virtual
+    seconds under :meth:`MasterScheduler.replay`.
+    """
+
+    qid: int
+    terms: tuple[int, ...]
+    site: int | None
+    k: int
+    bucket: int                    # t_max bucket the query was admitted to
+    submit_time: float
+    result: Any = None
+    done: bool = False
+    from_cache: bool = False
+    finish_time: float | None = None
+    set_id: int | None = None
+
+    @property
+    def response_time(self) -> float:
+        assert self.done and self.finish_time is not None
+        return self.finish_time - self.submit_time
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    stale: int = 0      # entries evicted because the snapshot version moved
+    evicted: int = 0    # LRU capacity evictions
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class ResultCache:
+    """LRU result cache with snapshot-version invalidation.
+
+    Entries are stored as ``key -> (version, result)``.  ``get`` only
+    returns an entry whose stored version equals the caller's current
+    version; a mismatch evicts the entry and counts as ``stale`` (every
+    mutation and every compaction bumps the writer version, so staleness
+    needs no explicit invalidation hook on the write path).
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity > 0
+        self.capacity = capacity
+        self._entries: OrderedDict[tuple, tuple[int, Any]] = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: tuple, version: int, now: float = math.inf):
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        stored_version, available_at, result = entry
+        if stored_version != version:
+            del self._entries[key]
+            self.stats.stale += 1
+            self.stats.misses += 1
+            return None
+        if available_at > now:
+            # The producing batch has not finished yet at ``now`` (this
+            # happens in virtual-time replay): the result exists on the
+            # host but the modeled system could not have served it — treat
+            # as a miss, leave the entry for when it matures.
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return result
+
+    def put(self, key: tuple, version: int, result,
+            available_at: float = 0.0) -> None:
+        self._entries[key] = (version, available_at, result)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evicted += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+@dataclasses.dataclass
+class SetState:
+    """Accounting for one replicated set (paper §5.2)."""
+
+    sid: int
+    in_flight: int = 0       # queries currently dispatched to this set
+    busy_until: float = 0.0  # when the set's current batch finishes
+    n_batches: int = 0
+    n_queries: int = 0
+
+
+class MultiSetRouter:
+    """Spread batches across N replicated sets, least-loaded first.
+
+    Routing key: the set that can *start* earliest (min ``busy_until``),
+    ties broken toward fewer in-flight queries, then lower sid — the
+    paper's multi-set scale-out (§5.2) where each set independently absorbs
+    a slice of the arrival stream.
+    """
+
+    def __init__(self, n_sets: int):
+        assert n_sets >= 1
+        self.sets = [SetState(sid) for sid in range(n_sets)]
+
+    @property
+    def n_sets(self) -> int:
+        return len(self.sets)
+
+    def route(self, n_queries: int) -> SetState:
+        s = min(self.sets, key=lambda st: (st.busy_until, st.in_flight, st.sid))
+        s.in_flight += n_queries
+        s.n_batches += 1
+        s.n_queries += n_queries
+        return s
+
+    def complete(self, s: SetState, n_queries: int) -> None:
+        s.in_flight -= n_queries
+        assert s.in_flight >= 0
+
+    def snapshot(self) -> list[dict]:
+        return [dataclasses.asdict(s) for s in self.sets]
+
+
+class MasterScheduler:
+    """Async-style micro-batching master over a batch executor.
+
+    Parameters
+    ----------
+    executor:
+        ``executor(queries, t_max, k, set_id) -> list[result]`` — runs one
+        formed batch (already padded to ``batch_size``) at the given padded
+        width ``t_max`` and top-``k``; returns one result per query in
+        order.  :class:`repro.serving.search.SearchService` supplies the
+        distributed engine here.
+    batch_size:
+        Queries per dispatched micro-batch (the device batch dimension).
+    t_max_buckets:
+        Ascending padded-width buckets.  A query of effective width ``w``
+        is admitted to the smallest bucket ``>= w``; each ``(bucket, k)``
+        pair compiles exactly once.
+    default_k:
+        Top-k for :meth:`submit` calls that do not override it.
+    cache_size:
+        LRU result-cache capacity; ``0`` disables caching.
+    n_sets:
+        Replicated-set count for the router.
+    max_wait:
+        Batch-formation deadline (seconds): under :meth:`replay`, a partial
+        bucket is flushed once its oldest query has waited this long.  Live
+        ``drain()`` always flushes.
+    version_fn:
+        Snapshot-version source for cache stamping/invalidation (the
+        search service wires ``DeltaWriter.version`` here).
+    width_fn:
+        Effective padded width of ``(terms, site)`` — lets the service
+        account for the ``site_term`` strategy's extra join term.
+    """
+
+    def __init__(
+        self,
+        executor: Callable[[list, int, int, int], list],
+        *,
+        batch_size: int = 8,
+        t_max_buckets: Sequence[int] = (4,),
+        default_k: int = 10,
+        cache_size: int = 1024,
+        n_sets: int = 1,
+        max_wait: float = 0.0,
+        version_fn: Callable[[], int] | None = None,
+        width_fn: Callable[[tuple, int | None], int] | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        assert batch_size >= 1
+        buckets = tuple(sorted(set(int(b) for b in t_max_buckets)))
+        assert buckets and buckets[0] >= 1
+        self.executor = executor
+        self.batch_size = batch_size
+        self.t_max_buckets = buckets
+        self.default_k = default_k
+        self.max_wait = max_wait
+        self.cache = ResultCache(cache_size) if cache_size > 0 else None
+        self.router = MultiSetRouter(n_sets)
+        self._version_fn = version_fn or (lambda: 0)
+        self._width_fn = width_fn or (lambda terms, site: len(terms))
+        self._clock = clock
+        self._vclock: float | None = None       # non-None while replaying
+        self._queues: dict[tuple[int, int], list[QueryTicket]] = {}
+        self._next_qid = 0
+        self.n_batches = 0
+        self.n_padded = 0
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def _now(self) -> float:
+        return self._vclock if self._vclock is not None else self._clock()
+
+    def _bucket_of(self, width: int) -> int:
+        for b in self.t_max_buckets:
+            if width <= b:
+                return b
+        raise ValueError(
+            f"query width {width} exceeds the largest t_max bucket "
+            f"{self.t_max_buckets[-1]}"
+        )
+
+    def submit(
+        self, terms: Sequence[int], site: int | None = None, *, k: int | None = None
+    ) -> QueryTicket:
+        """Admit one query; returns its ticket (completed already on a
+        cache hit, otherwise filled in by a later dispatch)."""
+        k = self.default_k if k is None else int(k)
+        terms_t = tuple(int(t) for t in terms)
+        if not terms_t:
+            # reject at admission: a termless query would only fail at
+            # dispatch, taking its co-batched queries down with it
+            raise ValueError("query must have at least one term")
+        bucket = self._bucket_of(self._width_fn(terms_t, site))
+        now = self._now()
+        ticket = QueryTicket(
+            qid=self._next_qid, terms=terms_t, site=site, k=k,
+            bucket=bucket, submit_time=now,
+        )
+        self._next_qid += 1
+        if self.cache is not None:
+            hit = self.cache.get((terms_t, site, k), self._version_fn(), now)
+            if hit is not None:
+                ticket.result = hit
+                ticket.done = True
+                ticket.from_cache = True
+                ticket.finish_time = now
+                return ticket
+        self._queues.setdefault((bucket, k), []).append(ticket)
+        return ticket
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+
+    def _full_bucket(self) -> tuple[int, int] | None:
+        for key, q in self._queues.items():
+            if len(q) >= self.batch_size:
+                return key
+        return None
+
+    def _oldest_bucket(self) -> tuple[tuple[int, int], float] | None:
+        """(key, head submit time) of the bucket with the oldest head."""
+        best = None
+        for key, q in self._queues.items():
+            if q and (best is None or q[0].submit_time < best[1]):
+                best = (key, q[0].submit_time)
+        return best
+
+    def _dispatch(self, key: tuple[int, int]) -> list[QueryTicket]:
+        """Form and execute one micro-batch from bucket ``key``."""
+        t_max, k = key
+        queue = self._queues[key]
+        batch = form_batch(
+            queue, self.batch_size,
+            pad=lambda first: dataclasses.replace(first, qid=-1),
+        )
+        if not queue:
+            del self._queues[key]
+        if not batch:
+            return []
+        real = [t for t in batch if t.qid >= 0]
+        sref = self.router.route(len(real))
+        version = self._version_fn()
+        queries = [(list(t.terms), t.site) for t in batch]
+        start = max(self._now(), sref.busy_until)
+        wall0 = time.perf_counter()
+        try:
+            results = self.executor(queries, t_max, k, sref.sid)
+        except BaseException:
+            # keep the pipeline consistent: the un-served tickets go back
+            # to the head of their bucket, the set's accounting closes
+            self.router.complete(sref, len(real))
+            self._queues.setdefault(key, [])[:0] = real
+            raise
+        wall = time.perf_counter() - wall0
+        finish = start + wall if self._vclock is not None else self._clock()
+        sref.busy_until = finish
+        self.router.complete(sref, len(real))
+        for ticket, res in zip(batch, results):
+            if ticket.qid < 0:
+                continue
+            ticket.result = res
+            ticket.done = True
+            ticket.finish_time = finish
+            ticket.set_id = sref.sid
+            if self.cache is not None:
+                # stamped with the batch's finish: under replay a result
+                # must not be served at a virtual time before it existed
+                self.cache.put(
+                    (ticket.terms, ticket.site, ticket.k), version, res,
+                    available_at=finish,
+                )
+        self.n_batches += 1
+        self.n_padded += len(batch) - len(real)
+        return real
+
+    def step(self) -> list[QueryTicket]:
+        """Dispatch one micro-batch (a full bucket if any, else the bucket
+        with the oldest waiting query, padded).  No-op on an empty queue."""
+        key = self._full_bucket()
+        if key is None:
+            oldest = self._oldest_bucket()
+            if oldest is None:
+                return []
+            key = oldest[0]
+        return self._dispatch(key)
+
+    def drain(self) -> list[QueryTicket]:
+        """Dispatch until the admission queue is empty."""
+        finished: list[QueryTicket] = []
+        while self.pending():
+            finished.extend(self.step())
+        return finished
+
+    # ------------------------------------------------------------------
+    # open-loop replay (the measured half of the hybrid model)
+    # ------------------------------------------------------------------
+
+    def replay(
+        self, trace: Sequence[tuple[float, Sequence[int], int | None]]
+    ) -> list[QueryTicket]:
+        """Replay an arrival trace against the live engine in virtual time.
+
+        ``trace`` is ``(arrival_time, terms, site)`` tuples, ascending in
+        time.  Arrivals, batch-formation deadlines (``max_wait``) and
+        completions advance a virtual clock; each dispatched batch's
+        *service* time is the real measured wall time of the executor, and
+        per-set ``busy_until`` serializes batches within a set while
+        letting ``n_sets`` replicas overlap — so the returned tickets'
+        ``response_time`` is what an open-loop Poisson client at the
+        trace's rate would observe.  Returns every ticket (cache hits
+        complete at their arrival instant).
+        """
+        tickets: list[QueryTicket] = []
+        assert not self.pending(), "replay needs an empty admission queue"
+        for s in self.router.sets:  # live wall-clock must not leak into
+            s.busy_until = 0.0      # the virtual timeline
+        self._vclock = 0.0
+        try:
+            i = 0
+            while i < len(trace) or self.pending():
+                next_t = trace[i][0] if i < len(trace) else math.inf
+                full = self._full_bucket()
+                if full is not None:
+                    self._dispatch(full)
+                    continue
+                oldest = self._oldest_bucket()
+                deadline = (
+                    oldest[1] + self.max_wait if oldest is not None else math.inf
+                )
+                if next_t <= deadline:
+                    arrival, terms, site = trace[i]
+                    i += 1
+                    self._vclock = max(self._vclock, float(arrival))
+                    tickets.append(self.submit(terms, site))
+                else:
+                    self._vclock = max(self._vclock, deadline)
+                    self._dispatch(oldest[0])
+            return tickets
+        finally:
+            self._vclock = None
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        out = {
+            "n_batches": self.n_batches,
+            "n_padded": self.n_padded,
+            "pending": self.pending(),
+            "sets": self.router.snapshot(),
+        }
+        if self.cache is not None:
+            out["cache"] = dataclasses.asdict(self.cache.stats)
+            out["cache_entries"] = len(self.cache)
+        return out

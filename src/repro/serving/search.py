@@ -1,22 +1,35 @@
-"""Search serving front-end: the ODYS master's admission path.
+"""Search serving front-end: a thin façade over the unified master pipeline.
 
-Host-side wrapper that owns a sharded index + mesh and turns raw
-``(terms, site)`` queries into merged global results, batching them through
-:func:`repro.core.parallel.distributed_query_topk`.  The execution backend
-(pure-jnp reference vs the batched block-skipping Pallas kernel) is a
-constructor knob, so the same service object serves CPU CI
-(``backend="pallas", interpret=True``) and TPU production
+The ODYS master's admission path (paper §3.1/§4.1) lives in
+:class:`repro.serving.scheduler.MasterScheduler`; this module binds it to
+the distributed query engine.  A submitted ``(terms, site)`` query is
+admitted to a ``(t_max, k)`` bucket, checked against the version-stamped
+LRU result cache, micro-batched (partial batches padded with inert
+queries so device shapes never change), routed across the replicated
+sets, executed with :func:`repro.core.parallel.distributed_query_topk`,
+and merged — one pipeline whether the caller uses the synchronous
+:meth:`SearchService.search` or the async-style
+:meth:`~SearchService.submit` / :meth:`~SearchService.drain` pair.
+
+The execution backend (pure-jnp reference vs the batched block-skipping
+Pallas kernel) is a constructor knob, so the same service object serves
+CPU CI (``backend="pallas", interpret=True``) and TPU production
 (``backend="pallas"``) without touching the query path.
 
 **Online updates** (repro.indexing): constructing the service with
 ``updatable=True`` (or passing an existing :class:`DeltaWriter`) attaches
 the transactional write path.  :meth:`SearchService.insert` /
 :meth:`~SearchService.delete` / :meth:`~SearchService.update` mutate the
-delta; the next ``search``/``search_batch`` snapshots it and every slave
-answers with merge-on-read, so live traffic sees each mutation at the
-following batch — the paper's "no batch rebuild" freshness story.
-:meth:`SearchService.compact` (or ``auto_compact``) folds a filled delta
-back into a fresh main index between batches.
+delta; the next dispatched batch snapshots it and every slave answers
+with merge-on-read, so live traffic sees each mutation at the following
+batch — the paper's "no batch rebuild" freshness story.  Every mutation
+bumps the writer version, which lazily invalidates cached results
+(:class:`~repro.serving.scheduler.ResultCache`), so the cache never
+serves across a mutation.  :meth:`SearchService.compact` (or
+``auto_compact``) folds a filled delta back into a fresh main index
+between batches, optionally handing the writer a larger
+``doc_headroom``/``term_capacity`` generation — the main index recompiles
+at a compaction boundary anyway, so the delta may change shape there too.
 """
 from __future__ import annotations
 
@@ -32,6 +45,7 @@ from repro.core.parallel import SearchResult, distributed_query_topk
 from repro.data.corpus import Corpus
 from repro.indexing.compaction import compact as _compact
 from repro.indexing.delta import DeltaWriter
+from repro.serving.scheduler import MasterScheduler, QueryTicket
 
 
 @dataclasses.dataclass
@@ -45,17 +59,28 @@ class SearchHit:
 class SearchService:
     """Serve search queries over a sharded index on a device mesh.
 
-    Parameters mirror :func:`distributed_query_topk`; ``backend`` selects
-    the execution engine for the slave join *and* the master merge (see
-    :func:`repro.core.engine.query_topk`).
+    Engine parameters mirror :func:`distributed_query_topk`; ``backend``
+    selects the execution engine for the slave join *and* the master merge
+    (see :func:`repro.core.engine.query_topk`).
+
+    Scheduler parameters (the unified master pipeline):
+
+    - ``batch_size`` — queries per dispatched micro-batch;
+    - ``t_max_buckets`` — padded-width buckets for dynamic batch formation
+      (default: the single bucket ``(t_max,)``, i.e. the legacy behavior);
+    - ``cache_size`` — LRU result-cache capacity (0 disables);
+    - ``n_sets`` — replicated sets for the multi-set router (§5.2);
+    - ``max_wait`` — batch-formation deadline used by the open-loop replay.
 
     Online updates: pass ``updatable=True`` together with the ``corpus``
     the index was built from (a :class:`DeltaWriter` is created), or pass
     a ready ``writer``.  ``auto_compact`` (a fill fraction in (0, 1], or
     None to disable) folds the delta into a fresh main index whenever a
-    mutation pushes the *posting* fill past the threshold (document
-    headroom is lifetime-fixed and never triggers compaction; exhausting
-    it raises DeltaFullError at insert time).
+    mutation pushes the *posting* fill past the threshold; when the
+    *document* fill crosses it instead, the compaction hands the writer a
+    doubled ``doc_headroom`` generation (headroom is otherwise
+    lifetime-fixed — growing it is only possible at a compaction boundary,
+    where the main index recompiles anyway).
     """
 
     def __init__(
@@ -78,6 +103,11 @@ class SearchService:
         term_capacity: int = 256,
         doc_headroom: int = 1024,
         auto_compact: float | None = None,
+        batch_size: int = 8,
+        t_max_buckets: tuple[int, ...] | None = None,
+        cache_size: int = 1024,
+        n_sets: int = 1,
+        max_wait: float = 0.0,
     ):
         self.index = index
         self.meta = meta
@@ -110,6 +140,20 @@ class SearchService:
                     f"writer n_terms={writer.n_terms} != index {meta.n_terms}"
                 )
         self.writer = writer
+        buckets = t_max_buckets if t_max_buckets is not None else (t_max,)
+        if max(buckets) > t_max:
+            raise ValueError(f"t_max_buckets {buckets} exceed t_max={t_max}")
+        self.scheduler = MasterScheduler(
+            self._execute,
+            batch_size=batch_size,
+            t_max_buckets=buckets,
+            default_k=k,
+            cache_size=cache_size,
+            n_sets=n_sets,
+            max_wait=max_wait,
+            version_fn=self._snapshot_version,
+            width_fn=self._query_width,
+        )
 
     # ------------------------------------------------------------------
     # write path
@@ -135,34 +179,51 @@ class SearchService:
         self._require_writer().update_docs(updates)
         self._maybe_compact()
 
-    def compact(self, *, verify: bool = False) -> None:
-        """Fold the delta into a fresh main index and swap it in."""
+    def compact(
+        self,
+        *,
+        verify: bool = False,
+        term_capacity: int | None = None,
+        doc_headroom: int | None = None,
+    ) -> None:
+        """Fold the delta into a fresh main index and swap it in.
+
+        ``term_capacity``/``doc_headroom`` hand the writer a re-sized delta
+        generation at the boundary (see :meth:`DeltaWriter.rebase`)."""
         writer = self._require_writer()
-        self.index, self.meta = _compact(writer, verify=verify)
+        self.index, self.meta = _compact(
+            writer, verify=verify,
+            term_capacity=term_capacity, doc_headroom=doc_headroom,
+        )
 
     def _maybe_compact(self) -> None:
-        if (
-            self.auto_compact is not None
-            and self.writer is not None
-            and self.writer.needs_compaction(self.auto_compact)
-        ):
-            self.compact()
+        w = self.writer
+        if self.auto_compact is None or w is None:
+            return
+        grow = w.doc_fill() >= self.auto_compact
+        if grow or w.needs_compaction(self.auto_compact):
+            self.compact(doc_headroom=2 * w.doc_headroom if grow else None)
 
     # ------------------------------------------------------------------
     # read path
     # ------------------------------------------------------------------
 
-    def search_batch(
-        self, queries: list[tuple[list[int], int | None]]
-    ) -> SearchResult:
-        """Run one batch end-to-end on the mesh; returns device arrays.
+    def _snapshot_version(self) -> int:
+        """Cache-invalidation stamp: the writer's monotone version (every
+        mutation and every compaction bumps it); 0 for read-only service."""
+        return 0 if self.writer is None else self.writer.version
 
-        With a writer attached the batch runs merge-on-read against the
-        current delta snapshot (per-batch snapshot isolation)."""
+    def _query_width(self, terms, site) -> int:
+        """Effective padded width — the ``site_term`` strategy rewrites the
+        site restriction into an extra join term."""
+        extra = 1 if (site is not None and self.strategy == "site_term") else 0
+        return len(terms) + extra
+
+    def _run_engine(self, queries, *, t_max: int, k: int) -> SearchResult:
+        """One batch end-to-end on the mesh at the given padded shapes."""
         batch = make_query_batch(
-            queries, t_max=self.t_max, meta=self.meta, strategy=self.strategy
+            queries, t_max=t_max, meta=self.meta, strategy=self.strategy
         )
-        attr_strategy = self.strategy
         delta = None if self.writer is None else self.writer.device_delta()
         return distributed_query_topk(
             self.index,
@@ -170,19 +231,22 @@ class SearchService:
             delta,
             mesh=self.mesh,
             ns=self.ns,
-            k=self.k,
+            k=k,
             window=self.window,
-            attr_strategy=attr_strategy,
+            attr_strategy=self.strategy,
             merge=self.merge,
             backend=self.backend,
             interpret=self.interpret,
         )
 
-    def search(
-        self, queries: list[tuple[list[int], int | None]]
-    ) -> list[SearchHit]:
-        """Host-friendly entry point: lists of global docIDs per query."""
-        res = self.search_batch(queries)
+    def _execute(self, queries, t_max: int, k: int, set_id: int) -> list[SearchHit]:
+        """Scheduler executor: run one formed micro-batch.
+
+        ``set_id`` identifies the replicated set the router picked; the
+        in-process deployment time-shares one mesh across sets (a multi-pod
+        deployment would dispatch to pod ``set_id`` here)."""
+        del set_id
+        res = self._run_engine(queries, t_max=t_max, k=k)
         docs = np.asarray(res.docids)
         hits = np.asarray(res.n_hits)
         return [
@@ -192,3 +256,46 @@ class SearchService:
             )
             for row, h in zip(docs, hits)
         ]
+
+    def submit(
+        self, terms, site: int | None = None, *, k: int | None = None
+    ) -> QueryTicket:
+        """Admit one query into the pipeline (async-style entry point).
+
+        Returns the ticket — already completed on a cache hit; otherwise
+        its ``result`` lands on a later :meth:`drain`/``step``."""
+        return self.scheduler.submit(terms, site, k=k)
+
+    def drain(self) -> list[QueryTicket]:
+        """Dispatch micro-batches until the admission queue is empty."""
+        return self.scheduler.drain()
+
+    def search_batch(
+        self, queries: list[tuple[list[int], int | None]]
+    ) -> SearchResult:
+        """Run one pre-formed batch end-to-end; returns device arrays.
+
+        Bypasses admission/caching — this is the raw engine path the
+        scheduler itself dispatches through.  With a writer attached the
+        batch runs merge-on-read against the current delta snapshot
+        (per-batch snapshot isolation)."""
+        return self._run_engine(queries, t_max=self.t_max, k=self.k)
+
+    def search(
+        self, queries: list[tuple[list[int], int | None]]
+    ) -> list[SearchHit]:
+        """Host-friendly entry point, through the full pipeline: every
+        query is admitted, cache-checked, micro-batched and routed; returns
+        the merged hits in submission order."""
+        tickets = [self.scheduler.submit(terms, site) for terms, site in queries]
+        self.scheduler.drain()
+        assert all(t.done for t in tickets)
+        return [t.result for t in tickets]
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Scheduler/cache/router counters (see MasterScheduler.stats)."""
+        return self.scheduler.stats()

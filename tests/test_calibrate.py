@@ -1,0 +1,116 @@
+"""Closed-loop perf-model calibration: fitted MasterParams are live
+measurements (not PAPER_TABLE3), feed Formula (17) finitely, and the
+scheduler replay produces the measured curve they are compared against."""
+import numpy as np
+import pytest
+import jax
+
+from repro.core.calibrate import (
+    Calibration,
+    calibrate_from_engine,
+    fit_merge_constants,
+)
+from repro.core.index import build_sharded_index
+from repro.core.perfmodel import (
+    KS,
+    OdysPerfModel,
+    PAPER_TABLE3_MASTER,
+    SINGLE_10_ONLY,
+    engine_cluster,
+    estimation_error,
+)
+from repro.data.corpus import CorpusConfig, generate_corpus
+
+
+@pytest.fixture(scope="module")
+def engine():
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=600, vocab_size=200, mean_doc_len=25,
+                     n_sites=8, seed=3)
+    )
+    sharded, meta = build_sharded_index(corpus, 1)
+    mesh = jax.make_mesh((1,), ("data",))
+    return sharded, meta, mesh
+
+
+@pytest.fixture(scope="module")
+def cal(engine):
+    sharded, meta, mesh = engine
+    return calibrate_from_engine(
+        sharded, meta, mesh, ns=1, k_values=(10, 50), window=256, q=4, reps=2,
+    )
+
+
+def test_fit_merge_constants_positive():
+    t_cmp, t_base, raw = fit_merge_constants(
+        k_values=(10,), widths=(2, 4), q=4, reps=2
+    )
+    assert t_cmp > 0 and t_base > 0
+    assert all(v > 0 for v in raw.values())
+
+
+def test_calibration_is_measured_not_paper(cal):
+    assert isinstance(cal, Calibration)
+    m = cal.master
+    # every KS row exists (unmeasured k extrapolated by paper ratios)
+    assert set(m.T_master_rpc) == set(KS)
+    assert m.T_parent_proc > 0
+    assert m.T_parent_proc != PAPER_TABLE3_MASTER.T_parent_proc
+    assert m.t_per_context_switch == 0.0  # in-process: no RPC switches
+    for k in (10, 50):
+        assert cal.st_slave[k] > 0
+        assert cal.st_master[k] > 0
+        assert cal.slave_max[k] >= cal.st_slave[k] * 0.5
+
+
+def test_slave_max_time_bends_with_load(cal):
+    low = cal.slave_max_time("single", 10, 1.0, 1)
+    # near the slave's own saturation the M/D/1 sojourn must grow
+    high = cal.slave_max_time("single", 10, 0.9 / cal.st_slave[10], 1)
+    assert high > low
+    # unmeasured k falls back to the nearest measured row
+    assert cal.slave_max_time("single", 1000, 1.0, 1) == pytest.approx(
+        cal.slave_max_time("single", 50, 1.0, 1)
+    )
+
+
+def test_fitted_model_projects_finite_response(cal):
+    model = OdysPerfModel(master=cal.master, network=cal.network)
+    c = engine_cluster(1)
+    cap = model.max_stable_load(c, SINGLE_10_ONLY)
+    assert cap > 0
+    # below both the analytic master's and the measured slave's saturation
+    lam_hi = min(0.9 * cap, 0.9 / cal.st_slave[10])
+    for lam in (lam_hi / 4, lam_hi / 2, lam_hi):
+        t = model.total_response_time(lam, c, SINGLE_10_ONLY,
+                                      cal.slave_max_time)
+        assert np.isfinite(t) and t > 0
+
+
+def test_replay_vs_model_formula18(engine, cal):
+    """End-to-end mini version of bench_serving: measured replay response
+    vs fitted-model projection yields a finite Formula (18) error."""
+    from repro.serving.search import SearchService
+
+    sharded, meta, mesh = engine
+    svc = SearchService(
+        sharded, meta, mesh, ns=1, k=10, window=256, t_max=2,
+        t_max_buckets=(2,), batch_size=4, cache_size=0,
+    )
+    svc.search([([i], None) for i in range(4)])  # warm
+    model = OdysPerfModel(master=cal.master, network=cal.network)
+    lam = 0.25 * min(
+        model.max_stable_load(engine_cluster(1), SINGLE_10_ONLY),
+        1.0 / cal.st_slave[10],
+    )
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, size=24))
+    trace = [(float(t), [int(rng.integers(0, 64))], None) for t in arrivals]
+    tickets = svc.scheduler.replay(trace)
+    measured = float(np.mean([t.response_time for t in tickets]))
+    projected = model.total_response_time(
+        lam, engine_cluster(1), SINGLE_10_ONLY, cal.slave_max_time
+    )
+    err = estimation_error(projected, measured)
+    assert measured > 0 and projected > 0
+    assert np.isfinite(err)

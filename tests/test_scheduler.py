@@ -1,0 +1,387 @@
+"""Unified master pipeline: micro-batch formation, result-cache freshness
+under online mutations (both backends), shape-stable dispatch (no
+recompilation across a mixed-t_max workload), multi-set routing, open-loop
+replay, and delta-generation growth at compaction boundaries."""
+import numpy as np
+import pytest
+import jax
+
+from repro.core.index import build_index, build_sharded_index
+from repro.core.parallel import distributed_query_topk
+from repro.data.corpus import (
+    CorpusConfig,
+    MutationConfig,
+    apply_mutations,
+    generate_corpus,
+    generate_mutations,
+)
+from repro.indexing import DeltaFullError, DeltaWriter, compact
+from repro.serving.scheduler import (
+    MasterScheduler,
+    MultiSetRouter,
+    ResultCache,
+    form_batch,
+)
+from repro.serving.search import SearchService
+
+WINDOW = 1024
+BACKENDS = ("jnp", "pallas")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=400, vocab_size=150, mean_doc_len=25,
+                     n_sites=10, seed=13)
+    )
+    sharded, meta = build_sharded_index(corpus, 1)
+    mesh = jax.make_mesh((1,), ("data",))
+    return corpus, sharded, meta, mesh
+
+
+def make_service(setup, backend="jnp", **kw):
+    corpus, sharded, meta, mesh = setup
+    kw.setdefault("window", WINDOW)
+    kw.setdefault("k", 10)
+    return SearchService(
+        sharded, meta, mesh, ns=1, backend=backend,
+        interpret=True if backend == "pallas" else None, **kw,
+    )
+
+
+QUERIES = [
+    ([3], None),
+    ([3, 9], None),
+    ([1, 4, 12], None),
+    ([2], 3),
+    ([5, 8], 1),
+    ([140], None),
+    ([0, 7], 5),
+]
+
+
+# ---------------------------------------------------------------- formation
+
+
+def test_form_batch_empty_queue_is_noop():
+    assert form_batch([], 4, pad=lambda x: x) == []
+
+
+def test_form_batch_pads_partial_and_pops():
+    queue = [1, 2, 3]
+    batch = form_batch(queue, 4, pad=lambda first: -first)
+    assert batch == [1, 2, 3, -1]
+    assert queue == []
+
+
+def test_form_batch_leaves_excess():
+    queue = list(range(10))
+    assert form_batch(queue, 4) == [0, 1, 2, 3]
+    assert queue == list(range(4, 10))
+
+
+def test_serving_engine_empty_queue_noop():
+    """The LM engine's step_batch no longer crashes on an empty queue."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = reduce_for_smoke(get_config("phi4-mini-3.8b"))
+    eng = ServingEngine(cfg, batch_size=2, max_len=16)
+    assert eng.step_batch() == []
+    eng.submit(Request(rid=0, prompt=np.array([1, 2], np.int32),
+                       max_new_tokens=2))
+    done = eng.step_batch()
+    assert [r.rid for r in done] == [0]
+    assert eng.step_batch() == []
+
+
+# ---------------------------------------------------------------- pipeline
+
+
+def test_scheduler_parity_with_direct_engine(setup):
+    """search() through buckets/batching/padding returns exactly what the
+    one-shot engine path returns for every query."""
+    svc = make_service(setup, t_max=4, t_max_buckets=(2, 4), batch_size=4,
+                       cache_size=0)
+    got = svc.search(QUERIES)
+    ref = make_service(setup, t_max=4, batch_size=len(QUERIES), cache_size=0)
+    res = ref.search_batch(QUERIES)
+    docs = np.asarray(res.docids)
+    hits = np.asarray(res.n_hits)
+    from repro.core.index import INVALID_DOC
+    for i, h in enumerate(got):
+        assert h.docids == [int(d) for d in docs[i] if d != INVALID_DOC]
+        assert h.n_hits == int(hits[i])
+
+
+def test_submit_drain_async_entry_points(setup):
+    svc = make_service(setup, t_max=4, batch_size=4)
+    tickets = [svc.submit(terms, site) for terms, site in QUERIES]
+    assert svc.scheduler.pending() == len(QUERIES)
+    svc.drain()
+    assert all(t.done for t in tickets)
+    assert svc.scheduler.pending() == 0
+    direct = svc.search(QUERIES)  # all cached now
+    assert [t.result.docids for t in tickets] == [h.docids for h in direct]
+    assert svc.scheduler.cache.stats.hits >= len(QUERIES)
+
+
+def test_no_recompilation_across_mixed_t_max_workload(setup):
+    """Bucketed micro-batches reuse a fixed set of traced shapes: after one
+    warm batch per (t_max, k) bucket, a mixed-width workload adds ZERO
+    entries to the jitted engine's compilation cache."""
+    svc = make_service(setup, t_max=4, t_max_buckets=(2, 4), batch_size=4,
+                       cache_size=0)
+    svc.search([([1], None), ([2, 3], None)])        # warm bucket 2
+    svc.search([([1, 2, 3], None), ([4, 5, 6, 7], None)])  # warm bucket 4
+    size0 = distributed_query_topk._cache_size()
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        qs = [
+            (
+                [int(t) for t in rng.integers(0, 140,
+                                              size=int(rng.integers(1, 5)))],
+                int(rng.integers(10)) if rng.random() < 0.3 else None,
+            )
+            for _ in range(6)
+        ]
+        svc.search(qs)
+    assert distributed_query_topk._cache_size() == size0
+
+
+def test_width_too_large_rejected(setup):
+    svc = make_service(setup, t_max=2, t_max_buckets=(2,))
+    with pytest.raises(ValueError, match="exceeds the largest"):
+        svc.submit([1, 2, 3])
+
+
+def test_termless_query_rejected_at_admission(setup):
+    svc = make_service(setup, t_max=2)
+    with pytest.raises(ValueError, match="at least one term"):
+        svc.submit([])
+
+
+def test_executor_failure_restores_queue_and_accounting():
+    """An executor crash must not lose co-batched tickets or leak the
+    router's in-flight count."""
+    boom = {"armed": True}
+
+    def executor(queries, t_max, k, sid):
+        if boom["armed"]:
+            raise RuntimeError("slave died")
+        return [sum(t[0]) for t in queries]
+
+    s = MasterScheduler(executor, batch_size=2, t_max_buckets=(4,),
+                        cache_size=0)
+    t1, t2 = s.submit([1]), s.submit([2])
+    with pytest.raises(RuntimeError, match="slave died"):
+        s.step()
+    assert s.pending() == 2                      # tickets restored in order
+    assert [st.in_flight for st in s.router.sets] == [0]
+    boom["armed"] = False
+    s.drain()
+    assert t1.result == 1 and t2.result == 2
+
+
+# ---------------------------------------------------------------- caching
+
+
+def test_lru_eviction_and_stats():
+    calls = []
+
+    def executor(queries, t_max, k, sid):
+        calls.append(len(queries))
+        return [sum(t[0]) for t in queries]
+
+    s = MasterScheduler(executor, batch_size=1, t_max_buckets=(4,),
+                        cache_size=2)
+    for terms in ([1], [2], [3]):   # fills then overflows capacity 2
+        s.submit(terms)
+        s.drain()
+    assert s.cache.stats.evicted == 1
+    s.submit([1])                    # evicted -> recomputed
+    s.drain()
+    assert s.cache.stats.hits == 0
+    s.submit([3])                    # still resident -> hit
+    assert s.cache.stats.hits == 1
+    assert len(calls) == 4
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("op", ["insert", "delete", "update"])
+def test_cache_never_serves_across_mutations(setup, backend, op):
+    """A cached result must not survive an insert/delete/update: after the
+    mutation bumps the snapshot version, the served result equals a
+    from-scratch rebuild over the mutated corpus."""
+    corpus, _, meta, mesh = setup
+    svc = make_service(
+        setup, backend=backend, t_max=4, batch_size=2,
+        updatable=True, corpus=corpus, term_capacity=256, doc_headroom=128,
+    )
+    query = [([3], None), ([3, 9], None)]
+    first = svc.search(query)
+    again = svc.search(query)
+    assert [h.docids for h in first] == [h.docids for h in again]
+    assert svc.scheduler.cache.stats.hits >= 2
+
+    if op == "insert":
+        muts = [("insert", None, [3, 9, 17], 2)]
+        svc.insert([([3, 9, 17], 2)])
+    elif op == "delete":
+        victim = first[0].docids[0]
+        muts = [("delete", victim, None, None)]
+        svc.delete([victim])
+    else:
+        victim = first[0].docids[0]
+        muts = [("update", victim, [100, 101], 4)]
+        svc.update([(victim, [100, 101], 4)])
+
+    got = svc.search(query)
+    assert svc.scheduler.cache.stats.stale >= 1
+
+    # oracle: rebuild over the authoritative mutated corpus
+    rebuilt, rmeta = build_sharded_index(svc.writer.mutated_corpus(), 1)
+    ref = SearchService(rebuilt, rmeta, mesh, ns=1, k=10, window=WINDOW)
+    want = ref.search(query)
+    assert [h.docids for h in got] == [h.docids for h in want]
+    assert [h.n_hits for h in got] == [h.n_hits for h in want]
+    del muts
+
+
+def test_cache_invalidated_by_compaction(setup):
+    corpus, _, meta, mesh = setup
+    svc = make_service(
+        setup, t_max=4, batch_size=2,
+        updatable=True, corpus=corpus, term_capacity=256, doc_headroom=128,
+    )
+    q = [([3], None)]
+    before = svc.search(q)
+    svc.insert([([3], 1)])
+    svc.compact(verify=True)
+    after = svc.search(q)
+    assert svc.scheduler.cache.stats.stale >= 1
+    assert after[0].n_hits == before[0].n_hits + 1
+
+
+# ---------------------------------------------------------------- routing
+
+
+def test_multi_set_router_spreads_and_accounts(setup):
+    svc = make_service(setup, t_max=4, batch_size=2, n_sets=2, cache_size=0)
+    queries = [([int(t)], None) for t in range(8)]
+    hits = svc.search(queries)
+    assert all(h is not None for h in hits)
+    sets = svc.stats()["sets"]
+    assert [s["in_flight"] for s in sets] == [0, 0]
+    assert all(s["n_batches"] >= 1 for s in sets)
+    assert sum(s["n_queries"] for s in sets) == 8
+
+
+def test_router_prefers_earliest_available():
+    r = MultiSetRouter(2)
+    a = r.route(4)
+    a.busy_until = 10.0
+    b = r.route(4)
+    assert b.sid != a.sid
+    r.complete(a, 4)
+    r.complete(b, 4)
+    assert [s.in_flight for s in r.sets] == [0, 0]
+
+
+# ---------------------------------------------------------------- replay
+
+
+def test_replay_virtual_timeline():
+    def executor(queries, t_max, k, sid):
+        return [0 for _ in queries]
+
+    s = MasterScheduler(executor, batch_size=2, t_max_buckets=(2,),
+                        cache_size=8, max_wait=0.5)
+    trace = [(0.0, [1], None), (0.1, [2], None),   # fills a batch at 0.1
+             (5.0, [1], None),                     # cache hit at 5.0
+             (9.0, [3], None)]                     # flushed at 9.5 deadline
+    tickets = s.replay(trace)
+    assert len(tickets) == 4
+    assert all(t.done for t in tickets)
+    assert tickets[0].finish_time >= 0.1
+    assert tickets[2].from_cache and tickets[2].finish_time == 5.0
+    assert tickets[3].finish_time >= 9.5
+    assert all(t.response_time >= 0.0 for t in tickets)
+
+
+def test_replay_cache_hit_waits_for_virtual_availability():
+    """A cached result is not served at a virtual time before its
+    producing batch finished: the second arrival of the same query lands
+    while the first batch is (virtually) still running and must miss."""
+    def executor(queries, t_max, k, sid):
+        import time as _t
+        _t.sleep(0.01)           # real service time -> virtual finish > 0
+        return [0 for _ in queries]
+
+    s = MasterScheduler(executor, batch_size=1, t_max_buckets=(2,),
+                        cache_size=8)
+    trace = [(0.0, [1], None),
+             (1e-6, [1], None),   # arrives before batch 1's virtual finish
+             (10.0, [1], None)]   # long after -> mature hit
+    tickets = s.replay(trace)
+    assert not tickets[1].from_cache
+    assert tickets[2].from_cache and tickets[2].response_time == 0.0
+
+
+# ------------------------------------------------- growth at compaction
+
+
+def test_compact_grows_doc_headroom(setup):
+    """compact(doc_headroom=...) hands the writer a larger generation: the
+    writer ingests past its original lifetime budget, and queries stay
+    exact against a from-scratch rebuild."""
+    corpus, _, meta, mesh = setup
+    w = DeltaWriter(corpus, meta, 1, term_capacity=256, doc_headroom=8)
+    docs = [([int(3 + i % 5), int(20 + i)], i % 10) for i in range(8)]
+    w.insert_docs(docs)
+    with pytest.raises(DeltaFullError):
+        w.insert_docs([([7], 0)])
+
+    assert w.doc_headroom == 8
+    idx2, meta2 = compact(w, verify=True, doc_headroom=32)
+    assert w.doc_headroom == 32
+    assert w.generation == 1
+    assert w.doc_fill() == 0.0
+
+    w.insert_docs([([int(5 + i % 7), int(40 + i)], i % 10)
+                   for i in range(16)])  # > original budget
+    got = jax.tree.map(np.asarray, w.device_delta())
+    rebuilt, _ = build_index(w.mutated_corpus())
+    from repro.core.engine import make_query_batch, query_topk
+    from repro.indexing.delta import local_delta
+
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    base2 = jax.tree.map(lambda x: x[0], idx2)
+    d, h = query_topk(base2, qb, delta=local_delta(w.device_delta()),
+                      k=10, window=WINDOW)
+    dr, hr = query_topk(rebuilt, qb, k=10, window=WINDOW)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+    del got
+
+
+def test_service_auto_grows_headroom(setup):
+    """auto_compact doubles doc_headroom when the document fill crosses
+    the threshold — sustained ingest never hits DeltaFullError."""
+    corpus, _, meta, mesh = setup
+    svc = make_service(
+        setup, t_max=4, batch_size=2, updatable=True, corpus=corpus,
+        term_capacity=512, doc_headroom=8, auto_compact=0.5,
+    )
+    start_headroom = svc.writer.doc_headroom
+    for i in range(24):  # 3x the original lifetime budget
+        svc.insert([([int(3 + i % 5), int(60 + i % 40)], i % 10)])
+    assert svc.writer.doc_headroom > start_headroom
+    assert svc.writer.generation >= 1
+
+    rebuilt, rmeta = build_sharded_index(svc.writer.mutated_corpus(), 1)
+    ref = SearchService(rebuilt, rmeta, mesh, ns=1, k=10, window=WINDOW)
+    q = [([3], None), ([60], None)]
+    got, want = svc.search(q), ref.search(q)
+    assert [h.docids for h in got] == [h.docids for h in want]
+    assert [h.n_hits for h in got] == [h.n_hits for h in want]
