@@ -7,11 +7,19 @@ Reports, as ``updates,<metric>,<value>,<note>`` CSV lines:
 - **query latency** of the merge-on-read engine at 0% / 50% / 100% delta
   fill — the freshness tax a query pays as the delta grows — against the
   no-delta baseline, under the selected execution engine;
+- **freshness tax**: the fill-100%/fill-0% latency ratio.  Under the
+  pallas backend the legacy *staged* path (per-batch ``(Q, T_MAX, window)``
+  window gather + host-side jnp merge sort,
+  ``backend="pallas_staged"``) is measured alongside the streaming path
+  (PostingSource: in-kernel delta merge + windows streamed from the flat
+  posting arrays), so the lines double as the before/after comparison for
+  the streaming-pipeline refactor;
 - **compaction**: wall time of the fold + rebuild, and the post-compaction
   query latency (which should return to the baseline).
 
 On CPU the pallas backend runs under the interpreter (semantics, not
-speed); the jnp numbers are the meaningful CPU baseline.
+speed); the jnp numbers are the meaningful CPU baseline.  ``smoke=True``
+shrinks everything to CI size.
 """
 import time
 
@@ -45,27 +53,28 @@ def _query_latency(idx, delta, qb, *, window, backend, interpret):
     )
 
 
-def main(backend: str = "jnp"):
+def main(backend: str = "jnp", smoke: bool = False):
     on_tpu = jax.default_backend() == "tpu"
     interpret = None if backend == "jnp" else (not on_tpu)
+    n_docs, vocab, n_ops = (2_500, 500, 120) if smoke else (20_000, 2_000, 400)
     corpus = generate_corpus(
-        CorpusConfig(n_docs=20_000, vocab_size=2_000, mean_doc_len=60,
+        CorpusConfig(n_docs=n_docs, vocab_size=vocab, mean_doc_len=60,
                      n_sites=50, seed=3)
     )
     idx, meta = build_index(corpus)
-    term_cap = 1024
+    term_cap = 256 if smoke else 1024
     # Zipf-head lists absorb ~one posting per mutated doc; size the ingest
-    # writer for the three 400-op streams below without compacting.
+    # writer for the three n_ops streams below without compacting.
     writer = DeltaWriter(corpus, meta, ns=1, term_capacity=2 * term_cap,
-                         doc_headroom=4096)
+                         doc_headroom=n_ops * 4)
 
     # --- ingest throughput -------------------------------------------------
     for name, mcfg in (
-        ("insert", MutationConfig(n_ops=400, p_insert=1.0, p_delete=0.0,
+        ("insert", MutationConfig(n_ops=n_ops, p_insert=1.0, p_delete=0.0,
                                   p_update=0.0, mean_doc_len=60, seed=1)),
-        ("mixed", MutationConfig(n_ops=400, p_insert=0.4, p_delete=0.3,
+        ("mixed", MutationConfig(n_ops=n_ops, p_insert=0.4, p_delete=0.3,
                                  p_update=0.3, mean_doc_len=60, seed=2)),
-        ("update", MutationConfig(n_ops=400, p_insert=0.0, p_delete=0.0,
+        ("update", MutationConfig(n_ops=n_ops, p_insert=0.0, p_delete=0.0,
                                   p_update=1.0, mean_doc_len=60, seed=3)),
     ):
         muts = generate_mutations(writer.mutated_corpus(), mcfg)
@@ -80,28 +89,50 @@ def main(backend: str = "jnp"):
     rng = np.random.default_rng(0)
     q = [(list(rng.integers(0, 64, size=2)), None) for _ in range(8)]
     qb = make_query_batch(q, t_max=4, meta=meta)
-    window = 4096
+    window = 1024 if smoke else 4096
     mode = "compiled" if on_tpu else (
         "interpret" if backend == "pallas" else "jnp"
     )
 
-    dt = _query_latency(idx, None, qb, window=window, backend=backend,
-                        interpret=interpret)
-    print(f"updates,query_nodelta,{dt/len(q)*1e6:.1f},per_query_us_{mode}")
+    nodelta = _query_latency(idx, None, qb, window=window, backend=backend,
+                             interpret=interpret)
+    print(f"updates,query_nodelta,{nodelta/len(q)*1e6:.1f},per_query_us_{mode}")
 
     # Drive the delta's hottest list to the target fill with inserts over
     # the head of the vocabulary (Zipf head = worst-case merge cost).
     writer2 = DeltaWriter(corpus, meta, ns=1, term_capacity=term_cap,
                           doc_headroom=4 * term_cap)
+    lat, lat_staged = {}, {}
     for target in (0.0, 0.5, 1.0):
         while writer2.posting_fill() < target:
             terms = np.unique(rng.integers(0, 64, size=60))
             writer2.insert_docs([(terms, int(rng.integers(50)))])
         delta = local_delta(writer2.device_delta())
-        dt = _query_latency(idx, delta, qb, window=window, backend=backend,
-                            interpret=interpret)
+        lat[target] = _query_latency(idx, delta, qb, window=window,
+                                     backend=backend, interpret=interpret)
         print(f"updates,query_fill{int(target*100)},"
-              f"{dt/len(q)*1e6:.1f},per_query_us_{mode}")
+              f"{lat[target]/len(q)*1e6:.1f},per_query_us_{mode}")
+        if backend == "pallas":
+            # before/after: the legacy gather + host-sort data path
+            lat_staged[target] = _query_latency(
+                idx, delta, qb, window=window, backend="pallas_staged",
+                interpret=interpret,
+            )
+            print(f"updates,query_fill{int(target*100)}_staged,"
+                  f"{lat_staged[target]/len(q)*1e6:.1f},per_query_us_{mode}")
+
+    # Freshness tax: how much a full delta slows queries vs an empty one
+    # (and vs running with no delta attached at all).
+    print(f"updates,freshness_tax,{lat[1.0]/lat[0.0]:.3f},"
+          f"fill100_over_fill0_{mode}")
+    print(f"updates,freshness_tax_vs_nodelta,{lat[1.0]/nodelta:.3f},"
+          f"fill100_over_nodelta_{mode}")
+    if backend == "pallas":
+        print(f"updates,freshness_tax_staged,"
+              f"{lat_staged[1.0]/lat_staged[0.0]:.3f},"
+              f"fill100_over_fill0_{mode}")
+        print(f"updates,streaming_speedup_fill100,"
+              f"{lat_staged[1.0]/lat[1.0]:.2f},staged_over_streaming")
 
     # --- compaction --------------------------------------------------------
     t0 = time.perf_counter()

@@ -8,7 +8,10 @@ actually runs the JAX query engine (engine, updates, serving; the
 dedicated ``backends`` sweep always measures both).  The fig/table suites
 drive the analytic performance model and DES prototype, which have no
 execution engine — the flag is accepted and ignored there.  ``--smoke``
-shrinks the suites that support it (serving) to CI-sized runs.
+shrinks the suites that support it (serving, updates) to CI-sized runs;
+``--suite updates --smoke --backend pallas`` additionally prints the
+freshness-tax before/after comparison (legacy staged path vs the
+streaming posting pipeline) the ISSUE-4 refactor targets.
 """
 import argparse
 import inspect

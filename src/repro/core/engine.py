@@ -39,6 +39,39 @@ one-sequential-scan argument.  Both backends therefore return bit-identical
 results, equal to a from-scratch rebuild over the mutated corpus whenever
 the window covers the merged list (the engine's standing assumption).
 
+**Data path — the PostingSource layer.**  Every layer of the engine
+obtains per-(query, term) posting streams through a
+:class:`PostingSource`, of which there are two:
+
+- :class:`StaticPostingSource` — the read-only main index.  The *driver*
+  stream is a windowed gather of the driver term's list (``(Q, window)``,
+  the one materialization the ZigZag join fundamentally needs, since the
+  result is selected from it); *other-term* streams are never
+  materialized: the jnp backend probes them with ``searchsorted`` over the
+  term's window, and the Pallas backend streams (8, 128) tiles straight
+  from the flat ``postings`` array — the BlockSpec index maps walk
+  skip-table-derived tile ranges scalar-prefetched per (query, term), so
+  the former ``(Q, T_MAX, window)`` HBM staging buffer does not exist and
+  non-overlapping tiles are never DMA'd.
+- :class:`MergedPostingSource` — main + delta under merge-on-read.  The
+  driver stream is the *merged* window: on the Pallas backend the merge
+  runs in VMEM (:mod:`repro.kernels.delta_merge` — one bitonic merge pass
+  with the tombstone stream riding along and empty slabs short-circuited
+  via the delta's skip table), replacing the former host-side jnp sort of
+  ``window + term_capacity`` keys per (query, term).  Other-term streams
+  again never materialize: membership in the merged logical list is
+  (member of main list AND doc not dead/superseded) OR (member of delta
+  list AND doc not dead) — two streaming probes over the physical
+  structures, with the driver posting's tombstone flags deciding which
+  probe may count.
+
+Both backends consume the same source abstraction, so freshness semantics
+(per-batch snapshot isolation, results equal to a from-scratch rebuild
+while windows cover the merged lists) are defined once.  The legacy
+staging path (gather + host-side merge sort) is retained as
+``backend="pallas_staged"`` purely as the before/after comparator for
+``benchmarks/bench_updates.py``.
+
 This module is also the *oracle* for the Pallas kernels in
 :mod:`repro.kernels` and runs inside ``shard_map`` for the distributed
 engine (:mod:`repro.core.parallel`).
@@ -147,23 +180,6 @@ def _first_k_by_rank(docids: jnp.ndarray, mask: jnp.ndarray, k: int):
     return out, jnp.sum(mask.astype(jnp.int32))
 
 
-def _driver_slot(index: InvertedIndex, terms, n_terms, delta=None):
-    """Shortest-list term slot (classic ZigZag driver ordering).
-
-    With a delta attached the ordering key is the *merged* physical length
-    (main + delta postings) — the logical list the join will stream.
-    """
-    t_max = terms.shape[0]
-    tt = jnp.clip(terms, 0, index.offsets.shape[0] - 1)
-    lens = index.lengths[tt]
-    if delta is not None:
-        lens = lens + delta.lengths[tt]
-    lens = jnp.where(
-        (jnp.arange(t_max) < n_terms), lens, jnp.int32(2**31 - 1)
-    )
-    return jnp.argmin(lens)
-
-
 # ---------------------------------------------------------------------------
 # Merge-on-read: logical windows over main + delta with tombstone filtering
 # ---------------------------------------------------------------------------
@@ -219,6 +235,12 @@ def merged_term_window(
     ``drop_dead=False`` keeps them in their rank slots with ``live=0`` so
     the driver stream can defer the tombstone predicate to the same fused
     pass as validity + attribute filtering (in-kernel for Pallas).
+
+    This host-side jnp merge is the *reference* driver merge (jnp backend
+    + oracle for :func:`repro.kernels.delta_merge.merge_delta_windows`,
+    which performs it in VMEM on the Pallas backend) and the legacy
+    staged path's probe-window builder; the streaming probes
+    (:meth:`MergedPostingSource.member`) need no merged window at all.
     """
     m_docs, m_attrs, m_valid = term_window(index, term, window)
     m_live = posting_live(delta, m_docs, from_delta=False) & m_valid
@@ -238,12 +260,118 @@ def merged_term_window(
 
 
 # ---------------------------------------------------------------------------
+# PostingSource: how every layer obtains per-(query, term) posting streams
+# ---------------------------------------------------------------------------
+
+
+class StaticPostingSource:
+    """Posting access over the read-only main index.
+
+    The driver stream is a windowed gather; other-term streams are probed
+    in place (jnp ``searchsorted`` here, streamed tiles in the Pallas
+    backend) — one pass over the physical index per query, the discipline
+    the paper's slave cost model assumes.
+    """
+
+    def __init__(self, index: InvertedIndex):
+        self.index = index
+        self.delta: DeltaIndex | None = None
+
+    @property
+    def doc_site(self) -> jnp.ndarray:
+        return self.index.doc_site
+
+    def list_lengths(self, terms: jnp.ndarray) -> jnp.ndarray:
+        """Physical lengths of the logical lists (driver ordering key)."""
+        tt = jnp.clip(terms, 0, self.index.offsets.shape[0] - 1)
+        return self.index.lengths[tt]
+
+    def driver_slot(self, terms: jnp.ndarray, n_terms) -> jnp.ndarray:
+        """Shortest-logical-list term slot (classic ZigZag driver
+        ordering — the driver bounds the number of candidate postings)."""
+        t_max = terms.shape[0]
+        lens = jnp.where(
+            jnp.arange(t_max) < n_terms,
+            self.list_lengths(terms),
+            jnp.int32(2**31 - 1),
+        )
+        return jnp.argmin(lens)
+
+    def driver_window(self, term, window: int):
+        """(docs, attrs, live) of the driver term, each ``[window]``."""
+        docs, attrs, valid = term_window(self.index, term, window)
+        return docs, attrs, valid
+
+    def member(self, a_docs, term, window: int, a_flags=None):
+        """Membership of each driver posting in the term's logical list."""
+        b_docs, _, _ = term_window(self.index, term, window)
+        return member_sorted(a_docs, b_docs)
+
+
+class MergedPostingSource(StaticPostingSource):
+    """Merge-on-read posting access over main + delta.
+
+    The driver stream is the merged window (tombstoned postings keep their
+    rank slots with ``live=0`` — the fused finalize pass kills them);
+    other-term membership never materializes a merged window: a driver
+    posting joins the logical list iff it occurs in the main list and its
+    doc is neither deleted nor superseded, OR it occurs in the delta list
+    and its doc is not deleted.  ``driver_flags`` supplies the per-posting
+    tombstone bits those probes key off.
+    """
+
+    def __init__(self, index: InvertedIndex, delta: DeltaIndex):
+        super().__init__(index)
+        self.delta = delta
+
+    @property
+    def doc_site(self) -> jnp.ndarray:
+        return self.delta.doc_site
+
+    def list_lengths(self, terms: jnp.ndarray) -> jnp.ndarray:
+        tt = jnp.clip(terms, 0, self.index.offsets.shape[0] - 1)
+        return self.index.lengths[tt] + self.delta.lengths[tt]
+
+    def driver_window(self, term, window: int):
+        docs, attrs, live = merged_term_window(
+            self.index, self.delta, term, window, drop_dead=False
+        )
+        return docs, attrs, live > 0
+
+    def driver_flags(self, a_docs) -> jnp.ndarray:
+        """Tombstone bits of each driver posting's document."""
+        return jnp.take(
+            self.delta.doc_flags, a_docs, mode="fill", fill_value=0
+        )
+
+    def member(self, a_docs, term, window: int, a_flags=None):
+        if a_flags is None:
+            a_flags = self.driver_flags(a_docs)
+        m_docs, _, _ = term_window(self.index, term, window)
+        d_docs, _, _ = delta_term_window(self.delta, term)
+        main_ok = (a_flags & jnp.int32(DOC_DEAD | DOC_SUPERSEDED)) == 0
+        delta_ok = (a_flags & jnp.int32(DOC_DEAD)) == 0
+        return (member_sorted(a_docs, m_docs) & main_ok) | (
+            member_sorted(a_docs, d_docs) & delta_ok
+        )
+
+
+def make_posting_source(
+    index: InvertedIndex, delta: DeltaIndex | None
+) -> StaticPostingSource:
+    return (
+        StaticPostingSource(index)
+        if delta is None
+        else MergedPostingSource(index, delta)
+    )
+
+
+# ---------------------------------------------------------------------------
 # Query execution (single query; vmap'ed for the batch)
 # ---------------------------------------------------------------------------
 
 def _query_topk_one(
-    index: InvertedIndex,
-    delta: DeltaIndex | None,
+    source: StaticPostingSource,
     terms: jnp.ndarray,       # int32[T_MAX]
     n_terms: jnp.ndarray,     # int32[]
     attr_filter: jnp.ndarray, # int32[]
@@ -254,41 +382,23 @@ def _query_topk_one(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     t_max = terms.shape[0]
 
-    # Drive the join from the *shortest* list (classic ZigZag ordering —
-    # the driver bounds the number of candidate postings).
-    driver_slot = _driver_slot(index, terms, n_terms, delta)
-    driver_term = terms[driver_slot]
-
-    if delta is None:
-        docs, attrs, valid = term_window(index, driver_term, window)
-        mask = valid
-    else:
-        # Merge-on-read driver: tombstoned postings keep their rank slots
-        # and die in the same fused pass as validity (kernel parity).
-        docs, attrs, live = merged_term_window(
-            index, delta, driver_term, window, drop_dead=False
-        )
-        mask = live > 0
+    driver_slot = source.driver_slot(terms, n_terms)
+    docs, attrs, mask = source.driver_window(terms[driver_slot], window)
+    a_flags = (
+        source.driver_flags(docs) if source.delta is not None else None
+    )
 
     # Join every other term's list (statically unrolled over T_MAX slots).
     for slot in range(t_max):
-        other = terms[slot]
         active = (jnp.arange(t_max)[slot] < n_terms) & (slot != driver_slot)
-        if delta is None:
-            b_docs, _, _ = term_window(index, other, window)
-        else:
-            b_docs, _, _ = merged_term_window(
-                index, delta, other, window, drop_dead=True
-            )
-        m = member_sorted(docs, b_docs)
+        m = source.member(docs, terms[slot], window, a_flags)
         mask = mask & jnp.where(active, m, True)
 
     # Limited search.
     if attr_strategy == "embed":
         ok = attrs == attr_filter
     elif attr_strategy == "gather":
-        doc_site = index.doc_site if delta is None else delta.doc_site
-        site = jnp.take(doc_site, jnp.clip(docs, 0, None), mode="clip")
+        site = jnp.take(source.doc_site, jnp.clip(docs, 0, None), mode="clip")
         ok = site == attr_filter
     elif attr_strategy == "site_term":
         ok = jnp.ones_like(mask)  # rewritten into a term at build time
@@ -301,6 +411,95 @@ def _query_topk_one(
 
 # ---------------------------------------------------------------------------
 # Kernel-backed execution (batched Pallas ZigZag join with posting skipping)
+# ---------------------------------------------------------------------------
+
+def _query_topk_batch_pallas(
+    index: InvertedIndex,
+    batch: QueryBatch,
+    *,
+    k: int,
+    window: int,
+    attr_strategy: str,
+    interpret: bool,
+    delta: DeltaIndex | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming Pallas path: one driver-window gather per query, then one
+    ``pallas_call`` whose other-term operand is the flat posting array
+    itself — per-(query, term) tile ranges are scalar-prefetched into the
+    BlockSpec index maps, so no ``(Q, T_MAX, window)`` staging buffer is
+    ever built.  Under merge-on-read the driver merge runs in VMEM
+    (:func:`repro.kernels.delta_merge.merge_delta_windows`) and the join
+    probes main and delta streams separately with the tombstone flags
+    deciding which probe counts (see :class:`MergedPostingSource`)."""
+    from repro.kernels import ops
+
+    t_max = batch.terms.shape[1]
+    source = make_posting_source(index, delta)
+
+    def pick(terms, n_terms):
+        driver_slot = source.driver_slot(terms, n_terms)
+        slots = jnp.arange(t_max)
+        active = ((slots < n_terms) & (slots != driver_slot)).astype(jnp.int32)
+        return terms[driver_slot], active
+
+    d_terms, active = jax.vmap(pick)(batch.terms, batch.n_terms)
+
+    # The driver window is the one materialization the join needs (the
+    # result is selected from it): a (Q, window) gather of the main stream.
+    m_docs, m_attrs, m_valid = jax.vmap(
+        lambda tm: term_window(index, tm, window)
+    )(d_terms)
+
+    if delta is None:
+        docs, live, a_flags = m_docs, jnp.ones_like(m_docs), None
+        attrs = m_attrs
+        delta_operands = ()
+    else:
+        m_live = (
+            jax.vmap(lambda d: posting_live(delta, d, from_delta=False))(
+                m_docs
+            )
+            & m_valid
+        ).astype(jnp.int32)
+        docs, attrs, live = ops.merge_windows(
+            m_docs, m_attrs, m_live, delta.postings, delta.attrs,
+            delta.offsets, delta.lengths, delta.block_max, d_terms,
+            interpret=interpret,
+        )
+        a_flags = source.driver_flags(docs)
+        delta_operands = (
+            delta.postings, delta.offsets, delta.lengths, delta.block_max,
+            a_flags,
+        )
+
+    if attr_strategy in ("embed", "site_term"):
+        astream = attrs
+    elif attr_strategy == "gather":
+        astream = jnp.take(
+            source.doc_site, jnp.clip(docs, 0, None), mode="clip"
+        )
+    else:
+        raise ValueError(attr_strategy)
+
+    # site_term rewrites the restriction into a join term at build time;
+    # disable the kernel's fused predicate (it keys off attr_filter >= 0).
+    attr_filter = (
+        jnp.full_like(batch.attr_filter, NO_ATTR)
+        if attr_strategy == "site_term"
+        else batch.attr_filter
+    )
+    mask = ops.intersect_streamed(
+        docs, astream, live, batch.terms, active, attr_filter,
+        index.postings, index.offsets, index.lengths, index.block_max,
+        *delta_operands,
+        interpret=interpret,
+    )
+    return jax.vmap(partial(_first_k_by_rank, k=k))(docs, mask > 0)
+
+
+# ---------------------------------------------------------------------------
+# Legacy staged path (backend="pallas_staged"): the pre-streaming data path,
+# kept only as the before/after comparator for benchmarks/bench_updates.py
 # ---------------------------------------------------------------------------
 
 def _query_windows(
@@ -322,9 +521,10 @@ def _query_windows(
     apply the tombstone predicate in its fused finalize pass.
     """
     t_max = batch.terms.shape[1]
+    source = make_posting_source(index, delta)
 
     def one(terms, n_terms):
-        driver_slot = _driver_slot(index, terms, n_terms, delta)
+        driver_slot = source.driver_slot(terms, n_terms)
         if delta is None:
             others = jax.vmap(
                 lambda tm: term_window(index, tm, window)[0]
@@ -369,7 +569,7 @@ def _query_windows(
     return jax.vmap(one)(batch.terms, batch.n_terms)
 
 
-def _query_topk_batch_pallas(
+def _query_topk_batch_staged(
     index: InvertedIndex,
     batch: QueryBatch,
     *,
@@ -379,10 +579,10 @@ def _query_topk_batch_pallas(
     interpret: bool,
     delta: DeltaIndex | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """One pallas_call for the whole batch: block-skipped ZigZag join with
-    the attribute predicate, validity, and (when a delta is attached) the
-    tombstone predicate fused in the same pass, then the same rank-order
-    selection as the jnp backend."""
+    """Legacy staged path: gathers every other-term window into a
+    ``(Q, T_MAX, window)`` HBM buffer (merge-on-read additionally pays a
+    host-side jnp merge sort per (query, term)) before one pallas_call.
+    Retained only for A/B measurement against the streaming path."""
     from repro.kernels import ops
 
     docs, astream, live, others, active = _query_windows(
@@ -431,29 +631,39 @@ def query_topk(
 
     ``backend`` selects the execution engine:
 
-    - ``"jnp"``    — the pure-jnp reference join (searchsorted membership);
-    - ``"pallas"`` — the batched block-skipping Pallas kernel
-      (:func:`repro.kernels.posting_intersect.intersect_batched_block_skip`);
-      ``interpret=True`` runs it under the Pallas interpreter so CPU CI
-      checks the exact kernel the TPU compiles.  ``interpret=None`` picks
-      interpret mode automatically off-TPU.
+    - ``"jnp"``    — the pure-jnp reference join (searchsorted membership
+      through the same :class:`PostingSource` layer);
+    - ``"pallas"`` — the streaming block-skipping Pallas path
+      (:func:`repro.kernels.posting_intersect.intersect_batched_streamed`
+      + :func:`repro.kernels.delta_merge.merge_delta_windows` under
+      merge-on-read); ``interpret=True`` runs it under the Pallas
+      interpreter so CPU CI checks the exact kernel the TPU compiles.
+      ``interpret=None`` picks interpret mode automatically off-TPU.
+    - ``"pallas_staged"`` — the legacy gather-based path (per-batch
+      ``(Q, T_MAX, window)`` staging + host-side merge sort), kept as the
+      before/after comparator for ``benchmarks/bench_updates.py``.
     """
     if backend == "jnp":
+        source = make_posting_source(index, delta)
         fn = partial(
             _query_topk_one,
-            index,
-            delta,
+            source,
             k=k,
             window=window,
             attr_strategy=attr_strategy,
         )
         return jax.vmap(fn)(batch.terms, batch.n_terms, batch.attr_filter)
-    if backend == "pallas":
+    if backend in ("pallas", "pallas_staged"):
         from repro.kernels import ops
 
         if interpret is None:
             interpret = ops.default_interpret()
-        return _query_topk_batch_pallas(
+        impl = (
+            _query_topk_batch_pallas
+            if backend == "pallas"
+            else _query_topk_batch_staged
+        )
+        return impl(
             index,
             batch,
             k=k,

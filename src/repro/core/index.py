@@ -19,7 +19,11 @@ TPU-native layout (all dense, HBM-resident):
   block ``b``.  A join can decide from ``block_max`` alone that a whole
   block cannot contain matches and skip its HBM->VMEM DMA — this is the
   paper's *posting skipping*, with a 128-posting block as the unit of I/O
-  instead of a disk page.
+  instead of a disk page.  The flat ``postings``/``attrs`` arrays are
+  additionally padded to a multiple of ``TILE = 8*BLOCK``: the streaming
+  kernels (:mod:`repro.kernels.posting_intersect`) DMA whole (8, 128) VMEM
+  tiles straight out of these arrays via scalar-prefetched offsets, with no
+  per-query window gather in between.
 - **Attribute embedding**: ``attrs[p]`` stores the embedded structured
   attribute (siteId) of ``postings[p]``; a limited search is one fused
   pass over (docid, attr) pairs — the paper's Fig 4(b).
@@ -40,8 +44,17 @@ import jax.numpy as jnp
 from repro.data.corpus import Corpus
 
 BLOCK = 128                      # postings per skip-table block (lane width)
+TILE = 8 * BLOCK                 # postings per VMEM tile (8 sublanes x 128 lanes)
 INVALID_DOC = np.int32(2**31 - 1)  # padding docID; sorts after every real doc
 INVALID_ATTR = np.int32(-1)
+
+# Tombstone bits of the online-update doc_flags bitmap (repro.indexing).
+# Defined here, next to the layout constants, so the kernel layer can fuse
+# the liveness predicate without depending on the write path: DEAD masks a
+# doc's postings in both structures; SUPERSEDED masks its *main* postings
+# only (the live version of the doc lives in the delta).
+DOC_DEAD = np.int32(1)
+DOC_SUPERSEDED = np.int32(2)
 
 
 class InvertedIndex(NamedTuple):
@@ -107,6 +120,10 @@ def _build_numpy(
     offsets = np.zeros(n_terms, dtype=np.int64)
     np.cumsum(padded[:-1], out=offsets[1:])
     total = int(offsets[-1] + padded[-1])
+    # TILE-align the flat arrays: the streaming kernels address postings as
+    # whole (8, 128) VMEM tiles straight from HBM (no per-query gather), so
+    # the array length must be a multiple of TILE.
+    total = ((total + TILE - 1) // TILE) * TILE
 
     postings = np.full(total, INVALID_DOC, dtype=np.int32)
     attrs = np.full(total, INVALID_ATTR, dtype=np.int32)
@@ -216,8 +233,11 @@ def build_sharded_index(
     def stack(key: str, pad_value) -> np.ndarray:
         ms = [a[key] for a in arrays]
         width = max(m.shape[0] for m in ms)
-        # keep BLOCK alignment of the padded width
-        if key in ("postings", "attrs", "doc_site"):
+        # keep the per-shard alignment of the padded width: postings/attrs
+        # stay TILE-aligned (the streaming kernels read them tile-wise).
+        if key in ("postings", "attrs"):
+            width = ((width + TILE - 1) // TILE) * TILE
+        elif key == "doc_site":
             width = ((width + BLOCK - 1) // BLOCK) * BLOCK
         out = np.full((ns, width), pad_value, dtype=ms[0].dtype)
         for i, m in enumerate(ms):

@@ -29,6 +29,10 @@ Mesh mapping (DESIGN.md §2):
   to the index with the same P(axis) sharding; each slave then answers
   with merge-on-read over its main partition + delta, so mutations are
   visible to live traffic without rebuilding or resharding the main index.
+  Inside shard_map each slave builds its PostingSource (static or merged;
+  see repro.core.engine) from the local index + delta slice, so the
+  streaming kernels run per-shard unchanged — the distributed layer only
+  moves pytrees, never posting windows.
 
 - ODYS sets (§3.1 fault tolerance) -> the ``pod`` axis: each pod is an
   independent replica engine; the query stream is sharded across pods and

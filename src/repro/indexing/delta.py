@@ -58,16 +58,14 @@ import jax.numpy as jnp
 
 from repro.core.index import (
     BLOCK,
+    DOC_DEAD,       # noqa: F401  (canonical home: core.index, next to the
+    DOC_SUPERSEDED,  # noqa: F401  layout constants the kernels import)
     INVALID_ATTR,
     INVALID_DOC,
+    TILE,
     IndexMeta,
 )
 from repro.data.corpus import Corpus, corpus_from_docs
-
-# doc_flags bits.  DEAD masks postings in both structures; SUPERSEDED masks
-# main postings only (the live version of the doc lives in the delta).
-DOC_DEAD = np.int32(1)
-DOC_SUPERSEDED = np.int32(2)
 
 
 class DeltaFullError(RuntimeError):
@@ -85,19 +83,28 @@ class DeltaFullError(RuntimeError):
 
 
 class DeltaIndex(NamedTuple):
-    """Device-side delta for ONE shard (same layout family as the main index)."""
+    """Device-side delta for ONE shard (same layout family as the main index).
+
+    ``postings``/``attrs`` are TILE-padded (like the main index) so the
+    streaming kernels can DMA whole (8, 128) tiles straight from the flat
+    arrays; ``block_max`` keeps its *exact* ``(n_terms*cap)//BLOCK`` length
+    — it is both the skip table the device read path consumes and the
+    record of the slab capacity (:attr:`term_capacity` derives from it).
+    """
 
     offsets: jnp.ndarray    # int32[n_terms]   t * term_capacity (BLOCK-aligned)
     lengths: jnp.ndarray    # int32[n_terms]   valid postings per list
-    postings: jnp.ndarray   # int32[n_terms * cap] local docIDs, ascending/list
-    attrs: jnp.ndarray      # int32[n_terms * cap] embedded siteId per posting
-    block_max: jnp.ndarray  # int32[(n_terms*cap)//BLOCK] skip table
+    postings: jnp.ndarray   # int32[>= n_terms * cap] docIDs (TILE-padded)
+    attrs: jnp.ndarray      # int32[>= n_terms * cap] siteIds (TILE-padded)
+    block_max: jnp.ndarray  # int32[(n_terms*cap)//BLOCK] skip table (valid-max)
     doc_flags: jnp.ndarray  # int32[nd_cap]    tombstone bitmap (both structures)
     doc_site: jnp.ndarray   # int32[nd_cap]    authoritative docID -> siteId
 
     @property
     def term_capacity(self) -> int:
-        return self.postings.shape[-1] // self.offsets.shape[-1]
+        # block_max is exact (never padded), so the slab width is static
+        # even though the flat posting arrays carry TILE padding.
+        return self.block_max.shape[-1] * BLOCK // self.offsets.shape[-1]
 
 
 class ShardedDelta(NamedTuple):
@@ -475,17 +482,32 @@ class DeltaWriter:
             return self._snapshot
         ns, cap = self.ns, self.term_capacity
         lengths = np.stack([s.lengths for s in self._shards])
-        postings = np.stack([s.postings.reshape(-1) for s in self._shards])
-        attrs = np.stack([s.attrs.reshape(-1) for s in self._shards])
+        # TILE-pad the flat arrays so the streaming kernels can address
+        # whole (8, 128) tiles; block_max stays exact (see DeltaIndex).
+        flat = self.n_terms * cap
+        flat_pad = -(-flat // TILE) * TILE
+        postings = np.full((ns, flat_pad), INVALID_DOC, np.int32)
+        attrs = np.full((ns, flat_pad), INVALID_ATTR, np.int32)
+        for s, st in enumerate(self._shards):
+            postings[s, :flat] = st.postings.reshape(-1)
+            attrs[s, :flat] = st.attrs.reshape(-1)
         # Skip table, computed sparsely: all-padding blocks reduce to
         # INVALID_DOC, so only occupied term slabs need the max-reduction
-        # (the snapshot sits on the ingest hot path).
+        # (the snapshot sits on the ingest hot path).  Unlike the main
+        # index, the max is over *valid* postings only (a partially-filled
+        # block records its true max, an empty block INVALID_DOC): the
+        # device read path uses this table both for posting skipping and to
+        # tell an occupied slab from an empty one (delta-merge skip).
         bpt = cap // BLOCK
         block_max = np.full((ns, self.n_terms * bpt), INVALID_DOC, np.int32)
         for s, st in enumerate(self._shards):
             for t in np.flatnonzero(st.lengths):
-                block_max[s, t * bpt:(t + 1) * bpt] = (
-                    st.postings[t].reshape(bpt, BLOCK).max(axis=1)
+                ln = int(st.lengths[t])
+                row = np.where(
+                    np.arange(cap) < ln, st.postings[t], np.int32(-1)
+                ).reshape(bpt, BLOCK).max(axis=1)
+                block_max[s, t * bpt:(t + 1) * bpt] = np.where(
+                    row >= 0, row.astype(np.int32), INVALID_DOC
                 )
         offsets = np.broadcast_to(
             (np.arange(self.n_terms, dtype=np.int32) * cap)[None], (ns, self.n_terms)

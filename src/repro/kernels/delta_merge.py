@@ -1,0 +1,234 @@
+"""Pallas TPU kernel: in-VMEM merge of main and delta posting streams.
+
+Merge-on-read (:mod:`repro.indexing`) makes every driver window the merge
+of the term's *main* window and its *delta* slab.  The original data path
+realized that merge host-side — a jnp ``argsort`` over ``window + cap``
+keys per (query, term) — which is exactly the kind of extra pass the
+paper's slave cost model (§4, Formula (7)) has no term for.  This kernel
+does the merge where the data already is:
+
+- both inputs are sorted (the main window ascending by construction, the
+  delta slab ascending per list), so the merge is a single **bitonic merge
+  pass** — ``log2(N)`` data-independent compare-exchange stages over the
+  concatenation of the main stream and the *reversed* delta stream (an
+  ascending-then-descending, i.e. bitonic, sequence) — not a full
+  ``O(log^2 N)`` sort;
+- the delta slab is **streamed straight from the flat delta arrays** via a
+  scalar-prefetched slab index in the BlockSpec index map (no per-query
+  gather of delta postings);
+- the delta's **block-max skip table** is read per query: a slab whose
+  occupied-block count is zero short-circuits the whole network to a
+  copy-through (at 0% fill the merge costs one VMEM copy);
+- the **tombstone predicate** rides through the same pass: the driver's
+  per-posting live stream (main postings dead when their doc is deleted or
+  superseded; delta postings are physically removed on delete, so their
+  liveness is just slab validity) is carried as a payload through every
+  compare-exchange and the final ``live & (doc != INVALID)`` mask is
+  emitted by the kernel itself — no separate host-side masking sweep.
+
+Ties (a doc updated in place has a dead main posting *and* a live delta
+posting with the same docID) break by stream id (main first), matching the
+stable host-side sort this kernel replaces; see
+:func:`repro.core.engine.merged_term_window`, which remains the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.index import BLOCK, INVALID_ATTR, INVALID_DOC
+from repro.kernels.posting_intersect import LANES
+
+# Slab addressing below (cap_rows = cap // LANES with BLOCK-aligned caps)
+# relies on one lane row being exactly one skip-table block.
+assert LANES == BLOCK
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+def _bitonic_merge_flat(key, src, payloads):
+    """Ascending merge of a bitonic ``key`` sequence, ties broken by
+    ``src`` (stream id); ``payloads`` travel with their key."""
+    n = key.shape[0]
+    log_n = n.bit_length() - 1
+    assert 1 << log_n == n, "bitonic merge needs power-of-two length"
+    for j in range(log_n - 1, -1, -1):
+        d = 1 << j
+        blocks = n // (2 * d)
+        k2 = key.reshape(blocks, 2, d)
+        s2 = src.reshape(blocks, 2, d)
+        swap = (k2[:, 0] > k2[:, 1]) | (
+            (k2[:, 0] == k2[:, 1]) & (s2[:, 0] > s2[:, 1])
+        )
+
+        def exchange(x):
+            x2 = x.reshape(blocks, 2, d)
+            lo = jnp.where(swap, x2[:, 1], x2[:, 0])
+            hi = jnp.where(swap, x2[:, 0], x2[:, 1])
+            return jnp.stack([lo, hi], axis=1).reshape(n)
+
+        key, src = exchange(key), exchange(src)
+        payloads = tuple(exchange(p) for p in payloads)
+    return key, src, payloads
+
+
+def _merge_kernel(
+    # scalar-prefetch (SMEM):
+    slab_ref,   # int32[Q] delta slab index of each query's driver term
+    len_ref,    # int32[Q] valid postings in that slab
+    occ_ref,    # int32[Q] occupied blocks per slab (from the skip table)
+    # VMEM:
+    md_ref,     # (1, W/128, 128) main window docids
+    ma_ref,     # (1, W/128, 128) main window attrs
+    ml_ref,     # (1, W/128, 128) main window live stream
+    dp_ref,     # (cap/128, 128)  delta slab docids (streamed)
+    da_ref,     # (cap/128, 128)  delta slab attrs (streamed)
+    od_ref, oa_ref, ol_ref,       # (1, W/128, 128) merged outputs
+    *,
+    window: int,
+    cap: int,
+    n_pad: int,
+):
+    q = pl.program_id(0)
+
+    # Skip-table short-circuit: an empty slab merges to the main window.
+    @pl.when(occ_ref[q] == 0)
+    def _copy_through():
+        od_ref[...] = md_ref[...]
+        oa_ref[...] = ma_ref[...]
+        ol_ref[...] = ml_ref[...]
+
+    @pl.when(occ_ref[q] != 0)
+    def _merge():
+        md = md_ref[...].reshape(-1)
+        ma = ma_ref[...].reshape(-1)
+        ml = ml_ref[...].reshape(-1)
+        d_valid = jnp.arange(cap, dtype=jnp.int32) < len_ref[q]
+        dd = jnp.where(d_valid, dp_ref[...].reshape(-1), INVALID_DOC)
+        da = jnp.where(d_valid, da_ref[...].reshape(-1), INVALID_ATTR)
+        dl = d_valid.astype(jnp.int32)
+
+        # ascending main ++ pad ++ descending delta = bitonic
+        pad = n_pad - window - cap
+        key = jnp.concatenate(
+            [md, jnp.full((pad,), INVALID_DOC, jnp.int32), dd[::-1]]
+        )
+        attr = jnp.concatenate(
+            [ma, jnp.full((pad,), INVALID_ATTR, jnp.int32), da[::-1]]
+        )
+        live = jnp.concatenate([ml, jnp.zeros((pad,), jnp.int32), dl[::-1]])
+        src = jnp.concatenate(
+            [
+                jnp.zeros((window,), jnp.int32),
+                jnp.ones((n_pad - window,), jnp.int32),
+            ]
+        )
+        key, _, (attr, live) = _bitonic_merge_flat(key, src, (attr, live))
+        docs = key[:window]
+        od_ref[...] = docs.reshape(od_ref.shape)
+        oa_ref[...] = attr[:window].reshape(oa_ref.shape)
+        ol_ref[...] = (
+            live[:window] * (docs != INVALID_DOC).astype(jnp.int32)
+        ).reshape(ol_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_delta_windows(
+    m_docs: jnp.ndarray,       # int32[Q, W] main driver windows, ascending
+    m_attrs: jnp.ndarray,      # int32[Q, W] main attribute streams
+    m_live: jnp.ndarray,       # int32[Q, W] main tombstone/validity stream
+    d_postings: jnp.ndarray,   # int32[D]    flat delta postings (TILE-padded)
+    d_attrs: jnp.ndarray,      # int32[D]    flat delta attrs
+    d_offsets: jnp.ndarray,    # int32[n_terms]
+    d_lengths: jnp.ndarray,    # int32[n_terms]
+    d_block_max: jnp.ndarray,  # int32[n_terms * cap / BLOCK] skip table
+    terms: jnp.ndarray,        # int32[Q]    driver term per query
+    *,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Merged (docs, attrs, live) driver windows, each int32[Q, W].
+
+    Matches :func:`repro.core.engine.merged_term_window` with
+    ``drop_dead=False`` on (docs, live) exactly; attrs are guaranteed only
+    where ``docs != INVALID_DOC`` (padding slots may carry junk attributes
+    in a different — equally dead — order than the host sort produces).
+    ``m_live`` must already be masked by main-window validity (the engine's
+    :func:`~repro.core.engine.posting_live` & valid), as the kernel only
+    adds the merged-slot validity term.
+    """
+    q_n, n_out = m_docs.shape
+    n_terms = d_offsets.shape[0]
+    cap = d_block_max.shape[0] * BLOCK // n_terms
+    bpt = cap // BLOCK
+    # Lane-pad odd windows: INVALID keys sort last, so merging the padded
+    # main stream and truncating back to n_out is exact.
+    window = -(-n_out // LANES) * LANES
+    if window != n_out:
+        pad = [(0, 0), (0, window - n_out)]
+        m_docs = jnp.pad(m_docs, pad, constant_values=INVALID_DOC)
+        m_attrs = jnp.pad(m_attrs, pad, constant_values=INVALID_ATTR)
+        m_live = jnp.pad(m_live, pad, constant_values=0)
+    assert d_postings.shape[0] % LANES == 0
+
+    tt = jnp.clip(terms, 0, n_terms - 1)
+    slab = jnp.take(d_offsets, tt) // cap
+    d_len = jnp.where(terms < 0, 0, jnp.take(d_lengths, tt))
+    occ_per_term = jnp.sum(
+        d_block_max.reshape(n_terms, bpt) != INVALID_DOC, axis=1
+    ).astype(jnp.int32)
+    d_occ = jnp.where(terms < 0, 0, jnp.take(occ_per_term, tt))
+
+    n_pad = _next_pow2(window + cap)
+    rows = window // LANES
+    cap_rows = cap // LANES
+    m3 = lambda x: x.reshape(q_n, rows, LANES)
+    dp2 = d_postings.reshape(-1, LANES)
+    da2 = d_attrs.reshape(-1, LANES)
+
+    def m_map(q, slab_ref, len_ref, occ_ref):
+        return (q, 0, 0)
+
+    def d_map(q, slab_ref, len_ref, occ_ref):
+        # empty slabs pin to block 0: the copy-through never reads the
+        # operand, and consecutive skipped queries coalesce onto one
+        # already-resident block instead of one slab DMA each
+        return (jnp.where(occ_ref[q] == 0, 0, slab_ref[q]), 0)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(q_n,),
+        in_specs=[
+            pl.BlockSpec((1, rows, LANES), m_map),
+            pl.BlockSpec((1, rows, LANES), m_map),
+            pl.BlockSpec((1, rows, LANES), m_map),
+            pl.BlockSpec((cap_rows, LANES), d_map),
+            pl.BlockSpec((cap_rows, LANES), d_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rows, LANES), m_map),
+            pl.BlockSpec((1, rows, LANES), m_map),
+            pl.BlockSpec((1, rows, LANES), m_map),
+        ],
+    )
+    shape = jax.ShapeDtypeStruct((q_n, rows, LANES), jnp.int32)
+    docs, attrs, live = pl.pallas_call(
+        functools.partial(
+            _merge_kernel, window=window, cap=cap, n_pad=n_pad
+        ),
+        grid_spec=grid_spec,
+        out_shape=[shape, shape, shape],
+        interpret=interpret,
+    )(
+        slab, d_len, d_occ,
+        m3(m_docs), m3(m_attrs), m3(m_live.astype(jnp.int32)),
+        dp2, da2,
+    )
+    unroll = lambda x: x.reshape(q_n, -1)[:, :n_out]
+    return unroll(docs), unroll(attrs), unroll(live)

@@ -9,11 +9,14 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
+from repro.kernels.delta_merge import merge_delta_windows
 from repro.kernels.posting_intersect import (
     compute_skip_map,
     intersect_batched_block_skip,
+    intersect_batched_streamed,
     intersect_block_skip,
     skip_fraction,
+    window_tile_spans,
 )
 from repro.kernels.topk_merge import bitonic_sort, merge_topk, merge_topk_rows
 
@@ -46,6 +49,39 @@ def intersect_batched(a_docs, a_attrs, b_docs, active, attr_filter, *,
     )
 
 
+def intersect_streamed(a_docs, a_attrs, a_live, terms, active, attr_filter,
+                       postings, offsets, lengths, block_max,
+                       d_postings=None, d_offsets=None, d_lengths=None,
+                       d_block_max=None, a_flags=None, *,
+                       s_max=None, interpret: bool | None = None):
+    """Batched ZigZag join with other-term windows streamed straight from
+    the flat index arrays (no ``(Q, T, W)`` staging gather).  Pass the
+    ``d_*`` delta arrays + ``a_flags`` for merge-on-read.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return intersect_batched_streamed(
+        a_docs, a_attrs, a_live, terms, active, attr_filter,
+        postings, offsets, lengths, block_max,
+        d_postings, d_offsets, d_lengths, d_block_max, a_flags,
+        s_max=s_max, interpret=interpret,
+    )
+
+
+def merge_windows(m_docs, m_attrs, m_live, d_postings, d_attrs,
+                  d_offsets, d_lengths, d_block_max, terms, *,
+                  interpret: bool | None = None):
+    """In-VMEM merge of main driver windows with the delta posting streams
+    (tombstone stream fused; empty slabs short-circuit via the delta's
+    block-max skip table)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return merge_delta_windows(
+        m_docs, m_attrs, m_live, d_postings, d_attrs,
+        d_offsets, d_lengths, d_block_max, terms, interpret=interpret,
+    )
+
+
 def sort(x, *, interpret: bool | None = None):
     if interpret is None:
         interpret = default_interpret()
@@ -68,6 +104,9 @@ def topk_merge_rows(cands, k, *, interpret: bool | None = None):
 __all__ = [
     "intersect",
     "intersect_batched",
+    "intersect_streamed",
+    "merge_windows",
+    "window_tile_spans",
     "sort",
     "topk_merge",
     "topk_merge_rows",

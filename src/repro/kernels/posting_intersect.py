@@ -26,16 +26,21 @@ from __future__ import annotations
 
 import functools
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.index import INVALID_DOC
+from repro.core.index import BLOCK, DOC_DEAD, DOC_SUPERSEDED, INVALID_DOC, TILE
 
 TILE_ROWS = 8
 LANES = 128
-TILE = TILE_ROWS * LANES  # 1024 postings per skippable tile
+# One skippable tile = 1024 postings; the flat arrays are padded to this in
+# core.index, so tile addressing and padding cannot desynchronize.
+assert TILE == TILE_ROWS * LANES
+_NEG = np.int32(-(2**31))  # below every docID; span sentinel
 
 
 def _tile_member(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -359,6 +364,325 @@ def intersect_batched_block_skip(
         ),
         interpret=interpret,
     )(b_start, n_b, active, attr_params, a2, aa2, al2, b2)
+    return out.reshape(q_n, -1)[:, :n_a]
+
+
+# ---------------------------------------------------------------------------
+# Streamed variant: other-term windows read straight from the flat index
+# ---------------------------------------------------------------------------
+#
+# The batched kernel above takes a pre-gathered (Q, T, W) other-term operand
+# — a per-batch HBM staging buffer the paper's cost model has no term for
+# (postings are supposed to stream off storage once).  The streamed variant
+# removes it: the B operand *is* the index's flat posting array, and the
+# BlockSpec index map walks per-(query, term) tile ranges computed from the
+# skip table and scalar-prefetched into SMEM.  A tile holds whatever 1024
+# physical postings surround the list (lists are BLOCK-aligned, tiles are
+# 8xBLOCK), so the kernel range-masks each tile to the term's logical
+# window [offset, offset + min(len, window)) before the membership compare.
+#
+# Merge-on-read needs no merged other-term windows at all: membership in
+# the *logical* (merged) list is membership in the main list OR the delta
+# list, each probed against its own flat array in the same grid sweep, with
+# the driver posting's tombstone flags deciding which probe may count (a
+# superseded doc's main postings are dead everywhere, so only its delta
+# occurrences join).  That turns the per-(query, term) host-side merge sort
+# of the old path into two streaming probes over the physical structures.
+
+
+def window_tile_spans(
+    block_max: jnp.ndarray, off: jnp.ndarray, n_eff: jnp.ndarray,
+    *, s_tiles: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Physical-tile spans of the logical window [off, off+n_eff), from the
+    BLOCK skip table.
+
+    Returns ``(tile0, n_tiles, tile_min[s_tiles], tile_max[s_tiles])``:
+    tile0 is the first TILE-aligned tile touching the window, n_tiles how
+    many tiles the window spans, and tile_min/tile_max conservative span
+    surrogates per tile (ascending, INVALID-filled past the window) — a
+    tile whose span cannot overlap a driver tile is *skipped* (never
+    DMA'd).  tile_min[s] is the previous tile's max (postings ascend inside
+    a list, so it lower-bounds the true min); a partially-filled final
+    block may report INVALID_DOC (the main index's raw skip table) which
+    only widens the span — skipping stays conservative either way.
+    """
+    bpt = TILE // BLOCK
+    hi = off + n_eff
+    tile0 = off // TILE
+    n_tiles = jnp.where(n_eff > 0, (hi + TILE - 1) // TILE - tile0, 0)
+    blk = (
+        (tile0 + jnp.arange(s_tiles, dtype=jnp.int32))[:, None] * bpt
+        + jnp.arange(bpt, dtype=jnp.int32)[None, :]
+    )
+    blo = off // BLOCK
+    bhi = (hi + BLOCK - 1) // BLOCK
+    inside = (blk >= blo) & (blk < bhi)
+    bm = jnp.take(block_max, blk, mode="fill", fill_value=INVALID_DOC)
+    tmax = jnp.max(jnp.where(inside, bm, _NEG), axis=1)
+    any_inside = jnp.any(inside, axis=1)
+    tile_max = jnp.where(any_inside, tmax, INVALID_DOC)
+    tile_min = jnp.concatenate([jnp.full((1,), _NEG), tile_max[:-1]])
+    return tile0, n_tiles, tile_min, tile_max
+
+
+def _a_tile_spans(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-driver-tile (min, max, any_valid) over TILE-padded (Q, W) docs."""
+    at = a.reshape(a.shape[0], -1, TILE)
+    valid = at != INVALID_DOC
+    a_min = at[:, :, 0]
+    a_max = jnp.max(jnp.where(valid, at, -1), axis=2)
+    a_any = jnp.any(valid, axis=2)
+    return a_min, a_max, a_any
+
+
+def _probe_plan(
+    a: jnp.ndarray,            # (Q, Wpad) TILE-padded driver windows
+    terms: jnp.ndarray,        # (Q, T)
+    offsets: jnp.ndarray, lengths: jnp.ndarray, block_max: jnp.ndarray,
+    *, window: int, s_tiles: int,
+):
+    """Per-(query, term, driver-tile) streaming plan: (b_tile, n_b, bounds).
+
+    b_tile is the first overlapping physical tile in the flat posting
+    array, n_b how many consecutive tiles to stream, bounds the logical
+    [lo, hi) posting range the kernel masks each tile to.
+    """
+    tt = jnp.clip(terms, 0, offsets.shape[0] - 1)
+    off = jnp.take(offsets, tt)
+    ln = jnp.where(terms < 0, 0, jnp.take(lengths, tt))
+    n_eff = jnp.minimum(ln, window)
+    tile0, n_tiles, tile_min, tile_max = jax.vmap(
+        jax.vmap(functools.partial(window_tile_spans, block_max, s_tiles=s_tiles))
+    )(off, n_eff)
+    a_min, a_max, a_any = _a_tile_spans(a)
+    start = jax.vmap(
+        jax.vmap(
+            lambda tm, am: jnp.searchsorted(tm, am, side="left"),
+            in_axes=(0, None),
+        )
+    )(tile_max, a_min).astype(jnp.int32)
+    end = jax.vmap(
+        jax.vmap(
+            lambda tm, am: jnp.searchsorted(tm, am, side="right"),
+            in_axes=(0, None),
+        )
+    )(tile_min, a_max).astype(jnp.int32)
+    start = jnp.minimum(start, n_tiles[:, :, None])
+    end = jnp.minimum(end, n_tiles[:, :, None])
+    n_b = jnp.clip(end - start, 0, None) * a_any[:, None, :].astype(jnp.int32)
+    b_tile = tile0[:, :, None] + start
+    bounds = jnp.stack([off, off + n_eff], axis=-1)
+    return b_tile, n_b, bounds
+
+
+def _tile_positions(tile_id):
+    """Global posting positions of one (8, 128) tile."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, LANES), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, LANES), 1)
+    return tile_id * TILE + r * LANES + c
+
+
+def _streamed_kernel(*refs, t_slots: int, s_max: int, has_delta: bool):
+    if has_delta:
+        (bt_ref, nb_ref, mb_ref, dt_ref, nd_ref, db_ref, act_ref, attr_ref,
+         a_ref, aa_ref, al_ref, af_ref, pm_ref, pd_ref,
+         out_ref, mm_ref, md_ref) = refs
+    else:
+        (bt_ref, nb_ref, mb_ref, act_ref, attr_ref,
+         a_ref, aa_ref, al_ref, pm_ref, out_ref, mm_ref) = refs
+    q = pl.program_id(0)
+    i = pl.program_id(1)
+    t = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when((t == 0) & (j == 0))
+    def _init_out():
+        out_ref[...] = jnp.ones_like(out_ref)
+
+    @pl.when(j == 0)
+    def _init_members():
+        mm_ref[...] = jnp.zeros_like(mm_ref)
+        if has_delta:
+            md_ref[...] = jnp.zeros_like(md_ref)
+
+    def _probe(start_ref, n_ref, bounds_ref, tile_arr_ref, member_ref):
+        # Posting skipping: only tiles inside the precomputed overlap range
+        # are compared (and, on TPU, DMA'd — see the index maps).  The tile
+        # is range-masked to the term's logical window so postings of
+        # neighboring lists sharing the tile can never produce a match.
+        @pl.when(j < n_ref[q, t, i])
+        def _():
+            pos = _tile_positions(start_ref[q, t, i] + j)
+            in_range = (pos >= bounds_ref[q, t, 0]) & (pos < bounds_ref[q, t, 1])
+            b = jnp.where(in_range, tile_arr_ref[...], INVALID_DOC)
+            m = _tile_member(a_ref[0], b)
+            member_ref[...] = member_ref[...] | m.astype(jnp.int32)
+
+    _probe(bt_ref, nb_ref, mb_ref, pm_ref, mm_ref)
+    if has_delta:
+        _probe(dt_ref, nd_ref, db_ref, pd_ref, md_ref)
+
+    # End of this term's sweep: AND the term's membership into the mask.
+    @pl.when(j == s_max - 1)
+    def _fold_term():
+        active = act_ref[q, t] != 0
+        if has_delta:
+            # A driver posting joins the term's *logical* list if it occurs
+            # in the main list (and its doc is neither deleted nor
+            # superseded) or in the delta list (and its doc is not
+            # deleted) — the merge-on-read semantics without materializing
+            # a merged window.
+            flags = af_ref[0]
+            main_ok = (flags & jnp.int32(DOC_DEAD | DOC_SUPERSEDED)) == 0
+            delta_ok = (flags & jnp.int32(DOC_DEAD)) == 0
+            term_ok = (
+                ((mm_ref[...] != 0) & main_ok)
+                | ((md_ref[...] != 0) & delta_ok)
+            ).astype(jnp.int32)
+        else:
+            term_ok = mm_ref[...]
+        out_ref[0] = out_ref[0] * jnp.where(active, term_ok, 1)
+
+    # Last term slot: fuse validity + attribute + tombstone predicates.
+    @pl.when((t == t_slots - 1) & (j == s_max - 1))
+    def _finalize():
+        keep = _fused_keep(
+            a_ref[0], aa_ref[0], attr_ref[q, 0], attr_ref[q, 1] != 0,
+            live=al_ref[0],
+        )
+        out_ref[0] = out_ref[0] * keep
+
+
+@functools.partial(jax.jit, static_argnames=("s_max", "interpret"))
+def intersect_batched_streamed(
+    a_docs: jnp.ndarray,       # int32[Q, W]  driver windows
+    a_attrs: jnp.ndarray,      # int32[Q, W]  driver attribute streams
+    a_live: jnp.ndarray,       # int32[Q, W]  driver tombstone stream
+    terms: jnp.ndarray,        # int32[Q, T]  term ids per slot (NO_TERM pad)
+    active: jnp.ndarray,       # int32[Q, T]  1 iff slot t joins query q
+    attr_filter: jnp.ndarray,  # int32[Q]     NO_ATTR(-1) = unrestricted
+    postings: jnp.ndarray,     # int32[P]     main flat postings (TILE-padded)
+    offsets: jnp.ndarray, lengths: jnp.ndarray, block_max: jnp.ndarray,
+    d_postings: jnp.ndarray | None = None,   # delta flat postings (TILE-pad)
+    d_offsets: jnp.ndarray | None = None,
+    d_lengths: jnp.ndarray | None = None,
+    d_block_max: jnp.ndarray | None = None,
+    a_flags: jnp.ndarray | None = None,      # int32[Q, W] driver doc_flags
+    *,
+    s_max: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched ZigZag join with other-term windows streamed from the index.
+
+    Same contract as :func:`intersect_batched_block_skip`, but the B
+    operand is the index's flat posting array itself: per-(query, term,
+    driver-tile) tile ranges — computed from the BLOCK skip table, not
+    from gathered windows — are scalar-prefetched, and the BlockSpec index
+    map walks them, so the ``(Q, T, W)`` staging gather disappears and
+    non-overlapping tiles are never DMA'd.
+
+    Passing the delta arrays (``d_*`` + ``a_flags``, all or none) turns on
+    merge-on-read: each term is probed against main *and* delta streams
+    and the driver posting's tombstone flags decide which probe counts.
+    Returns int32[Q, W] in {0, 1}.
+    """
+    has_delta = d_postings is not None
+    q_n, n_a = a_docs.shape
+    window = n_a
+    t_slots = terms.shape[1]
+    a = _pad_to_tile(a_docs, INVALID_DOC)
+    aa = _pad_to_tile(a_attrs, -1)
+    al = _pad_to_tile(a_live.astype(jnp.int32), 0)
+    num_a = a.shape[1] // TILE
+    assert postings.shape[0] % TILE == 0, "main postings must be TILE-padded"
+    num_m = postings.shape[0] // TILE
+
+    # A BLOCK-aligned list offset can straddle one more physical tile than
+    # the window itself spans: ceil, not floor, or matches silently drop
+    # for windows that are BLOCK- but not TILE-aligned.
+    s_tiles_m = -(-window // TILE) + 1
+    b_tile, n_b, bounds_m = _probe_plan(
+        a, terms, offsets, lengths, block_max,
+        window=window, s_tiles=s_tiles_m,
+    )
+    s_grid = _clamp_s_max(s_max, s_tiles_m)
+    n_b = jnp.minimum(n_b, s_grid) * active[:, :, None]
+
+    active = active.astype(jnp.int32)
+    attr_params = jnp.stack(
+        [attr_filter.astype(jnp.int32), (attr_filter >= 0).astype(jnp.int32)],
+        axis=-1,
+    )
+    a2 = a.reshape(q_n, num_a * TILE_ROWS, LANES)
+    aa2 = aa.reshape(q_n, num_a * TILE_ROWS, LANES)
+    al2 = al.reshape(q_n, num_a * TILE_ROWS, LANES)
+    pm2 = postings.reshape(num_m * TILE_ROWS, LANES)
+
+    scalars = [b_tile, n_b, bounds_m]
+    operands = [a2, aa2, al2]
+    if has_delta:
+        assert d_postings.shape[0] % TILE == 0, "delta must be TILE-padded"
+        num_d = d_postings.shape[0] // TILE
+        cap = d_block_max.shape[0] * BLOCK // d_offsets.shape[0]
+        s_tiles_d = -(-cap // TILE) + 1
+        d_tile, n_d, bounds_d = _probe_plan(
+            a, terms, d_offsets, d_lengths, d_block_max,
+            window=cap, s_tiles=s_tiles_d,
+        )
+        s_grid = max(s_grid, _clamp_s_max(s_max, s_tiles_d))
+        n_d = jnp.minimum(n_d, s_grid) * active[:, :, None]
+        scalars += [d_tile, n_d, bounds_d]
+        af2 = _pad_to_tile(a_flags.astype(jnp.int32), 0).reshape(
+            q_n, num_a * TILE_ROWS, LANES
+        )
+        operands.append(af2)
+        pd2 = d_postings.reshape(num_d * TILE_ROWS, LANES)
+    scalars += [active, attr_params]
+    n_scalars = len(scalars)
+
+    def a_map(q, i, t, j, *_):
+        return (q, i, 0)
+
+    def _flat_map(start_idx, n_idx, num_tiles):
+        def b_map(q, i, t, j, *refs):
+            # Out-of-range steps remap to an already-resident tile (DMA
+            # elided); zero-tile slots pin to tile 0 so consecutive inert
+            # steps coalesce.
+            nb = refs[n_idx][q, t, i]
+            jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
+            tile = jnp.minimum(refs[start_idx][q, t, i] + jj, num_tiles - 1)
+            return (jnp.where(nb == 0, 0, tile), 0)
+        return b_map
+
+    in_specs = [
+        pl.BlockSpec((1, TILE_ROWS, LANES), a_map) for _ in operands
+    ] + [pl.BlockSpec((TILE_ROWS, LANES), _flat_map(0, 1, num_m))]
+    operands.append(pm2)
+    scratch = [pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)]
+    if has_delta:
+        in_specs.append(pl.BlockSpec((TILE_ROWS, LANES), _flat_map(3, 4, num_d)))
+        operands.append(pd2)
+        scratch.append(pltpu.VMEM((TILE_ROWS, LANES), jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=n_scalars,
+        grid=(q_n, num_a, t_slots, s_grid),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
+        scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _streamed_kernel, t_slots=t_slots, s_max=s_grid,
+            has_delta=has_delta,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (q_n, num_a * TILE_ROWS, LANES), jnp.int32
+        ),
+        interpret=interpret,
+    )(*scalars, *operands)
     return out.reshape(q_n, -1)[:, :n_a]
 
 

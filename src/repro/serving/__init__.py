@@ -5,11 +5,22 @@ front-ends:
 
 - :mod:`repro.serving.search` — `SearchService`, a thin façade binding the
   scheduler to the distributed DB-IR query engine: admission queue ->
-  ``(t_max, k)``-bucketed micro-batches (padded, never recompiling) ->
-  version-stamped LRU result cache -> multi-set router -> slave broadcast +
-  master merge on the mesh.
+  ``(t_max, k)``-bucketed micro-batches (padded, never recompiling; the
+  formation deadline can be *adaptive* — ``max_wait`` shrinks as the
+  arrival rate approaches fitted capacity and drops to zero when a bucket
+  cannot fill in time anyway) -> version-stamped LRU result cache ->
+  multi-set router (optionally health-aware: a dead ODYS set is skipped
+  and re-admitted on recovery, `HealthAwareRouter` +
+  :mod:`repro.core.faults`) -> slave broadcast + master merge on the mesh.
 - :mod:`repro.serving.engine` — `ServingEngine`, the LM decode loop, which
   reuses the scheduler's micro-batch formation for its request queue.
+
+Below the dispatch boundary the engine reads postings through the
+**PostingSource** layer (:mod:`repro.core.engine`): the slave join streams
+other-term windows straight from the flat index arrays and merges delta
+postings in-kernel (:mod:`repro.kernels.delta_merge`), so a dispatched
+batch is one streaming pass over the physical index — the discipline the
+calibrated cost model (§4) assumes.
 
 Closing the loop with the paper's hybrid performance model (§4-§5):
 :mod:`repro.core.calibrate` fits `MasterParams` from this pipeline's live
@@ -20,6 +31,7 @@ response time with Formula (18) estimation error.
 (`repro.serving.engine` is not imported here: it pulls in the LM model
 stack, which search-only users don't need.)
 """
+from repro.serving.router import HealthAwareRouter  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     MasterScheduler,
     MultiSetRouter,

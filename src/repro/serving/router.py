@@ -1,12 +1,21 @@
-"""ODYS-style distributed top-k over a vocab-sharded LM head.
+"""Serving-layer routing: set-health-aware batch routing + the ODYS-style
+distributed top-k over a vocab-sharded LM head.
 
-DESIGN.md §3.1: greedy/top-k decoding with the LM head sharded over the
-``model`` axis *is* the ODYS master/slave merge problem — each shard owns
-a vocabulary slice ("document partition"), computes its local top-k
-("slave top-k"), and a log-depth tournament merges candidates ("master
-loser tree").  The naive alternative all-gathers the full (B, V) logits
-(V up to 256k for gemma): the ODYS formulation moves k candidates per
-shard instead — the collective-term optimization measured in §Perf.
+**Batch routing** (paper §3.1/§5.2): :class:`HealthAwareRouter` extends the
+scheduler's least-loaded multi-set router with the set-granular failover of
+:mod:`repro.core.faults` — a dead ODYS set receives no batches (queries are
+stateless and the index replicated, so skipping a set is safe) and resumes
+receiving them the moment it recovers.  Wire it into
+:class:`~repro.serving.scheduler.MasterScheduler` via ``router=`` (the
+:class:`~repro.serving.search.SearchService` ``set_health=`` knob does so).
+
+**LM head top-k** (DESIGN.md §3.1): greedy/top-k decoding with the LM head
+sharded over the ``model`` axis *is* the ODYS master/slave merge problem —
+each shard owns a vocabulary slice ("document partition"), computes its
+local top-k ("slave top-k"), and a log-depth tournament merges candidates
+("master loser tree").  The naive alternative all-gathers the full (B, V)
+logits (V up to 256k for gemma): the ODYS formulation moves k candidates
+per shard instead — the collective-term optimization measured in §Perf.
 """
 from __future__ import annotations
 
@@ -18,6 +27,42 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
+from repro.core.faults import SetHealth
+from repro.serving.scheduler import MultiSetRouter, SetState
+
+
+class HealthAwareRouter(MultiSetRouter):
+    """Multi-set router that honors :class:`~repro.core.faults.SetHealth`.
+
+    Routing skips dead sets; :meth:`fail` / :meth:`recover` flip a set's
+    health (or mutate the shared ``SetHealth`` directly — e.g. the fault
+    simulator's own mask can be passed in).  With every set dead, routing
+    raises ``RuntimeError`` exactly like
+    :func:`repro.core.faults.route_queries`.
+    """
+
+    def __init__(self, n_sets: int, health: SetHealth | None = None):
+        super().__init__(n_sets)
+        self.health = health if health is not None else SetHealth.all_alive(n_sets)
+        if self.health.n_sets != n_sets:
+            # an undersized mask would IndexError (or silently misroute)
+            # only at route time — fail at construction instead
+            raise ValueError(
+                f"health mask covers {self.health.n_sets} sets, "
+                f"router has {n_sets}"
+            )
+
+    def _candidates(self) -> list[SetState]:
+        alive = [s for s in self.sets if bool(self.health.alive[s.sid])]
+        if not alive:
+            raise RuntimeError("no ODYS set alive")
+        return alive
+
+    def fail(self, set_id: int) -> None:
+        self.health.fail(set_id)
+
+    def recover(self, set_id: int) -> None:
+        self.health.recover(set_id)
 
 
 def _merge_scored(av, ai, bv, bi, k: int):

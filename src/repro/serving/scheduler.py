@@ -41,7 +41,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Callable, Sequence
 
 __all__ = [
@@ -195,8 +195,16 @@ class MultiSetRouter:
     def n_sets(self) -> int:
         return len(self.sets)
 
+    def _candidates(self) -> list[SetState]:
+        """Sets eligible for new batches (health-aware routers narrow
+        this; see :class:`repro.serving.router.HealthAwareRouter`)."""
+        return self.sets
+
     def route(self, n_queries: int) -> SetState:
-        s = min(self.sets, key=lambda st: (st.busy_until, st.in_flight, st.sid))
+        s = min(
+            self._candidates(),
+            key=lambda st: (st.busy_until, st.in_flight, st.sid),
+        )
         s.in_flight += n_queries
         s.n_batches += 1
         s.n_queries += n_queries
@@ -237,6 +245,32 @@ class MasterScheduler:
         Batch-formation deadline (seconds): under :meth:`replay`, a partial
         bucket is flushed once its oldest query has waited this long.  Live
         ``drain()`` always flushes.
+    adaptive_wait:
+        Adaptive formation deadline (closes the ROADMAP adaptive-policy
+        item).  ``max_wait`` becomes a *ceiling*; the effective deadline
+        per bucket is
+
+        - ``0`` when the estimated arrival rate cannot fill the bucket's
+          remainder within ``max_wait`` anyway (the low-load case: waiting
+          buys no batching, so don't — this is the formation wait
+          bench_serving measures);
+        - ``max_wait * (1 - lambda/mu)`` otherwise, shrinking toward zero
+          as the arrival rate ``lambda`` approaches the fitted capacity
+          ``mu`` (near saturation queueing dominates and full batches form
+          by count; any deadline slack only adds sojourn).
+
+        ``lambda`` is estimated from recent arrival timestamps (virtual
+        time under replay); ``mu`` is ``capacity_qps`` when given (e.g.
+        ``n_sets * batch_size / st`` from :mod:`repro.core.calibrate`),
+        otherwise self-fitted from an EWMA of measured batch service times.
+    capacity_qps:
+        Fitted capacity (queries/second) for the adaptive policy; ``None``
+        self-measures.
+    router:
+        A pre-built router (e.g.
+        :class:`repro.serving.router.HealthAwareRouter`).  When given it
+        *overrides* ``n_sets`` — the router's own set count is
+        authoritative everywhere (dispatch, stats, self-fitted capacity).
     version_fn:
         Snapshot-version source for cache stamping/invalidation (the
         search service wires ``DeltaWriter.version`` here).
@@ -255,6 +289,9 @@ class MasterScheduler:
         cache_size: int = 1024,
         n_sets: int = 1,
         max_wait: float = 0.0,
+        adaptive_wait: bool = False,
+        capacity_qps: float | None = None,
+        router: "MultiSetRouter | None" = None,
         version_fn: Callable[[], int] | None = None,
         width_fn: Callable[[tuple, int | None], int] | None = None,
         clock: Callable[[], float] = time.perf_counter,
@@ -267,8 +304,10 @@ class MasterScheduler:
         self.t_max_buckets = buckets
         self.default_k = default_k
         self.max_wait = max_wait
+        self.adaptive_wait = adaptive_wait
+        self.capacity_qps = capacity_qps
         self.cache = ResultCache(cache_size) if cache_size > 0 else None
-        self.router = MultiSetRouter(n_sets)
+        self.router = router if router is not None else MultiSetRouter(n_sets)
         self._version_fn = version_fn or (lambda: 0)
         self._width_fn = width_fn or (lambda terms, site: len(terms))
         self._clock = clock
@@ -277,6 +316,10 @@ class MasterScheduler:
         self._next_qid = 0
         self.n_batches = 0
         self.n_padded = 0
+        self._arrivals: deque[float] = deque(maxlen=32)   # aggregate (rho)
+        self._key_arrivals: dict[tuple, deque] = {}       # per bucket (fill)
+        self._warm_keys: set[tuple] = set()   # buckets past their XLA compile
+        self._service_ewma: float | None = None  # seconds per batch
 
     # ------------------------------------------------------------------
     # admission
@@ -307,6 +350,10 @@ class MasterScheduler:
             raise ValueError("query must have at least one term")
         bucket = self._bucket_of(self._width_fn(terms_t, site))
         now = self._now()
+        self._arrivals.append(now)
+        self._key_arrivals.setdefault(
+            (bucket, k), deque(maxlen=32)
+        ).append(now)
         ticket = QueryTicket(
             qid=self._next_qid, terms=terms_t, site=site, k=k,
             bucket=bucket, submit_time=now,
@@ -325,6 +372,50 @@ class MasterScheduler:
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------------
+    # adaptive formation deadline
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _rate(arrivals: "deque[float] | None") -> float | None:
+        """Events/second over a timestamp window (None = unknown)."""
+        if arrivals is None or len(arrivals) < 2:
+            return None
+        span = arrivals[-1] - arrivals[0]
+        if span <= 0:
+            return None
+        return (len(arrivals) - 1) / span
+
+    def _capacity(self) -> float | None:
+        """Fitted service capacity (queries/second) across all sets."""
+        if self.capacity_qps is not None:
+            return self.capacity_qps
+        if self._service_ewma is None or self._service_ewma <= 0:
+            return None
+        return self.router.n_sets * self.batch_size / self._service_ewma
+
+    def effective_wait(self, key: tuple[int, int]) -> float:
+        """Formation deadline for bucket ``key`` (see ``adaptive_wait``)."""
+        if not self.adaptive_wait or self.max_wait <= 0:
+            return self.max_wait
+        # The fill estimate is per bucket — with several active buckets,
+        # only this bucket's arrivals can fill this bucket's batch.
+        lam_key = self._rate(self._key_arrivals.get(key))
+        if lam_key is None:
+            return self.max_wait
+        shortfall = self.batch_size - len(self._queues.get(key, ()))
+        if lam_key * self.max_wait < shortfall:
+            # Low load: the bucket cannot fill before the ceiling anyway —
+            # waiting adds formation latency and buys no batching.
+            return 0.0
+        # The saturation shrink keys off the aggregate rate: capacity is
+        # shared across buckets.
+        lam = self._rate(self._arrivals)
+        mu = self._capacity()
+        if lam is None or mu is None or mu <= 0:
+            return self.max_wait
+        return self.max_wait * max(0.0, 1.0 - lam / mu)
 
     # ------------------------------------------------------------------
     # dispatch
@@ -357,7 +448,13 @@ class MasterScheduler:
         if not batch:
             return []
         real = [t for t in batch if t.qid >= 0]
-        sref = self.router.route(len(real))
+        try:
+            sref = self.router.route(len(real))
+        except BaseException:
+            # routing can refuse (e.g. every set dead in a health-aware
+            # router): the popped tickets must survive for a later retry
+            self._queues.setdefault(key, [])[:0] = real
+            raise
         version = self._version_fn()
         queries = [(list(t.terms), t.site) for t in batch]
         start = max(self._now(), sref.busy_until)
@@ -371,6 +468,16 @@ class MasterScheduler:
             self._queues.setdefault(key, [])[:0] = real
             raise
         wall = time.perf_counter() - wall0
+        if key in self._warm_keys:
+            self._service_ewma = (
+                wall if self._service_ewma is None
+                else 0.8 * self._service_ewma + 0.2 * wall
+            )
+        else:
+            # every (t_max, k) bucket's first batch pays its XLA compile:
+            # folding that wall time into the EWMA would collapse the
+            # self-fitted capacity (and with it the adaptive deadline)
+            self._warm_keys.add(key)
         finish = start + wall if self._vclock is not None else self._clock()
         sref.busy_until = finish
         self.router.complete(sref, len(real))
@@ -433,6 +540,8 @@ class MasterScheduler:
         assert not self.pending(), "replay needs an empty admission queue"
         for s in self.router.sets:  # live wall-clock must not leak into
             s.busy_until = 0.0      # the virtual timeline
+        self._arrivals.clear()      # ...nor into the arrival-rate estimates
+        self._key_arrivals.clear()
         self._vclock = 0.0
         try:
             i = 0
@@ -444,7 +553,8 @@ class MasterScheduler:
                     continue
                 oldest = self._oldest_bucket()
                 deadline = (
-                    oldest[1] + self.max_wait if oldest is not None else math.inf
+                    oldest[1] + self.effective_wait(oldest[0])
+                    if oldest is not None else math.inf
                 )
                 if next_t <= deadline:
                     arrival, terms, site = trace[i]

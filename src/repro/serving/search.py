@@ -70,7 +70,15 @@ class SearchService:
       (default: the single bucket ``(t_max,)``, i.e. the legacy behavior);
     - ``cache_size`` — LRU result-cache capacity (0 disables);
     - ``n_sets`` — replicated sets for the multi-set router (§5.2);
-    - ``max_wait`` — batch-formation deadline used by the open-loop replay.
+    - ``max_wait`` — batch-formation deadline used by the open-loop replay;
+    - ``adaptive_wait``/``capacity_qps`` — adaptive formation deadline:
+      ``max_wait`` becomes a ceiling that shrinks as the arrival rate
+      approaches the (fitted or self-measured) capacity, and drops to zero
+      when a partial bucket cannot fill in time anyway (see
+      :class:`~repro.serving.scheduler.MasterScheduler`);
+    - ``set_health`` — a :class:`~repro.core.faults.SetHealth` mask: dead
+      sets are skipped by the router and re-admitted on recovery
+      (:class:`~repro.serving.router.HealthAwareRouter`).
 
     Online updates: pass ``updatable=True`` together with the ``corpus``
     the index was built from (a :class:`DeltaWriter` is created), or pass
@@ -108,6 +116,9 @@ class SearchService:
         cache_size: int = 1024,
         n_sets: int = 1,
         max_wait: float = 0.0,
+        adaptive_wait: bool = False,
+        capacity_qps: float | None = None,
+        set_health: "SetHealth | None" = None,
     ):
         self.index = index
         self.meta = meta
@@ -143,6 +154,11 @@ class SearchService:
         buckets = t_max_buckets if t_max_buckets is not None else (t_max,)
         if max(buckets) > t_max:
             raise ValueError(f"t_max_buckets {buckets} exceed t_max={t_max}")
+        router = None
+        if set_health is not None:
+            from repro.serving.router import HealthAwareRouter
+
+            router = HealthAwareRouter(n_sets, set_health)
         self.scheduler = MasterScheduler(
             self._execute,
             batch_size=batch_size,
@@ -151,6 +167,9 @@ class SearchService:
             cache_size=cache_size,
             n_sets=n_sets,
             max_wait=max_wait,
+            adaptive_wait=adaptive_wait,
+            capacity_qps=capacity_qps,
+            router=router,
             version_fn=self._snapshot_version,
             width_fn=self._query_width,
         )

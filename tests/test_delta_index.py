@@ -3,7 +3,7 @@ main index, tombstone semantics, capacity accounting, compaction."""
 import numpy as np
 import pytest
 
-from repro.core.index import BLOCK, INVALID_ATTR, INVALID_DOC, build_index
+from repro.core.index import BLOCK, INVALID_ATTR, INVALID_DOC, TILE, build_index
 from repro.data.corpus import (
     CorpusConfig,
     MutationConfig,
@@ -54,10 +54,20 @@ def test_delta_layout_invariants(setup):
     attrs = np.asarray(d.attrs)
     bm = np.asarray(d.block_max)
     assert np.all(offsets % BLOCK == 0), "delta lists must be BLOCK-aligned"
-    assert postings.shape[-1] % BLOCK == 0
-    np.testing.assert_array_equal(
-        bm, postings.reshape(w.ns, -1, BLOCK).max(axis=2)
-    )
+    # Flat arrays are TILE-padded for the streaming kernels; block_max
+    # stays exact (it also records the slab capacity).
+    assert postings.shape[-1] % TILE == 0
+    assert bm.shape[-1] * BLOCK == meta.n_terms * cap
+    # Skip table = per-block max over *valid* postings (a partial block
+    # records its true max, an empty block INVALID_DOC) — that is what the
+    # device read path keys posting skipping and merge short-circuits off.
+    flat = bm.shape[-1] * BLOCK
+    pos = postings[:, :flat].reshape(w.ns, meta.n_terms, cap)
+    in_list = np.arange(cap)[None, None, :] < lengths[:, :, None]
+    masked = np.where(in_list, pos, np.int64(-1)).reshape(w.ns, -1, BLOCK)
+    want = masked.max(axis=2)
+    want = np.where(want >= 0, want, np.int64(INVALID_DOC))
+    np.testing.assert_array_equal(bm, want.astype(np.int32))
     for s in range(w.ns):
         for t in range(0, meta.n_terms, 7):
             o, n = offsets[s, t], lengths[s, t]

@@ -62,6 +62,21 @@ def test_backend_parity_all_strategies(setup, strategy, k):
     np.testing.assert_array_equal(hj, hp)
 
 
+@pytest.mark.parametrize("window", [512, 1536])
+def test_backend_parity_unaligned_windows(setup, window):
+    """Windows that are BLOCK- but not TILE-aligned: a list whose offset
+    straddles a tile boundary spans one more physical tile than the window
+    itself, so the streamed probe plan must size its spans with ceil
+    (regression: floor dropped the straddling tile's matches)."""
+    _, idx, meta = setup
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    (dj, hj), (dp, hp) = _run_both(idx, qb, k=10, window=window,
+                                   strategy="embed")
+    np.testing.assert_array_equal(dj, dp)
+    np.testing.assert_array_equal(hj, hp)
+    assert hj.sum() > 0  # the sweep must actually find matches
+
+
 def test_pallas_backend_matches_bruteforce(setup):
     corpus, idx, meta = setup
     qb = make_query_batch(QUERIES, t_max=4, meta=meta, strategy="embed")

@@ -288,6 +288,134 @@ def test_router_prefers_earliest_available():
     assert [s.in_flight for s in r.sets] == [0, 0]
 
 
+def test_health_router_skips_dead_and_readmits():
+    """core.faults set health wired into routing: a failed set receives no
+    batches; recovery re-admits it (the paper's set-granular failover)."""
+    from repro.serving.router import HealthAwareRouter
+
+    r = HealthAwareRouter(2)
+    r.fail(0)
+    for _ in range(4):
+        s = r.route(1)
+        assert s.sid == 1
+        r.complete(s, 1)
+    r.recover(0)
+    # set 0 is idle and least-loaded by (busy_until, in_flight, sid)
+    assert r.route(1).sid == 0
+    r.fail(0)
+    r.fail(1)
+    with pytest.raises(RuntimeError, match="no ODYS set alive"):
+        r.route(1)
+
+
+def test_health_router_through_scheduler():
+    """End-to-end: the scheduler dispatches only to alive sets, and a
+    recovered set resumes taking traffic."""
+    from repro.serving.router import HealthAwareRouter
+
+    def executor(queries, t_max, k, sid):
+        return [sid for _ in queries]
+
+    router = HealthAwareRouter(2)
+    s = MasterScheduler(executor, batch_size=1, t_max_buckets=(2,),
+                        cache_size=0, router=router)
+    router.fail(0)
+    for i in range(3):
+        s.submit([i + 1])
+    done = s.drain()
+    assert all(t.set_id == 1 for t in done)
+    router.recover(0)
+    s.submit([9])
+    assert s.drain()[0].set_id == 0
+
+
+def test_all_sets_dead_preserves_queued_tickets():
+    """A routing refusal (every set dead) must not lose the tickets the
+    batch former already popped: they go back to the head of their bucket
+    and are served after recovery."""
+    from repro.serving.router import HealthAwareRouter
+
+    router = HealthAwareRouter(2)
+    s = MasterScheduler(lambda qs, t, k, sid: [0 for _ in qs],
+                        batch_size=2, t_max_buckets=(2,), cache_size=0,
+                        router=router)
+    t1, t2, t3 = s.submit([1]), s.submit([2]), s.submit([3])
+    router.fail(0)
+    router.fail(1)
+    with pytest.raises(RuntimeError, match="no ODYS set alive"):
+        s.drain()
+    assert s.pending() == 3
+    router.recover(1)
+    s.drain()
+    assert all(t.done and t.set_id == 1 for t in (t1, t2, t3))
+
+
+def test_shared_set_health_mask():
+    """The router can share the fault simulator's own SetHealth mask."""
+    from repro.core.faults import SetHealth
+    from repro.serving.router import HealthAwareRouter
+
+    health = SetHealth.all_alive(3)
+    r = HealthAwareRouter(3, health)
+    health.fail(1)                      # external failure detector
+    assert {r.route(1).sid for _ in range(6)} <= {0, 2}
+
+
+# ------------------------------------------------- adaptive formation wait
+
+
+def _slow_executor(queries, t_max, k, sid):
+    import time as _t
+    _t.sleep(0.002)
+    return [0 for _ in queries]
+
+
+def _low_load_trace(n=24, gap=0.2):
+    return [(i * gap, [1 + i % 5], None) for i in range(n)]
+
+
+def test_adaptive_wait_cuts_low_load_formation_wait():
+    """At low load a partial bucket cannot fill before the deadline, so
+    the adaptive policy flushes immediately: replayed mean response drops
+    well below the fixed-deadline policy's."""
+    fixed = MasterScheduler(_slow_executor, batch_size=8, t_max_buckets=(2,),
+                            cache_size=0, max_wait=0.5)
+    t_fixed = fixed.replay(_low_load_trace())
+    adaptive = MasterScheduler(_slow_executor, batch_size=8,
+                               t_max_buckets=(2,), cache_size=0,
+                               max_wait=0.5, adaptive_wait=True)
+    t_adapt = adaptive.replay(_low_load_trace())
+    mean = lambda ts: sum(t.response_time for t in ts) / len(ts)
+    assert mean(t_adapt) < 0.5 * mean(t_fixed)
+    # fixed policy pays the formation deadline; adaptive barely waits
+    assert mean(t_fixed) > 0.1
+    assert mean(t_adapt) < 0.05
+
+
+def test_adaptive_wait_shrinks_toward_capacity():
+    """The effective deadline scales by (1 - lambda/mu) once the bucket
+    could plausibly fill: near fitted capacity it approaches zero."""
+    s = MasterScheduler(_slow_executor, batch_size=4, t_max_buckets=(2,),
+                        cache_size=0, max_wait=1.0, adaptive_wait=True,
+                        capacity_qps=100.0)
+    key = (2, s.default_k)
+    # prime the arrival-rate estimate at lambda ~= 80/s (rho = 0.8)
+    s._vclock = 0.0
+    for i in range(16):
+        s._vclock = i / 80.0
+        s.submit([1])
+    try:
+        w = s.effective_wait(key)
+        assert 0.0 < w < 0.35          # ~ max_wait * (1 - 0.8), with noise
+        # and an idle scheduler with no estimate keeps the fixed ceiling
+        fresh = MasterScheduler(_slow_executor, batch_size=4,
+                                t_max_buckets=(2,), cache_size=0,
+                                max_wait=1.0, adaptive_wait=True)
+        assert fresh.effective_wait(key) == 1.0
+    finally:
+        s._vclock = None
+
+
 # ---------------------------------------------------------------- replay
 
 

@@ -6,6 +6,7 @@ SearchService front-end."""
 import numpy as np
 import pytest
 import jax
+import jax.numpy as jnp
 
 from repro.core.engine import make_query_batch, query_topk
 from repro.core.index import build_index, build_sharded_index, partition_corpus
@@ -188,6 +189,124 @@ def test_search_service_end_to_end(setup, backend):
     post = svc.search(queries)
     assert [h.docids for h in post] == [h.docids for h in want]
     assert [h.n_hits for h in post] == [h.n_hits for h in want]
+
+
+# ---------------------------------------------------------------- delta-merge
+# kernel coverage: jnp-vs-pallas at 0/50/100% delta fill, with tombstones
+
+
+def _writer_at_fill(corpus, meta, target, *, ns=1, seed=5):
+    """Writer whose hottest delta list sits at ``target`` posting fill,
+    with tombstones from both deletes and updates in the stream."""
+    rng = np.random.default_rng(seed)
+    w = DeltaWriter(corpus, meta, ns=ns, term_capacity=256, doc_headroom=1024)
+    # tombstones first: delete base docs and update others in place
+    w.delete_docs([int(d) for d in rng.choice(corpus.n_docs, 6, replace=False)])
+    w.update_docs([
+        (int(d), np.unique(rng.integers(0, 40, size=10)), int(rng.integers(10)))
+        for d in rng.choice(np.arange(200, 260), 6, replace=False)
+    ])
+    while w.posting_fill() < target:
+        terms = np.unique(rng.integers(0, 24, size=20))
+        w.insert_docs([(terms, int(rng.integers(10)))])
+    return w
+
+
+@pytest.mark.parametrize("fill", [0.0, 0.5, 1.0])
+def test_delta_merge_kernel_parity(setup, fill):
+    """merge_delta_windows == merged_term_window(drop_dead=False) on docs
+    and live exactly (attrs wherever the slot is a real posting), from an
+    empty slab (skip-table short-circuit) to a full one."""
+    from repro.core.engine import merged_term_window, posting_live, term_window
+    from repro.kernels import ops
+
+    corpus, meta, _, _ = setup
+    w = _writer_at_fill(corpus, meta, fill)
+    idx, _ = build_index(corpus)
+    delta = local_delta(w.device_delta())
+
+    # hot (mutated) terms, a rare term, and an inert padding slot
+    terms = jnp.asarray([3, 9, 1, 17, 140, 23, -1, 0], jnp.int32)
+    m_docs, m_attrs, m_valid = jax.vmap(
+        lambda t: term_window(idx, t, WINDOW)
+    )(terms)
+    m_live = (
+        jax.vmap(lambda d: posting_live(delta, d, from_delta=False))(m_docs)
+        & m_valid
+    ).astype(jnp.int32)
+    docs, attrs, live = ops.merge_windows(
+        m_docs, m_attrs, m_live, delta.postings, delta.attrs,
+        delta.offsets, delta.lengths, delta.block_max, terms,
+        interpret=True,
+    )
+    want = jax.vmap(
+        lambda t: merged_term_window(idx, delta, t, WINDOW, drop_dead=False)
+    )(terms)
+    np.testing.assert_array_equal(np.asarray(docs), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(live), np.asarray(want[2]))
+    real = np.asarray(docs) != np.int32(2**31 - 1)
+    np.testing.assert_array_equal(
+        np.asarray(attrs)[real], np.asarray(want[1])[real]
+    )
+
+
+@pytest.mark.parametrize("fill", [0.0, 0.5, 1.0])
+def test_query_parity_across_fill(setup, fill):
+    """Full-engine jnp-vs-pallas bit parity and rebuild equivalence at
+    every delta fill level (tombstones included)."""
+    corpus, meta, _, _ = setup
+    w = _writer_at_fill(corpus, meta, fill)
+    idx, _ = build_index(corpus)
+    delta = local_delta(w.device_delta())
+    qb = make_query_batch(QUERIES + [([3, 9, 23], None)], t_max=4, meta=meta)
+    dj, hj = _run(idx, delta, qb, "jnp")
+    dp, hp = _run(idx, delta, qb, "pallas")
+    np.testing.assert_array_equal(np.asarray(dj), np.asarray(dp))
+    np.testing.assert_array_equal(np.asarray(hj), np.asarray(hp))
+    rebuilt, _ = build_index(w.mutated_corpus())
+    dr, hr = _run(rebuilt, None, qb, "jnp")
+    np.testing.assert_array_equal(np.asarray(dp), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(hp), np.asarray(hr))
+
+
+@pytest.mark.parametrize("fill", [0.5, 1.0])
+def test_striped_parity_across_fill(setup, fill):
+    """ns=2 striping: per-shard merge kernels + global merge == rebuild."""
+    corpus, meta, _, _ = setup
+    w = _writer_at_fill(corpus, meta, fill, ns=2)
+    base_shards = [build_index(p)[0] for p in partition_corpus(corpus, 2)]
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    got = sequential_reference(
+        base_shards, qb, ns=2, k=10, window=WINDOW,
+        deltas=w.shard_deltas(), backend="pallas", interpret=True,
+    )
+    rebuilt = [
+        build_index(p)[0] for p in partition_corpus(w.mutated_corpus(), 2)
+    ]
+    want = sequential_reference(rebuilt, qb, ns=2, k=10, window=WINDOW)
+    _assert_equal(got, want, fill)
+
+
+@pytest.mark.parametrize("window", [512, 1000])
+def test_backend_parity_unaligned_window_and_capacity(setup, window):
+    """Windows that are not TILE-aligned (512) or not even lane-aligned
+    (1000), with a BLOCK- but not TILE-aligned delta capacity (384): the
+    streamed probes and the merge kernel must agree with jnp exactly
+    (regressions for floor-sized tile spans and the merge kernel's lane
+    padding)."""
+    corpus, meta, muts, _ = setup
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=384, doc_headroom=128)
+    w.apply(muts)
+    idx, _ = build_index(corpus)
+    delta = local_delta(w.device_delta())
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    dj, hj = query_topk(idx, qb, delta=delta, k=10, window=window,
+                        backend="jnp")
+    dp, hp = query_topk(idx, qb, delta=delta, k=10, window=window,
+                        backend="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(dj), np.asarray(dp))
+    np.testing.assert_array_equal(np.asarray(hj), np.asarray(hp))
+    assert int(np.asarray(hj).sum()) > 0
 
 
 def test_backend_bit_parity_under_delta(setup):
