@@ -16,7 +16,7 @@ import jax
 
 from repro.core.engine import make_query_batch, query_topk
 from repro.core.index import build_index, partition_corpus
-from repro.core.perfmodel import ClusterConfig, OdysPerfModel, QUERY_MIX_DEFAULT
+from repro.core.perfmodel import QUERY_MIX_DEFAULT
 from repro.core.queries import WorkloadConfig, batch_by_k, generate_workload
 from repro.core.slave_max import partitioning_method
 from repro.data.corpus import CorpusConfig, generate_corpus

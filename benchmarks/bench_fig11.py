@@ -9,8 +9,6 @@ hardware; the DES (which satisfies the model's assumptions by
 construction, minus Poisson/FIFO interactions) should land low single
 digits.
 """
-import numpy as np
-
 from repro.core.perfmodel import (
     ClusterConfig,
     OdysPerfModel,

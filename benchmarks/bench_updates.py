@@ -10,10 +10,11 @@ Reports, as ``updates,<metric>,<value>,<note>`` CSV lines:
 - **freshness tax**: the fill-100%/fill-0% latency ratio.  Under the
   pallas backend the legacy *staged* path (per-batch ``(Q, T_MAX, window)``
   window gather + host-side jnp merge sort,
-  ``backend="pallas_staged"``) is measured alongside the streaming path
-  (PostingSource: in-kernel delta merge + windows streamed from the flat
-  posting arrays), so the lines double as the before/after comparison for
-  the streaming-pipeline refactor;
+  ``backend="pallas_staged"``) is measured alongside the fully-streamed
+  path (PostingSource: in-kernel delta merge + other-term AND driver
+  windows streamed from the flat posting arrays), so the lines double as
+  the before/after comparison for the streaming-pipeline refactor —
+  ``scripts/check_bench.py`` gates CI on their ratio;
 - **compaction**: wall time of the fold + rebuild, and the post-compaction
   query latency (which should return to the baseline).
 
@@ -38,19 +39,66 @@ from repro.indexing import DeltaWriter, compact
 from repro.indexing.delta import local_delta
 
 
-def _timed(fn, *args, reps=3, **kw):
+def _timed(fn, *args, reps=5, **kw):
+    """(mean, p95, min) seconds per call over ``reps`` post-compile runs.
+
+    ``min`` is the regression-gate statistic (scripts/check_bench.py):
+    shared-CI machines show multi-ms scheduler stalls that poison means
+    and p95s at smoke sizes, while best-of only lies if every rep stalls.
+    """
     jax.block_until_ready(fn(*args, **kw))  # compile
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args, **kw))
-    return (time.perf_counter() - t0) / reps
+        samples.append(time.perf_counter() - t0)
+    return _stats(samples)
 
 
-def _query_latency(idx, delta, qb, *, window, backend, interpret):
+def _query_latency(idx, delta, qb, *, window, backend, interpret, reps=5):
     return _timed(
         query_topk, idx, qb, delta=delta, k=10, window=window,
-        backend=backend, interpret=interpret, reps=2,
+        backend=backend, interpret=interpret, reps=reps,
     )
+
+
+def _stats(samples):
+    return (
+        float(np.mean(samples)),
+        float(np.percentile(samples, 95)),
+        float(np.min(samples)),
+    )
+
+
+def _query_latency_pair(idx, delta, qb, *, window, interpret, reps=9):
+    """Streamed vs staged stats with *interleaved* reps, plus the median
+    per-rep ratio.
+
+    The regression gate compares the two paths as a ratio; measuring them
+    in separate phases lets a sustained machine-load swing land on one
+    side only and flip the verdict.  Alternating the reps makes both
+    paths sample the same noise window, and the median of the per-rep
+    ratios cancels whatever correlated noise remains — that median is the
+    statistic scripts/check_bench.py gates on.
+    """
+    def run(backend):
+        return query_topk(
+            idx, qb, delta=delta, k=10, window=window,
+            backend=backend, interpret=interpret,
+        )
+
+    jax.block_until_ready(run("pallas"))          # compile
+    jax.block_until_ready(run("pallas_staged"))
+    streamed, staged = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run("pallas"))
+        streamed.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(run("pallas_staged"))
+        staged.append(time.perf_counter() - t0)
+    ratio = float(np.median(np.asarray(streamed) / np.asarray(staged)))
+    return _stats(streamed), _stats(staged), ratio
 
 
 def main(backend: str = "jnp", smoke: bool = False):
@@ -94,9 +142,17 @@ def main(backend: str = "jnp", smoke: bool = False):
         "interpret" if backend == "pallas" else "jnp"
     )
 
-    nodelta = _query_latency(idx, None, qb, window=window, backend=backend,
-                             interpret=interpret)
-    print(f"updates,query_nodelta,{nodelta/len(q)*1e6:.1f},per_query_us_{mode}")
+    def _report(name, stats):
+        mean, p95, best = (s / len(q) * 1e6 for s in stats)
+        print(f"updates,{name},{mean:.1f},per_query_us_{mode}")
+        print(f"updates,{name}_p95,{p95:.1f},per_query_us_{mode}")
+        print(f"updates,{name}_min,{best:.1f},per_query_us_{mode}")
+
+    nodelta_stats = _query_latency(
+        idx, None, qb, window=window, backend=backend, interpret=interpret
+    )
+    nodelta = nodelta_stats[0]
+    _report("query_nodelta", nodelta_stats)
 
     # Drive the delta's hottest list to the target fill with inserts over
     # the head of the vocabulary (Zipf head = worst-case merge cost).
@@ -108,18 +164,23 @@ def main(backend: str = "jnp", smoke: bool = False):
             terms = np.unique(rng.integers(0, 64, size=60))
             writer2.insert_docs([(terms, int(rng.integers(50)))])
         delta = local_delta(writer2.device_delta())
-        lat[target] = _query_latency(idx, delta, qb, window=window,
-                                     backend=backend, interpret=interpret)
-        print(f"updates,query_fill{int(target*100)},"
-              f"{lat[target]/len(q)*1e6:.1f},per_query_us_{mode}")
         if backend == "pallas":
-            # before/after: the legacy gather + host-sort data path
-            lat_staged[target] = _query_latency(
-                idx, delta, qb, window=window, backend="pallas_staged",
-                interpret=interpret,
+            # before/after: the legacy gather + host-sort data path,
+            # interleaved with the streamed path for a stable gate ratio
+            stats, sstats, ratio = _query_latency_pair(
+                idx, delta, qb, window=window, interpret=interpret
             )
-            print(f"updates,query_fill{int(target*100)}_staged,"
-                  f"{lat_staged[target]/len(q)*1e6:.1f},per_query_us_{mode}")
+            lat[target] = stats[0]
+            lat_staged[target] = sstats[0]
+            _report(f"query_fill{int(target*100)}", stats)
+            _report(f"query_fill{int(target*100)}_staged", sstats)
+            print(f"updates,streamed_over_staged_fill{int(target*100)},"
+                  f"{ratio:.3f},median_interleaved_rep_ratio")
+        else:
+            stats = _query_latency(idx, delta, qb, window=window,
+                                   backend=backend, interpret=interpret)
+            lat[target] = stats[0]
+            _report(f"query_fill{int(target*100)}", stats)
 
     # Freshness tax: how much a full delta slows queries vs an empty one
     # (and vs running with no delta attached at all).
@@ -142,8 +203,8 @@ def main(backend: str = "jnp", smoke: bool = False):
     from repro.core.index import InvertedIndex
     new_local = InvertedIndex(*(x[0] for x in new_sharded))
     delta0 = local_delta(writer2.device_delta())
-    dt = _query_latency(new_local, delta0, qb, window=window, backend=backend,
-                        interpret=interpret)
+    dt, _, _ = _query_latency(new_local, delta0, qb, window=window,
+                              backend=backend, interpret=interpret)
     print(f"updates,query_post_compaction,{dt/len(q)*1e6:.1f},"
           f"per_query_us_{mode}")
 

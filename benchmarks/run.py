@@ -11,13 +11,23 @@ execution engine — the flag is accepted and ignored there.  ``--smoke``
 shrinks the suites that support it (serving, updates) to CI-sized runs;
 ``--suite updates --smoke --backend pallas`` additionally prints the
 freshness-tax before/after comparison (legacy staged path vs the
-streaming posting pipeline) the ISSUE-4 refactor targets.
+streaming posting pipeline).
+
+``--json-dir DIR`` additionally writes one ``BENCH_<suite>.json`` per
+suite run, containing every CSV record the suite printed (value + note
+per metric; latency suites emit ``<metric>`` mean and ``<metric>_p95``
+lines).  CI uploads these as artifacts and feeds ``BENCH_updates.json``
+to ``scripts/check_bench.py``, the streamed-vs-staged regression gate.
 """
 import argparse
+import contextlib
 import inspect
+import io
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
 
 from benchmarks import (
     bench_backends,
@@ -44,6 +54,40 @@ SUITES = {
 }
 
 
+class _Tee(io.TextIOBase):
+    """Mirror writes to the real stdout while keeping a copy for parsing."""
+
+    def __init__(self, out):
+        self.out = out
+        self.buf = io.StringIO()
+
+    def write(self, s):
+        self.out.write(s)
+        self.buf.write(s)
+        return len(s)
+
+    def flush(self):
+        self.out.flush()
+
+
+def _parse_records(text: str, suite: str) -> dict:
+    """Pull ``suite,metric,value,note`` CSV lines out of a suite's output."""
+    metrics = {}
+    for line in text.splitlines():
+        parts = line.strip().split(",")
+        if len(parts) < 3 or parts[0] != suite:
+            continue
+        try:
+            value = float(parts[2])
+        except ValueError:
+            continue
+        metrics[parts[1]] = {
+            "value": value,
+            "note": ",".join(parts[3:]) if len(parts) > 3 else "",
+        }
+    return metrics
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -58,8 +102,16 @@ def main() -> None:
         "--smoke", action="store_true",
         help="CI-sized runs for the suites that support it",
     )
+    ap.add_argument(
+        "--json-dir", default=None, metavar="DIR",
+        help="also write one BENCH_<suite>.json per suite (CI artifacts; "
+             "consumed by scripts/check_bench.py)",
+    )
     args = ap.parse_args()
     names = [args.suite] if args.suite else list(SUITES)
+    json_dir = Path(args.json_dir) if args.json_dir else None
+    if json_dir:
+        json_dir.mkdir(parents=True, exist_ok=True)
     failures = 0
     for name in names:
         fn = SUITES[name]
@@ -71,13 +123,27 @@ def main() -> None:
             kw["smoke"] = True
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
+        tee = _Tee(sys.stdout)
         try:
-            fn(**kw)
+            with contextlib.redirect_stdout(tee):
+                fn(**kw)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures += 1
             print(f"# {name} FAILED", flush=True)
             traceback.print_exc()
+            continue
+        if json_dir:
+            payload = {
+                "suite": name,
+                "backend": kw.get("backend"),
+                "smoke": bool(kw.get("smoke", False)),
+                "elapsed_s": round(time.time() - t0, 3),
+                "metrics": _parse_records(tee.buf.getvalue(), name),
+            }
+            path = json_dir / f"BENCH_{name}.json"
+            path.write_text(json.dumps(payload, indent=2) + "\n")
+            print(f"# wrote {path}", flush=True)
     if failures:
         sys.exit(1)
 

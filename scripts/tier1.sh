@@ -2,4 +2,9 @@
 # Tier-1 verification — the exact command CI and ROADMAP.md specify.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+
+# Run pytest without -e short-circuiting the script, then propagate its
+# exit code explicitly so no wrapper shell or trap can mask a red run.
+rc=0
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@" || rc=$?
+exit "$rc"

@@ -43,27 +43,34 @@ the window covers the merged list (the engine's standing assumption).
 obtains per-(query, term) posting streams through a
 :class:`PostingSource`, of which there are two:
 
-- :class:`StaticPostingSource` — the read-only main index.  The *driver*
-  stream is a windowed gather of the driver term's list (``(Q, window)``,
-  the one materialization the ZigZag join fundamentally needs, since the
-  result is selected from it); *other-term* streams are never
-  materialized: the jnp backend probes them with ``searchsorted`` over the
-  term's window, and the Pallas backend streams (8, 128) tiles straight
-  from the flat ``postings`` array — the BlockSpec index maps walk
-  skip-table-derived tile ranges scalar-prefetched per (query, term), so
-  the former ``(Q, T_MAX, window)`` HBM staging buffer does not exist and
-  non-overlapping tiles are never DMA'd.
+- :class:`StaticPostingSource` — the read-only main index.  On the Pallas
+  backend *nothing* is gathered: the source hands the kernel the driver
+  window's tile spans (:class:`DriverSpan` — the window start in the flat
+  arrays plus its live-posting count) and the kernel reads driver tiles
+  straight from the flat ``postings``/``attrs`` arrays through
+  unblocked-index BlockSpecs, emitting the window as kernel *output* (the
+  one materialization the ZigZag join fundamentally needs, since the
+  result is selected from it); *other-term* streams are probed in place —
+  the jnp backend with ``searchsorted`` over the term's window, the
+  Pallas backend streaming (8, 128) tiles whose skip-table-derived tile
+  ranges are scalar-prefetched per (query, term) — so neither a
+  ``(Q, window)`` driver gather nor a ``(Q, T_MAX, window)`` HBM staging
+  buffer exists, and non-overlapping tiles are never DMA'd.
 - :class:`MergedPostingSource` — main + delta under merge-on-read.  The
   driver stream is the *merged* window: on the Pallas backend the merge
   runs in VMEM (:mod:`repro.kernels.delta_merge` — one bitonic merge pass
-  with the tombstone stream riding along and empty slabs short-circuited
-  via the delta's skip table), replacing the former host-side jnp sort of
-  ``window + term_capacity`` keys per (query, term).  Other-term streams
-  again never materialize: membership in the merged logical list is
-  (member of main list AND doc not dead/superseded) OR (member of delta
-  list AND doc not dead) — two streaming probes over the physical
-  structures, with the driver posting's tombstone flags deciding which
-  probe may count.
+  over the main window streamed tile-by-tile from the flat arrays and the
+  delta slab streamed via its prefetched slab index, with empty slabs
+  short-circuited via the delta's skip table), replacing both the former
+  host-side jnp sort of ``window + term_capacity`` keys per (query, term)
+  *and* the former ``(Q, window)`` main-window gather that fed it.  The
+  kernel emits each merged slot's stream id; one elementwise pass over
+  the tombstone bits turns it into the live stream
+  (:meth:`MergedPostingSource.driver_live`).  Other-term streams again
+  never materialize: membership in the merged logical list is (member of
+  main list AND doc not dead/superseded) OR (member of delta list AND doc
+  not dead) — two streaming probes over the physical structures, with the
+  driver posting's tombstone flags deciding which probe may count.
 
 Both backends consume the same source abstraction, so freshness semantics
 (per-batch snapshot isolation, results equal to a from-scratch rebuild
@@ -264,13 +271,31 @@ def merged_term_window(
 # ---------------------------------------------------------------------------
 
 
+class DriverSpan(NamedTuple):
+    """Per-query placement of the driver window in the flat posting arrays.
+
+    This is what a PostingSource hands the streaming kernels *instead of*
+    a materialized ``(Q, window)`` gather: the window's start offset in
+    the flat arrays (BLOCK-aligned, every list start is) and how many of
+    its slots hold live postings.  The kernels turn it into unblocked-
+    index BlockSpec offsets and read the driver tiles straight from HBM.
+    """
+
+    off: jnp.ndarray    # int32[Q] window start in the flat arrays
+    n_eff: jnp.ndarray  # int32[Q] live postings in the window (<= window)
+
+
 class StaticPostingSource:
     """Posting access over the read-only main index.
 
-    The driver stream is a windowed gather; other-term streams are probed
-    in place (jnp ``searchsorted`` here, streamed tiles in the Pallas
-    backend) — one pass over the physical index per query, the discipline
-    the paper's slave cost model assumes.
+    No stream is ever gathered: the *driver* window is handed to the
+    kernel as a :class:`DriverSpan` (tile offsets into the flat arrays —
+    the kernel streams the tiles and emits the window as output), and
+    *other-term* streams are probed in place (jnp ``searchsorted`` here,
+    streamed tiles in the Pallas backend) — one pass over the physical
+    index per query, the discipline the paper's slave cost model assumes.
+    The jnp reference backend still materializes the driver window
+    (:meth:`driver_window`), as the oracle for the streamed output.
     """
 
     def __init__(self, index: InvertedIndex):
@@ -298,9 +323,18 @@ class StaticPostingSource:
         return jnp.argmin(lens)
 
     def driver_window(self, term, window: int):
-        """(docs, attrs, live) of the driver term, each ``[window]``."""
+        """(docs, attrs, live) of the driver term, each ``[window]`` — the
+        jnp reference's materialized driver (oracle for the streamed path)."""
         docs, attrs, valid = term_window(self.index, term, window)
         return docs, attrs, valid
+
+    def driver_span(self, terms: jnp.ndarray, window: int) -> DriverSpan:
+        """Tile spans of the driver windows — the streamed backends' driver
+        handoff (batched over queries; no posting is touched here)."""
+        tt = jnp.clip(terms, 0, self.index.offsets.shape[0] - 1)
+        off = jnp.take(self.index.offsets, tt)
+        ln = jnp.where(terms < 0, 0, jnp.take(self.index.lengths, tt))
+        return DriverSpan(off, jnp.minimum(ln, window))
 
     def member(self, a_docs, term, window: int, a_flags=None):
         """Membership of each driver posting in the term's logical list."""
@@ -312,12 +346,17 @@ class MergedPostingSource(StaticPostingSource):
     """Merge-on-read posting access over main + delta.
 
     The driver stream is the merged window (tombstoned postings keep their
-    rank slots with ``live=0`` — the fused finalize pass kills them);
-    other-term membership never materializes a merged window: a driver
-    posting joins the logical list iff it occurs in the main list and its
-    doc is neither deleted nor superseded, OR it occurs in the delta list
-    and its doc is not deleted.  ``driver_flags`` supplies the per-posting
-    tombstone bits those probes key off.
+    rank slots with ``live=0`` — the fused finalize pass kills them).  On
+    the Pallas backend nothing is gathered to build it: the inherited
+    :meth:`driver_span` hands the delta-merge kernel the *main* window's
+    tile spans, the kernel streams main tiles and the delta slab from
+    their flat arrays and emits the merged window plus each slot's stream
+    id, and :meth:`driver_live` turns that stream id into the per-posting
+    tombstone stream.  Other-term membership never materializes a merged
+    window: a driver posting joins the logical list iff it occurs in the
+    main list and its doc is neither deleted nor superseded, OR it occurs
+    in the delta list and its doc is not deleted.  ``driver_flags``
+    supplies the per-posting tombstone bits those probes key off.
     """
 
     def __init__(self, index: InvertedIndex, delta: DeltaIndex):
@@ -343,6 +382,18 @@ class MergedPostingSource(StaticPostingSource):
         return jnp.take(
             self.delta.doc_flags, a_docs, mode="fill", fill_value=0
         )
+
+    def driver_live(self, docs, src, a_flags=None) -> jnp.ndarray:
+        """Per-posting live stream of a merged driver window, from each
+        slot's stream id (delta-merge kernel output; 0 = main, 1 = delta)
+        and the tombstone bits — one elementwise pass, replacing the
+        pre-merge host-side liveness gather of the staged path."""
+        if a_flags is None:
+            a_flags = self.driver_flags(docs)
+        main_ok = (a_flags & jnp.int32(DOC_DEAD | DOC_SUPERSEDED)) == 0
+        delta_ok = (a_flags & jnp.int32(DOC_DEAD)) == 0
+        live = (docs != INVALID_DOC) & jnp.where(src == 0, main_ok, delta_ok)
+        return live.astype(jnp.int32)
 
     def member(self, a_docs, term, window: int, a_flags=None):
         if a_flags is None:
@@ -423,13 +474,16 @@ def _query_topk_batch_pallas(
     interpret: bool,
     delta: DeltaIndex | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Streaming Pallas path: one driver-window gather per query, then one
-    ``pallas_call`` whose other-term operand is the flat posting array
-    itself — per-(query, term) tile ranges are scalar-prefetched into the
-    BlockSpec index maps, so no ``(Q, T_MAX, window)`` staging buffer is
-    ever built.  Under merge-on-read the driver merge runs in VMEM
-    (:func:`repro.kernels.delta_merge.merge_delta_windows`) and the join
-    probes main and delta streams separately with the tombstone flags
+    """Fully-streamed Pallas path: the PostingSource hands the kernels
+    driver tile spans (:class:`DriverSpan`) and every posting — driver and
+    other-term alike — is read tile-by-tile from the flat arrays through
+    scalar-prefetched BlockSpec index maps.  No ``(Q, window)`` driver
+    gather and no ``(Q, T_MAX, window)`` staging buffer exist anywhere on
+    this path; the driver window materializes exactly once, as kernel
+    *output* (the candidate set top-k selects from).  Under merge-on-read
+    the driver merge runs in VMEM over the streamed main window and delta
+    slab (:func:`repro.kernels.delta_merge.merge_delta_windows`) and the
+    join probes main and delta streams separately with the tombstone flags
     deciding which probe counts (see :class:`MergedPostingSource`)."""
     from repro.kernels import ops
 
@@ -443,57 +497,48 @@ def _query_topk_batch_pallas(
         return terms[driver_slot], active
 
     d_terms, active = jax.vmap(pick)(batch.terms, batch.n_terms)
+    span = source.driver_span(d_terms, window)
 
-    # The driver window is the one materialization the join needs (the
-    # result is selected from it): a (Q, window) gather of the main stream.
-    m_docs, m_attrs, m_valid = jax.vmap(
-        lambda tm: term_window(index, tm, window)
-    )(d_terms)
-
-    if delta is None:
-        docs, live, a_flags = m_docs, jnp.ones_like(m_docs), None
-        attrs = m_attrs
-        delta_operands = ()
-    else:
-        m_live = (
-            jax.vmap(lambda d: posting_live(delta, d, from_delta=False))(
-                m_docs
-            )
-            & m_valid
-        ).astype(jnp.int32)
-        docs, attrs, live = ops.merge_windows(
-            m_docs, m_attrs, m_live, delta.postings, delta.attrs,
-            delta.offsets, delta.lengths, delta.block_max, d_terms,
-            interpret=interpret,
-        )
-        a_flags = source.driver_flags(docs)
-        delta_operands = (
-            delta.postings, delta.offsets, delta.lengths, delta.block_max,
-            a_flags,
-        )
-
-    if attr_strategy in ("embed", "site_term"):
-        astream = attrs
-    elif attr_strategy == "gather":
-        astream = jnp.take(
-            source.doc_site, jnp.clip(docs, 0, None), mode="clip"
-        )
-    else:
+    # The kernels' fused attribute predicate serves the embed strategy
+    # (the attrs stream rides the same tiles as the postings); site_term
+    # rewrites the restriction into a join term at build time, and gather
+    # — the deliberately un-integrated Fig 1(c) plan — joins the doc->site
+    # table host-side below.  Both of those disable the fused predicate
+    # (it keys off attr_filter >= 0).
+    kernel_filter = (
+        batch.attr_filter
+        if attr_strategy == "embed"
+        else jnp.full_like(batch.attr_filter, NO_ATTR)
+    )
+    if attr_strategy not in ("embed", "gather", "site_term"):
         raise ValueError(attr_strategy)
 
-    # site_term rewrites the restriction into a join term at build time;
-    # disable the kernel's fused predicate (it keys off attr_filter >= 0).
-    attr_filter = (
-        jnp.full_like(batch.attr_filter, NO_ATTR)
-        if attr_strategy == "site_term"
-        else batch.attr_filter
-    )
-    mask = ops.intersect_streamed(
-        docs, astream, live, batch.terms, active, attr_filter,
-        index.postings, index.offsets, index.lengths, index.block_max,
-        *delta_operands,
-        interpret=interpret,
-    )
+    if delta is None:
+        docs, mask = ops.intersect_fullstream(
+            span.off, span.n_eff, batch.terms, active, kernel_filter,
+            index.postings, index.attrs, index.offsets, index.lengths,
+            index.block_max, window=window, interpret=interpret,
+        )
+    else:
+        docs, mattrs, msrc = ops.merge_windows(
+            index.postings, index.attrs, span.off, span.n_eff,
+            delta.postings, delta.attrs, delta.offsets, delta.lengths,
+            delta.block_max, d_terms, window=window, interpret=interpret,
+        )
+        a_flags = source.driver_flags(docs)
+        live = source.driver_live(docs, msrc, a_flags)
+        mask = ops.intersect_streamed(
+            docs, mattrs, live, batch.terms, active, kernel_filter,
+            index.postings, index.offsets, index.lengths, index.block_max,
+            delta.postings, delta.offsets, delta.lengths, delta.block_max,
+            a_flags,
+            interpret=interpret,
+        )
+
+    if attr_strategy == "gather":
+        site = jnp.take(source.doc_site, jnp.clip(docs, 0, None), mode="clip")
+        ok = site == batch.attr_filter[:, None]
+        mask = mask * jnp.where(batch.attr_filter[:, None] == NO_ATTR, True, ok)
     return jax.vmap(partial(_first_k_by_rank, k=k))(docs, mask > 0)
 
 
@@ -633,10 +678,14 @@ def query_topk(
 
     - ``"jnp"``    — the pure-jnp reference join (searchsorted membership
       through the same :class:`PostingSource` layer);
-    - ``"pallas"`` — the streaming block-skipping Pallas path
-      (:func:`repro.kernels.posting_intersect.intersect_batched_streamed`
-      + :func:`repro.kernels.delta_merge.merge_delta_windows` under
-      merge-on-read); ``interpret=True`` runs it under the Pallas
+    - ``"pallas"`` — the fully-streamed block-skipping Pallas path: driver
+      windows and other-term probes both read tile-by-tile from the flat
+      index arrays
+      (:func:`repro.kernels.posting_intersect.intersect_batched_driver_streamed`
+      on the static index;
+      :func:`repro.kernels.delta_merge.merge_delta_windows` +
+      :func:`repro.kernels.posting_intersect.intersect_batched_streamed`
+      under merge-on-read); ``interpret=True`` runs it under the Pallas
       interpreter so CPU CI checks the exact kernel the TPU compiles.
       ``interpret=None`` picks interpret mode automatically off-TPU.
     - ``"pallas_staged"`` — the legacy gather-based path (per-batch

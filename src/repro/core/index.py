@@ -48,6 +48,29 @@ TILE = 8 * BLOCK                 # postings per VMEM tile (8 sublanes x 128 lane
 INVALID_DOC = np.int32(2**31 - 1)  # padding docID; sorts after every real doc
 INVALID_ATTR = np.int32(-1)
 
+
+def flat_tile_pad(n: int) -> int:
+    """Padded length of a flat posting/attr array holding ``n`` postings.
+
+    TILE-aligned, with at least one whole spare INVALID tile past the last
+    valid posting.  The spare tile is a *load-bearing* invariant of the
+    streamed read path: driver windows are addressed with unblocked-index
+    BlockSpecs at BLOCK (not TILE) granularity, and a window tile whose
+    read would run off the end of the array is clamped by Pallas to the
+    last resident tile.  The spare tile guarantees any such clamped tile
+    lies entirely past every list's live range, so the kernels' intended-
+    position masking discards all of it — clamping can shift *which* data
+    arrives, never which data is *kept*.  Both the main index build and the
+    delta snapshot (:mod:`repro.indexing.delta`) must pad through this
+    helper so the invariant cannot desynchronize.
+
+    ceil + 1, not floor + 1: when ``n`` is not a TILE multiple, floor + 1
+    leaves less than a whole tile of slack past the last posting, and a
+    clamped driver read of a list near the array end would serve the
+    *previous* list's postings into in-window slots.
+    """
+    return (-(-n // TILE) + 1) * TILE
+
 # Tombstone bits of the online-update doc_flags bitmap (repro.indexing).
 # Defined here, next to the layout constants, so the kernel layer can fuse
 # the liveness predicate without depending on the write path: DEAD masks a
@@ -120,10 +143,11 @@ def _build_numpy(
     offsets = np.zeros(n_terms, dtype=np.int64)
     np.cumsum(padded[:-1], out=offsets[1:])
     total = int(offsets[-1] + padded[-1])
-    # TILE-align the flat arrays: the streaming kernels address postings as
-    # whole (8, 128) VMEM tiles straight from HBM (no per-query gather), so
-    # the array length must be a multiple of TILE.
-    total = ((total + TILE - 1) // TILE) * TILE
+    # TILE-align the flat arrays with a spare INVALID tile (flat_tile_pad):
+    # the streaming kernels address postings as whole (8, 128) VMEM tiles
+    # straight from HBM — including the *driver* window, read at BLOCK
+    # granularity via unblocked BlockSpecs — with no per-query gather.
+    total = flat_tile_pad(total)
 
     postings = np.full(total, INVALID_DOC, dtype=np.int32)
     attrs = np.full(total, INVALID_ATTR, dtype=np.int32)
@@ -234,7 +258,9 @@ def build_sharded_index(
         ms = [a[key] for a in arrays]
         width = max(m.shape[0] for m in ms)
         # keep the per-shard alignment of the padded width: postings/attrs
-        # stay TILE-aligned (the streaming kernels read them tile-wise).
+        # stay TILE-aligned (the streaming kernels read them tile-wise;
+        # every shard keeps >= its own spare INVALID tile — see
+        # flat_tile_pad — since stacking only ever widens the padding).
         if key in ("postings", "attrs"):
             width = ((width + TILE - 1) // TILE) * TILE
         elif key == "doc_site":

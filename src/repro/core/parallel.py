@@ -32,7 +32,14 @@ Mesh mapping (DESIGN.md §2):
   Inside shard_map each slave builds its PostingSource (static or merged;
   see repro.core.engine) from the local index + delta slice, so the
   streaming kernels run per-shard unchanged — the distributed layer only
-  moves pytrees, never posting windows.
+  moves pytrees, never posting windows.  Since the read path became
+  fully streamed, that is a structural invariant of the whole engine:
+  below this layer the only per-query buffers that exist at all are the
+  kernel *outputs* (driver window + mask, k candidates); every posting
+  read inside a slave is a tile-granular scan of that slave's resident
+  flat arrays, which is what makes per-shard service time track the
+  paper's sequential-scan slave cost model (Formula (7)) rather than a
+  gather-bound memory system.
 
 - ODYS sets (§3.1 fault tolerance) -> the ``pod`` axis: each pod is an
   independent replica engine; the query stream is sharded across pods and
@@ -52,7 +59,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.compat import shard_map
 from repro.core.engine import QueryBatch, query_topk
 from repro.core.index import (
-    INVALID_DOC,
     InvertedIndex,
     ShardedIndex,
     local_to_global_docids,

@@ -62,8 +62,8 @@ from repro.core.index import (
     DOC_SUPERSEDED,  # noqa: F401  layout constants the kernels import)
     INVALID_ATTR,
     INVALID_DOC,
-    TILE,
     IndexMeta,
+    flat_tile_pad,
 )
 from repro.data.corpus import Corpus, corpus_from_docs
 
@@ -281,8 +281,8 @@ class DeltaWriter:
         ln = int(st.lengths[t])
         row, arow = st.postings[t], st.attrs[t]
         pos = int(np.searchsorted(row[:ln], local))
-        row[pos + 1: ln + 1] = row[pos:ln]
-        arow[pos + 1: ln + 1] = arow[pos:ln]
+        row[pos + 1 : ln + 1] = row[pos:ln]
+        arow[pos + 1 : ln + 1] = arow[pos:ln]
         row[pos] = local
         arow[pos] = attr
         st.lengths[t] = ln + 1
@@ -293,8 +293,8 @@ class DeltaWriter:
         pos = int(np.searchsorted(row[:ln], local))
         if pos >= ln or row[pos] != local:
             return
-        row[pos: ln - 1] = row[pos + 1: ln]
-        arow[pos: ln - 1] = arow[pos + 1: ln]
+        row[pos : ln - 1] = row[pos + 1 : ln]
+        arow[pos : ln - 1] = arow[pos + 1 : ln]
         row[ln - 1] = INVALID_DOC
         arow[ln - 1] = INVALID_ATTR
         st.lengths[t] = ln - 1
@@ -482,10 +482,12 @@ class DeltaWriter:
             return self._snapshot
         ns, cap = self.ns, self.term_capacity
         lengths = np.stack([s.lengths for s in self._shards])
-        # TILE-pad the flat arrays so the streaming kernels can address
-        # whole (8, 128) tiles; block_max stays exact (see DeltaIndex).
+        # TILE-pad the flat arrays (spare INVALID tile included — the same
+        # flat_tile_pad invariant as the main index, so the streaming
+        # kernels can address whole (8, 128) tiles and clamped edge reads
+        # stay provably masked); block_max stays exact (see DeltaIndex).
         flat = self.n_terms * cap
-        flat_pad = -(-flat // TILE) * TILE
+        flat_pad = flat_tile_pad(flat)
         postings = np.full((ns, flat_pad), INVALID_DOC, np.int32)
         attrs = np.full((ns, flat_pad), INVALID_ATTR, np.int32)
         for s, st in enumerate(self._shards):
@@ -506,7 +508,7 @@ class DeltaWriter:
                 row = np.where(
                     np.arange(cap) < ln, st.postings[t], np.int32(-1)
                 ).reshape(bpt, BLOCK).max(axis=1)
-                block_max[s, t * bpt:(t + 1) * bpt] = np.where(
+                block_max[s, t * bpt : (t + 1) * bpt] = np.where(
                     row >= 0, row.astype(np.int32), INVALID_DOC
                 )
         offsets = np.broadcast_to(

@@ -5,8 +5,17 @@ of the term's *main* window and its *delta* slab.  The original data path
 realized that merge host-side — a jnp ``argsort`` over ``window + cap``
 keys per (query, term) — which is exactly the kind of extra pass the
 paper's slave cost model (§4, Formula (7)) has no term for.  This kernel
-does the merge where the data already is:
+does the merge where the data already is, and reads both inputs where
+*they* already are:
 
+- the **main window is streamed straight from the flat posting arrays**:
+  per-query window offsets (``m_off``/``m_neff``, from the engine's
+  PostingSource layer) are scalar-prefetched and an unblocked-index
+  BlockSpec walks the window tile-by-tile — the former ``(Q, window)``
+  host-side driver gather no longer exists.  Each tile is masked to the
+  window's live range by its *intended* position, so the spare INVALID
+  tile every flat array carries (:func:`repro.core.index.flat_tile_pad`)
+  makes edge-clamped reads provably harmless;
 - both inputs are sorted (the main window ascending by construction, the
   delta slab ascending per list), so the merge is a single **bitonic merge
   pass** — ``log2(N)`` data-independent compare-exchange stages over the
@@ -19,12 +28,14 @@ does the merge where the data already is:
 - the delta's **block-max skip table** is read per query: a slab whose
   occupied-block count is zero short-circuits the whole network to a
   copy-through (at 0% fill the merge costs one VMEM copy);
-- the **tombstone predicate** rides through the same pass: the driver's
-  per-posting live stream (main postings dead when their doc is deleted or
-  superseded; delta postings are physically removed on delete, so their
-  liveness is just slab validity) is carried as a payload through every
-  compare-exchange and the final ``live & (doc != INVALID)`` mask is
-  emitted by the kernel itself — no separate host-side masking sweep.
+- each merged slot's **stream id** (``src``: 0 = main, 1 = delta/pad)
+  rides through the exchanges as a payload and is emitted alongside the
+  docIDs.  The caller derives per-posting liveness from it with one
+  elementwise op over the ``doc_flags`` bits it already fetches for the
+  join kernel (a main posting dies when its doc is deleted or superseded,
+  a delta posting only on delete) — the tombstone semantics of
+  :func:`repro.core.engine.merged_term_window` without the kernel ever
+  needing a pre-gathered live stream.
 
 Ties (a doc updated in place has a dead main posting *and* a live delta
 posting with the same docID) break by stream id (main first), matching the
@@ -38,9 +49,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.index import BLOCK, INVALID_ATTR, INVALID_DOC
-from repro.kernels.posting_intersect import LANES
+from repro.core.index import BLOCK, INVALID_ATTR, INVALID_DOC, TILE
+from repro.kernels.posting_intersect import (
+    LANES,
+    TILE_ROWS,
+    _tile_positions,
+)
 
 # Slab addressing below (cap_rows = cap // LANES with BLOCK-aligned caps)
 # relies on one lane row being exactly one skip-table block.
@@ -79,101 +95,118 @@ def _bitonic_merge_flat(key, src, payloads):
 
 def _merge_kernel(
     # scalar-prefetch (SMEM):
+    minfo_ref,  # int32[Q, 2] [window row0, live postings] of the driver term
     slab_ref,   # int32[Q] delta slab index of each query's driver term
     len_ref,    # int32[Q] valid postings in that slab
     occ_ref,    # int32[Q] occupied blocks per slab (from the skip table)
     # VMEM:
-    md_ref,     # (1, W/128, 128) main window docids
-    ma_ref,     # (1, W/128, 128) main window attrs
-    ml_ref,     # (1, W/128, 128) main window live stream
+    mp_ref,     # (8, 128)        current main-window tile (unblocked stream)
+    ma_ref,     # (8, 128)        its attrs
     dp_ref,     # (cap/128, 128)  delta slab docids (streamed)
     da_ref,     # (cap/128, 128)  delta slab attrs (streamed)
-    od_ref, oa_ref, ol_ref,       # (1, W/128, 128) merged outputs
+    od_ref, oa_ref, os_ref,       # (1, out_rows, 128) merged outputs
+    # scratch:
+    sd_ref, sa_ref,               # (out_rows, 128) window accumulators
     *,
-    window: int,
+    out_w: int,
     cap: int,
     n_pad: int,
+    s_w: int,
 ):
     q = pl.program_id(0)
+    j = pl.program_id(1)
+
+    # Accumulate this window tile into scratch, masked to the live range by
+    # its intended window position (tiles are window-aligned): a clamped
+    # edge read can only affect fully-masked slots (spare-tile invariant).
+    in_win = _tile_positions(j) < minfo_ref[q, 1]
+    sd_ref[pl.dslice(j * TILE_ROWS, TILE_ROWS), :] = jnp.where(
+        in_win, mp_ref[...], INVALID_DOC
+    )
+    sa_ref[pl.dslice(j * TILE_ROWS, TILE_ROWS), :] = jnp.where(
+        in_win, ma_ref[...], INVALID_ATTR
+    )
 
     # Skip-table short-circuit: an empty slab merges to the main window.
-    @pl.when(occ_ref[q] == 0)
+    @pl.when((j == s_w - 1) & (occ_ref[q] == 0))
     def _copy_through():
-        od_ref[...] = md_ref[...]
-        oa_ref[...] = ma_ref[...]
-        ol_ref[...] = ml_ref[...]
+        od_ref[0] = sd_ref[...]
+        oa_ref[0] = sa_ref[...]
+        os_ref[0] = jnp.zeros_like(os_ref[0])
 
-    @pl.when(occ_ref[q] != 0)
+    @pl.when((j == s_w - 1) & (occ_ref[q] != 0))
     def _merge():
-        md = md_ref[...].reshape(-1)
-        ma = ma_ref[...].reshape(-1)
-        ml = ml_ref[...].reshape(-1)
+        md = sd_ref[...].reshape(-1)
+        ma = sa_ref[...].reshape(-1)
         d_valid = jnp.arange(cap, dtype=jnp.int32) < len_ref[q]
         dd = jnp.where(d_valid, dp_ref[...].reshape(-1), INVALID_DOC)
         da = jnp.where(d_valid, da_ref[...].reshape(-1), INVALID_ATTR)
-        dl = d_valid.astype(jnp.int32)
 
         # ascending main ++ pad ++ descending delta = bitonic
-        pad = n_pad - window - cap
+        pad = n_pad - out_w - cap
         key = jnp.concatenate(
             [md, jnp.full((pad,), INVALID_DOC, jnp.int32), dd[::-1]]
         )
         attr = jnp.concatenate(
             [ma, jnp.full((pad,), INVALID_ATTR, jnp.int32), da[::-1]]
         )
-        live = jnp.concatenate([ml, jnp.zeros((pad,), jnp.int32), dl[::-1]])
         src = jnp.concatenate(
             [
-                jnp.zeros((window,), jnp.int32),
-                jnp.ones((n_pad - window,), jnp.int32),
+                jnp.zeros((out_w,), jnp.int32),
+                jnp.ones((n_pad - out_w,), jnp.int32),
             ]
         )
-        key, _, (attr, live) = _bitonic_merge_flat(key, src, (attr, live))
-        docs = key[:window]
-        od_ref[...] = docs.reshape(od_ref.shape)
-        oa_ref[...] = attr[:window].reshape(oa_ref.shape)
-        ol_ref[...] = (
-            live[:window] * (docs != INVALID_DOC).astype(jnp.int32)
-        ).reshape(ol_ref.shape)
+        key, src, (attr,) = _bitonic_merge_flat(key, src, (attr,))
+        od_ref[0] = key[:out_w].reshape(od_ref.shape[1:])
+        oa_ref[0] = attr[:out_w].reshape(oa_ref.shape[1:])
+        os_ref[0] = src[:out_w].reshape(os_ref.shape[1:])
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def merge_delta_windows(
-    m_docs: jnp.ndarray,       # int32[Q, W] main driver windows, ascending
-    m_attrs: jnp.ndarray,      # int32[Q, W] main attribute streams
-    m_live: jnp.ndarray,       # int32[Q, W] main tombstone/validity stream
-    d_postings: jnp.ndarray,   # int32[D]    flat delta postings (TILE-padded)
-    d_attrs: jnp.ndarray,      # int32[D]    flat delta attrs
+    postings: jnp.ndarray,     # int32[P] flat main postings (TILE-pad + spare)
+    attrs: jnp.ndarray,        # int32[P] flat main attrs (same layout)
+    m_off: jnp.ndarray,        # int32[Q] driver window start (BLOCK-aligned)
+    m_neff: jnp.ndarray,       # int32[Q] live main postings (<= window)
+    d_postings: jnp.ndarray,   # int32[D] flat delta postings (TILE-padded)
+    d_attrs: jnp.ndarray,      # int32[D] flat delta attrs
     d_offsets: jnp.ndarray,    # int32[n_terms]
     d_lengths: jnp.ndarray,    # int32[n_terms]
     d_block_max: jnp.ndarray,  # int32[n_terms * cap / BLOCK] skip table
-    terms: jnp.ndarray,        # int32[Q]    driver term per query
+    terms: jnp.ndarray,        # int32[Q] driver term per query
     *,
+    window: int,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Merged (docs, attrs, live) driver windows, each int32[Q, W].
+    """Merged (docs, attrs, src) driver windows, each int32[Q, window].
 
-    Matches :func:`repro.core.engine.merged_term_window` with
-    ``drop_dead=False`` on (docs, live) exactly; attrs are guaranteed only
-    where ``docs != INVALID_DOC`` (padding slots may carry junk attributes
-    in a different — equally dead — order than the host sort produces).
-    ``m_live`` must already be masked by main-window validity (the engine's
-    :func:`~repro.core.engine.posting_live` & valid), as the kernel only
-    adds the merged-slot validity term.
+    Both inputs stream from their flat arrays: the main window through an
+    unblocked-index BlockSpec at the scalar-prefetched per-query offset
+    (``m_off``/``m_neff`` — no host-side ``(Q, window)`` gather), the delta
+    slab through its prefetched slab index.  ``src`` is each slot's stream
+    id (0 = main, 1 = delta or padding); combined with the ``doc_flags``
+    tombstone bits the caller turns it into the per-posting live stream:
+    ``live = (docs != INVALID) & (src == 0 ? not dead|superseded : not
+    dead)``.  That reproduces :func:`repro.core.engine.merged_term_window`
+    with ``drop_dead=False`` on (docs, live) exactly; attrs are guaranteed
+    only where ``docs != INVALID_DOC`` (padding slots may carry junk
+    attributes in a different — equally dead — order than the host sort
+    produces).
     """
-    q_n, n_out = m_docs.shape
+    q_n = terms.shape[0]
     n_terms = d_offsets.shape[0]
     cap = d_block_max.shape[0] * BLOCK // n_terms
     bpt = cap // BLOCK
-    # Lane-pad odd windows: INVALID keys sort last, so merging the padded
-    # main stream and truncating back to n_out is exact.
-    window = -(-n_out // LANES) * LANES
-    if window != n_out:
-        pad = [(0, 0), (0, window - n_out)]
-        m_docs = jnp.pad(m_docs, pad, constant_values=INVALID_DOC)
-        m_attrs = jnp.pad(m_attrs, pad, constant_values=INVALID_ATTR)
-        m_live = jnp.pad(m_live, pad, constant_values=0)
+    assert postings.shape[0] % TILE == 0, "main postings must be TILE-padded"
     assert d_postings.shape[0] % LANES == 0
+    rows_total = postings.shape[0] // LANES
+
+    # Tile-pad the window to whole (8, 128) reads; the pad slots carry
+    # INVALID keys, which sort last, so merging the padded stream and
+    # truncating back to ``window`` is exact for any odd window size.
+    s_w = -(-window // TILE)
+    out_w = s_w * TILE
+    out_rows = s_w * TILE_ROWS
 
     tt = jnp.clip(terms, 0, n_terms - 1)
     slab = jnp.take(d_offsets, tt) // cap
@@ -182,53 +215,64 @@ def merge_delta_windows(
         d_block_max.reshape(n_terms, bpt) != INVALID_DOC, axis=1
     ).astype(jnp.int32)
     d_occ = jnp.where(terms < 0, 0, jnp.take(occ_per_term, tt))
+    minfo = jnp.stack(
+        [m_off.astype(jnp.int32) // LANES, m_neff.astype(jnp.int32)], axis=-1
+    )
 
-    n_pad = _next_pow2(window + cap)
-    rows = window // LANES
+    n_pad = _next_pow2(out_w + cap)
     cap_rows = cap // LANES
-    m3 = lambda x: x.reshape(q_n, rows, LANES)
+    mp2 = postings.reshape(rows_total, LANES)
+    ma2 = attrs.reshape(rows_total, LANES)
     dp2 = d_postings.reshape(-1, LANES)
     da2 = d_attrs.reshape(-1, LANES)
 
-    def m_map(q, slab_ref, len_ref, occ_ref):
-        return (q, 0, 0)
+    def m_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+        # Unblocked element-row offset of window tile j; clamped at the
+        # array edge (spare-tile invariant keeps clamped tiles masked).
+        row = minfo_ref[q, 0] + j * TILE_ROWS
+        return (jnp.minimum(row, rows_total - TILE_ROWS), 0)
 
-    def d_map(q, slab_ref, len_ref, occ_ref):
+    def d_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
         # empty slabs pin to block 0: the copy-through never reads the
         # operand, and consecutive skipped queries coalesce onto one
         # already-resident block instead of one slab DMA each
         return (jnp.where(occ_ref[q] == 0, 0, slab_ref[q]), 0)
 
-    from jax.experimental.pallas import tpu as pltpu
+    def o_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+        return (q, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(q_n,),
+        num_scalar_prefetch=4,
+        grid=(q_n, s_w),
         in_specs=[
-            pl.BlockSpec((1, rows, LANES), m_map),
-            pl.BlockSpec((1, rows, LANES), m_map),
-            pl.BlockSpec((1, rows, LANES), m_map),
+            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
             pl.BlockSpec((cap_rows, LANES), d_map),
             pl.BlockSpec((cap_rows, LANES), d_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, rows, LANES), m_map),
-            pl.BlockSpec((1, rows, LANES), m_map),
-            pl.BlockSpec((1, rows, LANES), m_map),
+            pl.BlockSpec((1, out_rows, LANES), o_map),
+            pl.BlockSpec((1, out_rows, LANES), o_map),
+            pl.BlockSpec((1, out_rows, LANES), o_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((out_rows, LANES), jnp.int32),
+            pltpu.VMEM((out_rows, LANES), jnp.int32),
         ],
     )
-    shape = jax.ShapeDtypeStruct((q_n, rows, LANES), jnp.int32)
-    docs, attrs, live = pl.pallas_call(
+    shape = jax.ShapeDtypeStruct((q_n, out_rows, LANES), jnp.int32)
+    docs, oattrs, src = pl.pallas_call(
         functools.partial(
-            _merge_kernel, window=window, cap=cap, n_pad=n_pad
+            _merge_kernel, out_w=out_w, cap=cap, n_pad=n_pad, s_w=s_w
         ),
         grid_spec=grid_spec,
         out_shape=[shape, shape, shape],
         interpret=interpret,
     )(
-        slab, d_len, d_occ,
-        m3(m_docs), m3(m_attrs), m3(m_live.astype(jnp.int32)),
-        dp2, da2,
+        minfo, slab, d_len, d_occ,
+        mp2, ma2, dp2, da2,
     )
-    unroll = lambda x: x.reshape(q_n, -1)[:, :n_out]
-    return unroll(docs), unroll(attrs), unroll(live)
+    def unroll(x):
+        return x.reshape(q_n, -1)[:, :window]
+
+    return unroll(docs), unroll(oattrs), unroll(src)

@@ -12,7 +12,9 @@ from repro.kernels import ref
 from repro.kernels.delta_merge import merge_delta_windows
 from repro.kernels.posting_intersect import (
     compute_skip_map,
+    driver_tile_spans,
     intersect_batched_block_skip,
+    intersect_batched_driver_streamed,
     intersect_batched_streamed,
     intersect_block_skip,
     skip_fraction,
@@ -68,17 +70,41 @@ def intersect_streamed(a_docs, a_attrs, a_live, terms, active, attr_filter,
     )
 
 
-def merge_windows(m_docs, m_attrs, m_live, d_postings, d_attrs,
+def intersect_fullstream(d_off, d_neff, terms, active, attr_filter,
+                         postings, attrs, offsets, lengths, block_max, *,
+                         window, s_max=None, interpret: bool | None = None):
+    """Fully-streamed batched ZigZag join: the DRIVER window also reads
+    straight from the flat arrays (unblocked-index BlockSpecs at the
+    scalar-prefetched per-query offsets) — no ``(Q, window)`` gather
+    anywhere.  Returns ``(docs, mask)``, the driver window as kernel
+    output plus the join mask.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return intersect_batched_driver_streamed(
+        d_off, d_neff, terms, active, attr_filter,
+        postings, attrs, offsets, lengths, block_max,
+        window=window, s_max=s_max, interpret=interpret,
+    )
+
+
+def merge_windows(postings, attrs, m_off, m_neff, d_postings, d_attrs,
                   d_offsets, d_lengths, d_block_max, terms, *,
-                  interpret: bool | None = None):
-    """In-VMEM merge of main driver windows with the delta posting streams
-    (tombstone stream fused; empty slabs short-circuit via the delta's
-    block-max skip table)."""
+                  window, interpret: bool | None = None):
+    """In-VMEM merge of main driver windows with the delta posting streams.
+    Both sides stream from their flat arrays (the main window through an
+    unblocked-index BlockSpec at the prefetched per-query offset, the
+    delta slab via its prefetched slab index; empty slabs short-circuit
+    through the delta's block-max skip table).  Returns (docs, attrs, src)
+    — ``src`` is each merged slot's stream id, from which the caller
+    derives the tombstone/live stream with one elementwise pass over the
+    ``doc_flags`` bits it already holds."""
     if interpret is None:
         interpret = default_interpret()
     return merge_delta_windows(
-        m_docs, m_attrs, m_live, d_postings, d_attrs,
-        d_offsets, d_lengths, d_block_max, terms, interpret=interpret,
+        postings, attrs, m_off, m_neff, d_postings, d_attrs,
+        d_offsets, d_lengths, d_block_max, terms,
+        window=window, interpret=interpret,
     )
 
 
@@ -105,8 +131,10 @@ __all__ = [
     "intersect",
     "intersect_batched",
     "intersect_streamed",
+    "intersect_fullstream",
     "merge_windows",
     "window_tile_spans",
+    "driver_tile_spans",
     "sort",
     "topk_merge",
     "topk_merge_rows",

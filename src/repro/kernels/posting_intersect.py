@@ -33,7 +33,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.index import BLOCK, DOC_DEAD, DOC_SUPERSEDED, INVALID_DOC, TILE
+from repro.core.index import (
+    BLOCK,
+    DOC_DEAD,
+    DOC_SUPERSEDED,
+    INVALID_ATTR,
+    INVALID_DOC,
+    TILE,
+)
 
 TILE_ROWS = 8
 LANES = 128
@@ -436,8 +443,42 @@ def _a_tile_spans(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray
     return a_min, a_max, a_any
 
 
+def driver_tile_spans(
+    block_max: jnp.ndarray, off: jnp.ndarray, n_eff: jnp.ndarray,
+    *, s_tiles: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Driver-side analogue of :func:`_a_tile_spans`, from the BLOCK skip
+    table instead of a materialized window: (a_min, a_max, a_any) for the
+    *window-aligned* driver tiles ``[off + i*TILE, off + (i+1)*TILE)``.
+
+    ``off`` is BLOCK-aligned (every list start is), so each window tile
+    covers exactly ``TILE/BLOCK`` skip-table blocks.  a_max is the max of
+    the live blocks' ``block_max`` — an upper bound (the list's final
+    partial block reports INVALID_DOC in the main index's raw table, which
+    only widens the probe range).  a_min is the previous tile's a_max, a
+    lower bound since postings ascend within a list; an INVALID a_max can
+    only leak into the span of a tile *past* the live range, whose a_any
+    is False and whose probe plan is therefore inert.  Conservative spans
+    scan at most a few extra B tiles; they can never skip a match.
+    """
+    bpt = TILE // BLOCK
+    blk0 = off // BLOCK
+    n_live_blk = (n_eff + BLOCK - 1) // BLOCK
+    rel = (
+        jnp.arange(s_tiles, dtype=jnp.int32)[:, None] * bpt
+        + jnp.arange(bpt, dtype=jnp.int32)[None, :]
+    )
+    inside = rel < n_live_blk
+    bm = jnp.take(block_max, blk0 + rel, mode="fill", fill_value=INVALID_DOC)
+    tmax = jnp.max(jnp.where(inside, bm, _NEG), axis=1)
+    a_any = jnp.any(inside, axis=1)
+    a_max = jnp.where(a_any, tmax, -1)
+    a_min = jnp.concatenate([jnp.full((1,), _NEG), a_max[:-1]])
+    return a_min, a_max, a_any
+
+
 def _probe_plan(
-    a: jnp.ndarray,            # (Q, Wpad) TILE-padded driver windows
+    a_spans,                   # (a_min, a_max, a_any), each (Q, num_a_tiles)
     terms: jnp.ndarray,        # (Q, T)
     offsets: jnp.ndarray, lengths: jnp.ndarray, block_max: jnp.ndarray,
     *, window: int, s_tiles: int,
@@ -446,7 +487,10 @@ def _probe_plan(
 
     b_tile is the first overlapping physical tile in the flat posting
     array, n_b how many consecutive tiles to stream, bounds the logical
-    [lo, hi) posting range the kernel masks each tile to.
+    [lo, hi) posting range the kernel masks each tile to.  ``a_spans``
+    supplies the driver tiles' docID spans — exact when the driver window
+    is materialized (:func:`_a_tile_spans`), skip-table-derived when the
+    driver streams too (:func:`driver_tile_spans`).
     """
     tt = jnp.clip(terms, 0, offsets.shape[0] - 1)
     off = jnp.take(offsets, tt)
@@ -455,7 +499,7 @@ def _probe_plan(
     tile0, n_tiles, tile_min, tile_max = jax.vmap(
         jax.vmap(functools.partial(window_tile_spans, block_max, s_tiles=s_tiles))
     )(off, n_eff)
-    a_min, a_max, a_any = _a_tile_spans(a)
+    a_min, a_max, a_any = a_spans
     start = jax.vmap(
         jax.vmap(
             lambda tm, am: jnp.searchsorted(tm, am, side="left"),
@@ -602,8 +646,9 @@ def intersect_batched_streamed(
     # the window itself spans: ceil, not floor, or matches silently drop
     # for windows that are BLOCK- but not TILE-aligned.
     s_tiles_m = -(-window // TILE) + 1
+    a_spans = _a_tile_spans(a)
     b_tile, n_b, bounds_m = _probe_plan(
-        a, terms, offsets, lengths, block_max,
+        a_spans, terms, offsets, lengths, block_max,
         window=window, s_tiles=s_tiles_m,
     )
     s_grid = _clamp_s_max(s_max, s_tiles_m)
@@ -627,7 +672,7 @@ def intersect_batched_streamed(
         cap = d_block_max.shape[0] * BLOCK // d_offsets.shape[0]
         s_tiles_d = -(-cap // TILE) + 1
         d_tile, n_d, bounds_d = _probe_plan(
-            a, terms, d_offsets, d_lengths, d_block_max,
+            a_spans, terms, d_offsets, d_lengths, d_block_max,
             window=cap, s_tiles=s_tiles_d,
         )
         s_grid = max(s_grid, _clamp_s_max(s_max, s_tiles_d))
@@ -684,6 +729,196 @@ def intersect_batched_streamed(
         interpret=interpret,
     )(*scalars, *operands)
     return out.reshape(q_n, -1)[:, :n_a]
+
+
+# ---------------------------------------------------------------------------
+# Fully-streamed variant: the DRIVER window also reads straight from the
+# flat index — the last random access on the read path is gone
+# ---------------------------------------------------------------------------
+#
+# intersect_batched_streamed still takes a materialized (Q, W) driver
+# operand (under merge-on-read that window is the *product* of the delta
+# merge kernel, so materializing it is the one buffer the join needs).  On
+# the static main index, though, the driver window is just a contiguous
+# BLOCK-aligned slice of the flat posting array — gathering it host-side is
+# pure waste.  This variant reads driver tiles tile-by-tile from the flat
+# ``postings``/``attrs`` arrays through *unblocked-index* BlockSpecs: the
+# per-query window start (off // LANES sublane rows, scalar-prefetched) is
+# an element offset, so a window that begins mid-physical-tile still maps
+# onto clean (8, 128) VMEM reads.  Each driver tile is range-masked to the
+# window's live range [0, n_eff) by its *intended* window position; the
+# spare INVALID tile every flat array carries (core.index.flat_tile_pad)
+# guarantees a tile whose read clamps at the array edge is entirely past
+# the live range, so the mask discards everything a clamp could corrupt.
+# The kernel emits the driver docIDs alongside the join mask — the
+# (Q, window) driver materialization now happens exactly once, as kernel
+# *output* (the candidate set top-k selects from), never as input staging.
+
+
+def _driver_streamed_kernel(
+    # scalar-prefetch (SMEM):
+    bt_ref,     # int32[Q, T, num_a]  first overlapping B tile
+    nb_ref,     # int32[Q, T, num_a]  B tiles to stream (0 = inert)
+    mb_ref,     # int32[Q, T, 2]      logical [lo, hi) bounds per term
+    act_ref,    # int32[Q, T]         1 iff slot t joins query q
+    attr_ref,   # int32[Q, 2]         [attr_filter, attr_enabled]
+    ainfo_ref,  # int32[Q, 2]         [driver row0, driver n_eff]
+    # VMEM:
+    ad_ref,     # (8,128) driver docID tile (unblocked stream)
+    aa_ref,     # (8,128) driver attr tile (unblocked stream)
+    pm_ref,     # (8,128) current other-term tile
+    # outputs:
+    outd_ref,   # (1,8,128) driver docIDs (window-aligned, INVALID past n_eff)
+    outm_ref,   # (1,8,128) int32 final mask (AND over terms)
+    # scratch:
+    mm_ref,     # (8,128) per-term OR accumulator
+    *,
+    t_slots: int,
+    s_max: int,
+):
+    q = pl.program_id(0)
+    i = pl.program_id(1)
+    t = pl.program_id(2)
+    j = pl.program_id(3)
+
+    # The driver tile, masked by *intended* window position: slots at or
+    # past n_eff read INVALID no matter what the (possibly clamped) DMA
+    # delivered.  Tiles are window-aligned, so tile i holds window
+    # positions [i*TILE, (i+1)*TILE).
+    in_win = _tile_positions(i) < ainfo_ref[q, 1]
+    a = jnp.where(in_win, ad_ref[...], INVALID_DOC)
+
+    @pl.when((t == 0) & (j == 0))
+    def _init_out():
+        outm_ref[...] = jnp.ones_like(outm_ref)
+        outd_ref[0] = a
+
+    @pl.when(j == 0)
+    def _init_member():
+        mm_ref[...] = jnp.zeros_like(mm_ref)
+
+    # Posting skipping, as in intersect_batched_streamed: only tiles in
+    # the precomputed overlap range are compared (or, on TPU, DMA'd).
+    @pl.when(j < nb_ref[q, t, i])
+    def _probe():
+        pos = _tile_positions(bt_ref[q, t, i] + j)
+        in_range = (pos >= mb_ref[q, t, 0]) & (pos < mb_ref[q, t, 1])
+        b = jnp.where(in_range, pm_ref[...], INVALID_DOC)
+        m = _tile_member(a, b)
+        mm_ref[...] = mm_ref[...] | m.astype(jnp.int32)
+
+    @pl.when(j == s_max - 1)
+    def _fold_term():
+        active = act_ref[q, t] != 0
+        outm_ref[0] = outm_ref[0] * jnp.where(active, mm_ref[...], 1)
+
+    @pl.when((t == t_slots - 1) & (j == s_max - 1))
+    def _finalize():
+        aa = jnp.where(in_win, aa_ref[...], INVALID_ATTR)
+        keep = _fused_keep(a, aa, attr_ref[q, 0], attr_ref[q, 1] != 0)
+        outm_ref[0] = outm_ref[0] * keep
+
+
+@functools.partial(jax.jit, static_argnames=("window", "s_max", "interpret"))
+def intersect_batched_driver_streamed(
+    d_off: jnp.ndarray,        # int32[Q]  driver window start (BLOCK-aligned)
+    d_neff: jnp.ndarray,       # int32[Q]  live driver postings (<= window)
+    terms: jnp.ndarray,        # int32[Q, T]  term ids per slot (NO_TERM pad)
+    active: jnp.ndarray,       # int32[Q, T]  1 iff slot t joins query q
+    attr_filter: jnp.ndarray,  # int32[Q]     NO_ATTR(-1) = unrestricted
+    postings: jnp.ndarray,     # int32[P]  flat postings (TILE-pad + spare)
+    attrs: jnp.ndarray,        # int32[P]  flat embedded attrs (same layout)
+    offsets: jnp.ndarray, lengths: jnp.ndarray, block_max: jnp.ndarray,
+    *,
+    window: int,
+    s_max: int | None = None,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched ZigZag join with the DRIVER window streamed from the index.
+
+    The read path of :func:`intersect_batched_streamed` minus its one
+    remaining host-side materialization: instead of a gathered ``(Q, W)``
+    driver operand, per-query driver tile offsets (``d_off``/``d_neff``,
+    supplied by the engine's PostingSource layer) are scalar-prefetched and
+    unblocked-index BlockSpecs walk the flat ``postings``/``attrs`` arrays
+    directly.  Driver-tile docID spans for the other-term probe plan come
+    from the BLOCK skip table (:func:`driver_tile_spans`) — conservative,
+    never lossy.
+
+    Returns ``(docs, mask)``, both int32[Q, window]: the driver window as
+    read by the kernel (INVALID_DOC past the live range) and the join mask
+    in {0, 1}.  Top-k selection needs nothing else.
+    """
+    q_n, t_slots = terms.shape
+    assert postings.shape[0] % TILE == 0, "main postings must be TILE-padded"
+    num_m = postings.shape[0] // TILE
+    rows_total = num_m * TILE_ROWS
+
+    num_a = -(-window // TILE)      # window-aligned driver tiles
+    a_spans = jax.vmap(
+        functools.partial(driver_tile_spans, block_max, s_tiles=num_a)
+    )(d_off, d_neff)
+    s_tiles_b = -(-window // TILE) + 1
+    b_tile, n_b, bounds = _probe_plan(
+        a_spans, terms, offsets, lengths, block_max,
+        window=window, s_tiles=s_tiles_b,
+    )
+    s_grid = _clamp_s_max(s_max, s_tiles_b)
+    active = active.astype(jnp.int32)
+    n_b = jnp.minimum(n_b, s_grid) * active[:, :, None]
+    attr_params = jnp.stack(
+        [attr_filter.astype(jnp.int32), (attr_filter >= 0).astype(jnp.int32)],
+        axis=-1,
+    )
+    a_info = jnp.stack(
+        [d_off.astype(jnp.int32) // LANES, d_neff.astype(jnp.int32)], axis=-1
+    )
+    pm2 = postings.reshape(rows_total, LANES)
+    pa2 = attrs.reshape(rows_total, LANES)
+
+    def ad_map(q, i, t, j, *refs):
+        # Unblocked: element row offset of the driver tile.  Clamped at the
+        # array edge; the spare INVALID tile makes any clamped tile fully
+        # out-of-window, so the kernel's position mask discards it.
+        row = refs[5][q, 0] + i * TILE_ROWS
+        return (jnp.minimum(row, rows_total - TILE_ROWS), 0)
+
+    def b_map(q, i, t, j, *refs):
+        nb = refs[1][q, t, i]
+        jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
+        tile = jnp.minimum(refs[0][q, t, i] + jj, num_m - 1)
+        return (jnp.where(nb == 0, 0, tile), 0)
+
+    def out_map(q, i, t, j, *refs):
+        return (q, i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(q_n, num_a, t_slots, s_grid),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, LANES), ad_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((TILE_ROWS, LANES), ad_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((TILE_ROWS, LANES), b_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_ROWS, LANES), out_map),
+            pl.BlockSpec((1, TILE_ROWS, LANES), out_map),
+        ],
+        scratch_shapes=[pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)],
+    )
+    shape = jax.ShapeDtypeStruct((q_n, num_a * TILE_ROWS, LANES), jnp.int32)
+    docs, mask = pl.pallas_call(
+        functools.partial(
+            _driver_streamed_kernel, t_slots=t_slots, s_max=s_grid
+        ),
+        grid_spec=grid_spec,
+        out_shape=[shape, shape],
+        interpret=interpret,
+    )(b_tile, n_b, bounds, active, attr_params, a_info, pm2, pa2, pm2)
+    return (
+        docs.reshape(q_n, -1)[:, :window],
+        mask.reshape(q_n, -1)[:, :window],
+    )
 
 
 def skip_fraction(a_docs: jnp.ndarray, b_docs: jnp.ndarray) -> jnp.ndarray:

@@ -18,7 +18,7 @@ import jax.numpy as jnp  # noqa: E402
 
 def main() -> None:
     from repro.core.engine import make_query_batch
-    from repro.core.index import INVALID_DOC, build_index, build_sharded_index, partition_corpus
+    from repro.core.index import build_index, build_sharded_index, partition_corpus
     from repro.core.parallel import (
         distributed_query_topk,
         replicated_query_topk,

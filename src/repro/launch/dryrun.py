@@ -27,7 +27,6 @@ import json
 import math
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +46,7 @@ from repro.launch.specs import (
     batch_specs,
     decode_pos_spec,
 )
-from repro.models.model import decode_step, forward_logits, train_loss
+from repro.models.model import decode_step
 from repro.models.sharding import use_mesh
 from repro.models.transformer import init_cache
 from repro.roofline.analysis import model_flops_for, roofline_from_compiled

@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.faults import SetHealth, SpeculationPolicy, route_queries
-from repro.core.index import ShardedIndex, build_sharded_index
+from repro.core.index import build_sharded_index
 from repro.core.slave_max import partitioning_method
 from repro.data.corpus import Corpus
 

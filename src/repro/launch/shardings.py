@@ -24,7 +24,7 @@ from typing import Any
 import jax
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.tree_util import DictKey, SequenceKey
+from jax.tree_util import DictKey
 
 # Base specs by leaf name (ndim-matched, left-padded with None for stacking).
 _IN_PROJ = ("wq", "wk", "wv", "wg", "w_in", "w_gate", "w_gate_br")

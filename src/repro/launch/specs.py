@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.models.model import abstract_params
 from repro.models.transformer import init_cache
-from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.optimizer import init_opt_state
 from repro.training.train_step import TrainState
 
 SDS = jax.ShapeDtypeStruct

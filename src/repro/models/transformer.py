@@ -18,7 +18,6 @@ lower through one implementation.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Optional
 
 import jax

@@ -101,7 +101,7 @@ def parse_op_line(line: str) -> Op | None:
                     break
         if end < 0:
             return None
-        type_str, rem = rest[: end + 1], rest[end + 1:]
+        type_str, rem = rest[: end + 1], rest[end + 1 :]
     else:
         m = _TYPE_START.match(rest)
         if not m:

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.model import decode_step, init_model, make_inputs, prefill
+from repro.models.model import decode_step, init_model, prefill
 from repro.serving.router import greedy_token
 from repro.serving.scheduler import form_batch
 

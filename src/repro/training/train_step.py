@@ -15,7 +15,6 @@ Distributed-optimization knobs:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

@@ -62,12 +62,16 @@ def test_backend_parity_all_strategies(setup, strategy, k):
     np.testing.assert_array_equal(hj, hp)
 
 
-@pytest.mark.parametrize("window", [512, 1536])
+@pytest.mark.parametrize("window", [128, 256, 512, 1000, 1536])
 def test_backend_parity_unaligned_windows(setup, window):
     """Windows that are BLOCK- but not TILE-aligned: a list whose offset
     straddles a tile boundary spans one more physical tile than the window
     itself, so the streamed probe plan must size its spans with ceil
-    (regression: floor dropped the straddling tile's matches)."""
+    (regression: floor dropped the straddling tile's matches).  Also
+    covers the streamed-driver edge cases: windows shorter than one TILE
+    (128 = one BLOCK, 256) and a window ending mid-tile and mid-lane-row
+    (1000) — the driver tiles' intended-position masking must clip the
+    exact same slots the jnp reference's windowed gather clips."""
     _, idx, meta = setup
     qb = make_query_batch(QUERIES, t_max=4, meta=meta)
     (dj, hj), (dp, hp) = _run_both(idx, qb, k=10, window=window,
@@ -99,9 +103,13 @@ def test_backend_parity_multitile_window(setup):
     np.testing.assert_array_equal(hj, hp)
 
 
-def test_empty_lists_and_all_pad_tiles():
+@pytest.mark.parametrize("window", [1024, 256])
+def test_empty_lists_and_all_pad_tiles(window):
     """Terms with empty posting lists and fully-padded windows: zero hits,
-    never garbage; unrestricted queries keep attr_filter == NO_ATTR."""
+    never garbage; unrestricted queries keep attr_filter == NO_ATTR.  An
+    empty *driver* list means the streamed driver reads n_eff=0 tiles —
+    every slot must come back INVALID on both the TILE-sized and the
+    sub-TILE window."""
     corpus = Corpus(
         doc_offsets=np.array([0, 2, 4], np.int64),
         doc_terms=np.array([0, 1, 0, 2], np.int32),
@@ -119,11 +127,58 @@ def test_empty_lists_and_all_pad_tiles():
     ]
     qb = make_query_batch(queries, t_max=4)
     assert int(qb.attr_filter[2]) == int(NO_ATTR)
-    (dj, hj), (dp, hp) = _run_both(idx, qb, k=5, window=1024, strategy="embed")
+    (dj, hj), (dp, hp) = _run_both(idx, qb, k=5, window=window, strategy="embed")
     np.testing.assert_array_equal(dj, dp)
     np.testing.assert_array_equal(hj, hp)
     assert list(hp) == [0, 0, 2, 1]
     assert dp[3][0] == 1
+
+
+@pytest.mark.parametrize("with_delta", [False, True])
+def test_driver_stream_at_array_edge(with_delta):
+    """Spare-tile invariant regression (flat_tile_pad must be ceil+1, not
+    floor+1): a driver list that starts inside the flat array's final
+    partial tile forces the unblocked window read to clamp at the array
+    edge.  Without a whole spare INVALID tile past the last posting, the
+    clamped read serves the *previous* list's postings into in-window
+    slots and the streamed backend returns documents of the wrong term."""
+    from repro.data.corpus import corpus_from_docs
+
+    # 12 BLOCK-padded single-term lists -> flat length 1536, NOT a TILE
+    # multiple; the last lists start inside the final partial tile.
+    docs = [np.array([i // 3], np.int32) for i in range(36)]
+    corpus = corpus_from_docs(docs, [i % 4 for i in range(36)],
+                              vocab_size=12, n_sites=4)
+    idx, meta = build_index(corpus, include_site_terms=False)
+    queries = [([t], None) for t in range(12)]
+    qb = make_query_batch(queries, t_max=4)
+    if with_delta:
+        from repro.indexing import DeltaWriter
+        from repro.indexing.delta import local_delta
+
+        w = DeltaWriter(corpus, meta, ns=1, term_capacity=128,
+                        doc_headroom=64)
+        w.delete_docs([35])          # tombstone in the last list
+        w.insert_docs([([11], 1)])   # delta posting for the last term
+        delta = local_delta(w.device_delta())
+    else:
+        delta = None
+    dj, hj = query_topk(idx, qb, delta=delta, k=10, window=1024,
+                        backend="jnp")
+    dp, hp = query_topk(idx, qb, delta=delta, k=10, window=1024,
+                        backend="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(dj), np.asarray(dp))
+    np.testing.assert_array_equal(np.asarray(hj), np.asarray(hp))
+    # every term must return ITS OWN documents, not a neighbor's
+    for t in range(12):
+        expect = sorted(
+            d for d in range(36) if t == d // 3
+            and not (with_delta and d == 35)
+        )
+        if with_delta and t == 11:
+            expect = expect + [36]  # the inserted doc
+        got = [int(d) for d in np.asarray(dp[t]) if d != INVALID_DOC]
+        assert got == expect, (t, got, expect)
 
 
 def test_distributed_backend_flag_forwards(setup):

@@ -1,7 +1,6 @@
 """Pallas flash-attention kernel vs pure-jnp oracle (interpret mode)."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_fwd, flash_attention_ref

@@ -20,7 +20,6 @@ from repro.core.perfmodel import (
     estimation_error,
     md1_queue_length,
     nodes_for_service,
-    per_sec,
     sojourn,
 )
 from repro.core.slave_max import (

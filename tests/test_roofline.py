@@ -1,5 +1,4 @@
 """Loop-aware HLO cost model vs hand-computed ground truth."""
-import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp

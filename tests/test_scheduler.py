@@ -10,16 +10,12 @@ from repro.core.index import build_index, build_sharded_index
 from repro.core.parallel import distributed_query_topk
 from repro.data.corpus import (
     CorpusConfig,
-    MutationConfig,
-    apply_mutations,
     generate_corpus,
-    generate_mutations,
 )
 from repro.indexing import DeltaFullError, DeltaWriter, compact
 from repro.serving.scheduler import (
     MasterScheduler,
     MultiSetRouter,
-    ResultCache,
     form_batch,
 )
 from repro.serving.search import SearchService
@@ -225,16 +221,11 @@ def test_cache_never_serves_across_mutations(setup, backend, op):
     assert svc.scheduler.cache.stats.hits >= 2
 
     if op == "insert":
-        muts = [("insert", None, [3, 9, 17], 2)]
         svc.insert([([3, 9, 17], 2)])
     elif op == "delete":
-        victim = first[0].docids[0]
-        muts = [("delete", victim, None, None)]
-        svc.delete([victim])
+        svc.delete([first[0].docids[0]])
     else:
-        victim = first[0].docids[0]
-        muts = [("update", victim, [100, 101], 4)]
-        svc.update([(victim, [100, 101], 4)])
+        svc.update([(first[0].docids[0], [100, 101], 4)])
 
     got = svc.search(query)
     assert svc.scheduler.cache.stats.stale >= 1
@@ -245,7 +236,6 @@ def test_cache_never_serves_across_mutations(setup, backend, op):
     want = ref.search(query)
     assert [h.docids for h in got] == [h.docids for h in want]
     assert [h.n_hits for h in got] == [h.n_hits for h in want]
-    del muts
 
 
 def test_cache_invalidated_by_compaction(setup):
@@ -385,7 +375,8 @@ def test_adaptive_wait_cuts_low_load_formation_wait():
                                t_max_buckets=(2,), cache_size=0,
                                max_wait=0.5, adaptive_wait=True)
     t_adapt = adaptive.replay(_low_load_trace())
-    mean = lambda ts: sum(t.response_time for t in ts) / len(ts)
+    def mean(ts):
+        return sum(t.response_time for t in ts) / len(ts)
     assert mean(t_adapt) < 0.5 * mean(t_fixed)
     # fixed policy pays the formation deadline; adaptive barely waits
     assert mean(t_fixed) > 0.1

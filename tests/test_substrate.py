@@ -16,7 +16,7 @@ from repro.core.faults import (
     route_queries,
 )
 from repro.data.pipeline import DataConfig, TokenStream
-from repro.models.model import init_model, make_inputs
+from repro.models.model import init_model
 from repro.serving.engine import Request, ServingEngine
 from repro.training.checkpoint import (
     latest_step,

@@ -213,34 +213,34 @@ def _writer_at_fill(corpus, meta, target, *, ns=1, seed=5):
 
 
 @pytest.mark.parametrize("fill", [0.0, 0.5, 1.0])
-def test_delta_merge_kernel_parity(setup, fill):
-    """merge_delta_windows == merged_term_window(drop_dead=False) on docs
-    and live exactly (attrs wherever the slot is a real posting), from an
-    empty slab (skip-table short-circuit) to a full one."""
-    from repro.core.engine import merged_term_window, posting_live, term_window
+@pytest.mark.parametrize("window", [WINDOW, 256, 1000])
+def test_delta_merge_kernel_parity(setup, fill, window):
+    """merge_delta_windows (fully streamed: main window read tile-by-tile
+    from the flat arrays via the DriverSpan handoff, no gathered operand)
+    == merged_term_window(drop_dead=False) on docs and live exactly (attrs
+    wherever the slot is a real posting), from an empty slab (skip-table
+    short-circuit) to a full one — including sub-TILE (256) and mid-tile
+    (1000) windows."""
+    from repro.core.engine import MergedPostingSource, merged_term_window
     from repro.kernels import ops
 
     corpus, meta, _, _ = setup
     w = _writer_at_fill(corpus, meta, fill)
     idx, _ = build_index(corpus)
     delta = local_delta(w.device_delta())
+    source = MergedPostingSource(idx, delta)
 
     # hot (mutated) terms, a rare term, and an inert padding slot
     terms = jnp.asarray([3, 9, 1, 17, 140, 23, -1, 0], jnp.int32)
-    m_docs, m_attrs, m_valid = jax.vmap(
-        lambda t: term_window(idx, t, WINDOW)
-    )(terms)
-    m_live = (
-        jax.vmap(lambda d: posting_live(delta, d, from_delta=False))(m_docs)
-        & m_valid
-    ).astype(jnp.int32)
-    docs, attrs, live = ops.merge_windows(
-        m_docs, m_attrs, m_live, delta.postings, delta.attrs,
-        delta.offsets, delta.lengths, delta.block_max, terms,
-        interpret=True,
+    span = source.driver_span(terms, window)
+    docs, attrs, src = ops.merge_windows(
+        idx.postings, idx.attrs, span.off, span.n_eff,
+        delta.postings, delta.attrs, delta.offsets, delta.lengths,
+        delta.block_max, terms, window=window, interpret=True,
     )
+    live = source.driver_live(docs, src)
     want = jax.vmap(
-        lambda t: merged_term_window(idx, delta, t, WINDOW, drop_dead=False)
+        lambda t: merged_term_window(idx, delta, t, window, drop_dead=False)
     )(terms)
     np.testing.assert_array_equal(np.asarray(docs), np.asarray(want[0]))
     np.testing.assert_array_equal(np.asarray(live), np.asarray(want[2]))
@@ -287,13 +287,14 @@ def test_striped_parity_across_fill(setup, fill):
     _assert_equal(got, want, fill)
 
 
-@pytest.mark.parametrize("window", [512, 1000])
+@pytest.mark.parametrize("window", [256, 512, 1000])
 def test_backend_parity_unaligned_window_and_capacity(setup, window):
-    """Windows that are not TILE-aligned (512) or not even lane-aligned
-    (1000), with a BLOCK- but not TILE-aligned delta capacity (384): the
-    streamed probes and the merge kernel must agree with jnp exactly
-    (regressions for floor-sized tile spans and the merge kernel's lane
-    padding)."""
+    """Windows that are shorter than one TILE (256), TILE-unaligned (512),
+    or not even lane-aligned (1000 — the driver stream's last tile ends
+    mid-tile), with a BLOCK- but not TILE-aligned delta capacity (384):
+    the streamed probes and the merge kernel must agree with jnp exactly
+    (regressions for floor-sized tile spans, the merge kernel's lane
+    padding, and the driver stream's intended-position masking)."""
     corpus, meta, muts, _ = setup
     w = DeltaWriter(corpus, meta, ns=1, term_capacity=384, doc_headroom=128)
     w.apply(muts)
@@ -307,6 +308,61 @@ def test_backend_parity_unaligned_window_and_capacity(setup, window):
     np.testing.assert_array_equal(np.asarray(dj), np.asarray(dp))
     np.testing.assert_array_equal(np.asarray(hj), np.asarray(hp))
     assert int(np.asarray(hj).sum()) > 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_tombstoned_driver_window(setup, backend):
+    """Every document of the driver term deleted: the whole driver window
+    is tombstones (live=0 wall-to-wall, including all-dead streamed driver
+    tiles), which must read as zero hits — and joins driven by that term
+    must not resurrect postings via the other-term probes."""
+    corpus, meta, _, _ = setup
+    term = 140  # rare term -> short list, cheap to tombstone completely
+    holders = [
+        d for d in range(corpus.n_docs) if term in set(corpus.terms_of(d))
+    ]
+    assert holders, "fixture must have at least one holder of the term"
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=256, doc_headroom=128)
+    w.delete_docs(holders)
+    idx, _ = build_index(corpus)
+    delta = local_delta(w.device_delta())
+    qb = make_query_batch(
+        [([term], None), ([term, 3], None), ([term], 3)], t_max=4, meta=meta
+    )
+    got = _run(idx, delta, qb, backend)
+    assert np.asarray(got[1]).tolist() == [0, 0, 0]
+    assert np.all(np.asarray(got[0]) == np.int32(2**31 - 1))
+    want = _run(idx, delta, qb, "jnp")
+    _assert_equal(got, want, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_main_driver_list_with_delta_postings(backend):
+    """Driver term whose MAIN posting list is empty but whose delta slab
+    has postings (inserted docs): the streamed merge must serve the window
+    purely from the delta side (main stream n_eff=0), and deleting those
+    docs again must drain it back to zero hits."""
+    from repro.data.corpus import corpus_from_docs
+
+    docs = [np.array(d, np.int32) for d in ([0, 1], [0, 2], [1, 2])]
+    corpus = corpus_from_docs(docs, [0, 1, 0], vocab_size=8, n_sites=4)
+    idx, meta = build_index(corpus)
+    empty_t = 5  # never occurs in the base corpus
+    w = DeltaWriter(corpus, meta, ns=1, term_capacity=256, doc_headroom=128)
+    gids = w.insert_docs([([empty_t, 0], 2), ([empty_t], 1)])
+    delta = local_delta(w.device_delta())
+    qb = make_query_batch(
+        [([empty_t], None), ([empty_t, 0], None)], t_max=4, meta=meta
+    )
+    got = _run(idx, delta, qb, backend)
+    want = _run(idx, delta, qb, "jnp")
+    _assert_equal(got, want, backend)
+    assert np.asarray(got[1]).tolist() == [2, 1]
+
+    w.delete_docs(gids)
+    delta = local_delta(w.device_delta())
+    got = _run(idx, delta, qb, backend)
+    assert np.asarray(got[1]).tolist() == [0, 0]
 
 
 def test_backend_bit_parity_under_delta(setup):
