@@ -35,7 +35,7 @@ def run_point(lam: float, mix, n_queries: int = 3000, seed: int = 0):
     # hybrid estimate: Formula (17) with partitioning-method slave max
     slave_max = partitioning_method(sim.slave_sojourn, C5.ns).mean()
     est = 0.0
-    for (sct, k), ratio in mix.qmr.items():
+    for (_sct, k), ratio in mix.qmr.items():
         est += ratio * MODEL.master_network_time(lam, C5, mix, k)
     est += slave_max
     est_mn = est - slave_max

@@ -1,0 +1,20 @@
+"""Static analysis for the Pallas kernel layer.
+
+Two layers, both run WITHOUT executing a kernel:
+
+- :mod:`repro.analysis.contracts` — the contract checker: for every
+  ``pallas_call`` site registered in :mod:`repro.kernels.registry`,
+  enumerate the grid, evaluate the real index maps, and prove bounds /
+  spare-tile clamp safety / output aliasing / tile alignment / VMEM
+  budget.
+- :mod:`repro.analysis.lint` — AST rules over ``src/`` enforcing repo
+  invariants the checker cannot see from a single call site (flat arrays
+  only via ``flat_tile_pad``, no host gathers on the streamed path,
+  ``interpret=`` threaded rather than hard-coded).
+
+CLI: ``python -m repro.analysis {check,lint,selftest}``.
+"""
+
+from repro.analysis.contracts import Finding, check_all, check_contract
+
+__all__ = ["Finding", "check_all", "check_contract"]

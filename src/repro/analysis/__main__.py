@@ -1,0 +1,103 @@
+"""CLI: ``python -m repro.analysis {check,lint,selftest}``.
+
+Exit code 0 when clean, 1 when any finding fires — CI runs all three as a
+hard gate (see .github/workflows/ci.yml, job ``analysis``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _cmd_check(args) -> int:
+    from repro.analysis.blockspec import vmem_bytes
+    from repro.analysis.contracts import check_all
+
+    budget = args.vmem_budget * 1024 * 1024
+    contracts, findings = check_all(
+        args.kernels or None, vmem_budget=budget
+    )
+    for c in contracts:
+        total, _ = vmem_bytes(c)
+        mine = [f for f in findings if f.kernel == c.name]
+        status = "FAIL" if mine else "ok"
+        print(
+            f"[{status:4s}] {c.name:36s} {c.site:46s} "
+            f"grid={c.grid} vmem={total / 1024:.1f}KiB"
+        )
+    for f in findings:
+        print(f, file=sys.stderr)
+    print(
+        f"{len(contracts)} kernel contract(s), {len(findings)} finding(s)"
+    )
+    return 1 if findings else 0
+
+
+def _cmd_lint(args) -> int:
+    from repro.analysis.lint import default_root, lint_tree
+
+    root = args.root or default_root()
+    findings = lint_tree(root)
+    for f in findings:
+        print(f, file=sys.stderr)
+    print(f"lint: {root}: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+def _cmd_selftest(args) -> int:
+    """Every negative fixture must be rejected with the expected check."""
+    from repro.analysis.contracts import check_contract
+    from repro.analysis.fixtures import broken_contracts
+
+    bad = 0
+    for contract, expected in broken_contracts():
+        findings = check_contract(contract)
+        hit = [f for f in findings if f.check == expected]
+        if hit:
+            print(f"[ok  ] {contract.name:28s} rejected by {expected!r}")
+        else:
+            bad += 1
+            got = sorted({f.check for f in findings}) or ["<nothing>"]
+            print(
+                f"[FAIL] {contract.name:28s} expected {expected!r}, "
+                f"got {got}",
+                file=sys.stderr,
+            )
+    print(f"selftest: {bad} missed rejection(s)")
+    return 1 if bad else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract checker + repo lints for the Pallas "
+        "kernel layer.",
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pc = sub.add_parser("check", help="check registered kernel contracts")
+    pc.add_argument("kernels", nargs="*", help="kernel names (default: all)")
+    pc.add_argument(
+        "--vmem-budget",
+        type=int,
+        default=16,
+        help="per-core VMEM budget in MiB (default 16)",
+    )
+    pc.set_defaults(fn=_cmd_check)
+
+    pl = sub.add_parser("lint", help="AST repo-invariant lints over src/")
+    pl.add_argument("--root", default=None, help="tree to lint")
+    pl.set_defaults(fn=_cmd_lint)
+
+    ps = sub.add_parser(
+        "selftest", help="negative fixtures must each be rejected"
+    )
+    ps.set_defaults(fn=_cmd_selftest)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,222 @@
+"""Deliberately-broken kernel contracts the checker MUST reject.
+
+Each fixture is a tiny synthetic :class:`KernelContract` carrying exactly
+one violation, paired with the check id expected to fire.  They serve two
+masters: ``tests/test_analysis.py`` asserts each is rejected with a
+location-bearing diagnostic, and ``python -m repro.analysis selftest``
+runs them in CI so a refactor that quietly lobotomizes a check fails the
+gate even with a clean tree.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.registry import UNBLOCKED, KernelContract, OperandContract
+
+_SITE = "src/repro/analysis/fixtures.py"
+
+
+def _line(tag: str) -> str:
+    return f"{_SITE}:{tag}"
+
+
+def _id_map(i, *_scalars):
+    return (i, 0)
+
+
+def _oob_map(i, *_scalars):
+    # walks one block past the end of a 4-block array
+    return (i + 1, 0)
+
+
+def _alias_map(i, *_scalars):
+    # grid points 0/1 and 2/3 collapse onto the same output block with no
+    # revisit_dims declared
+    return (i // 2, 0)
+
+
+def _flipflop_map(i, *_scalars):
+    # revisits block 0 at steps 0 and 2 with step 1 elsewhere: a
+    # non-contiguous revisit even when dim 0 IS declared revisitable
+    return (int(i) % 2, 0)
+
+
+def _edge_clamp_map(i, off_ref):
+    return (int(np.minimum(off_ref[i] + i * 8, 24)), 0)
+
+
+def _edge_clamp_intended(i, off_ref):
+    return (off_ref[i] + i * 8, 0)
+
+
+def _consume_all(i, off_ref):
+    return True
+
+
+TILE8 = (8, 128)
+
+
+def _flat_op(name, n_blocks, index_map, **kw):
+    return OperandContract(
+        name, (n_blocks * 8, 128), "int32", TILE8, index_map, **kw
+    )
+
+
+def broken_contracts() -> list[tuple[KernelContract, str]]:
+    """``(contract, expected_check)`` pairs — one violation each."""
+    out: list[tuple[KernelContract, str]] = []
+
+    out.append(
+        (
+            KernelContract(
+                name="fx_oob_index_map",
+                site=_line("fx_oob_index_map"),
+                grid=(4,),
+                scalars=(),
+                inputs=(_flat_op("x", 4, _oob_map),),
+                outputs=(_flat_op("o", 4, _id_map),),
+            ),
+            "bounds",
+        )
+    )
+
+    # Unblocked stream over a flat array whose padding stops exactly at
+    # the live extent: no spare tile for the edge clamp to land in.
+    out.append(
+        (
+            KernelContract(
+                name="fx_missing_spare_tile",
+                site=_line("fx_missing_spare_tile"),
+                grid=(4,),
+                scalars=(np.zeros(4, np.int32),),
+                inputs=(
+                    OperandContract(
+                        "stream",
+                        (32, 128),
+                        "int32",
+                        TILE8,
+                        _edge_clamp_map,
+                        indexing_mode=UNBLOCKED,
+                        padding_from=32 * 128,  # live to the very end
+                        spare_tile=True,
+                    ),
+                ),
+                outputs=(_flat_op("o", 4, _id_map),),
+            ),
+            "spare-tile",
+        )
+    )
+
+    # Edge clamp engages at the last grid step while the kernel still
+    # consumes the block — the PR 5 bug, distilled.
+    out.append(
+        (
+            KernelContract(
+                name="fx_clamped_read_consumed",
+                site=_line("fx_clamped_read_consumed"),
+                grid=(5,),
+                scalars=(np.zeros(5, np.int32),),
+                inputs=(
+                    OperandContract(
+                        "stream",
+                        (32, 128),
+                        "int32",
+                        TILE8,
+                        _edge_clamp_map,
+                        indexing_mode=UNBLOCKED,
+                        intended_map=_edge_clamp_intended,
+                        consumed=_consume_all,
+                        padding_from=24 * 128,
+                        spare_tile=True,
+                    ),
+                ),
+                outputs=(
+                    OperandContract(
+                        "o", (5 * 8, 128), "int32", TILE8, _id_map
+                    ),
+                ),
+            ),
+            "clamp-escape",
+        )
+    )
+
+    out.append(
+        (
+            KernelContract(
+                name="fx_aliased_output",
+                site=_line("fx_aliased_output"),
+                grid=(4,),
+                scalars=(),
+                inputs=(_flat_op("x", 4, _id_map),),
+                outputs=(_flat_op("o", 4, _alias_map),),
+            ),
+            "alias",
+        )
+    )
+
+    out.append(
+        (
+            KernelContract(
+                name="fx_noncontiguous_revisit",
+                site=_line("fx_noncontiguous_revisit"),
+                grid=(4,),
+                scalars=(),
+                inputs=(_flat_op("x", 4, _id_map),),
+                outputs=(_flat_op("o", 2, _flipflop_map),),
+                revisit_dims=(0,),
+            ),
+            "alias",
+        )
+    )
+
+    out.append(
+        (
+            KernelContract(
+                name="fx_misaligned_tile",
+                site=_line("fx_misaligned_tile"),
+                grid=(4,),
+                scalars=(),
+                inputs=(
+                    OperandContract(
+                        "x", (32, 100), "int32", (8, 100), _id_map
+                    ),
+                ),
+                outputs=(_flat_op("o", 4, _id_map),),
+            ),
+            "alignment",
+        )
+    )
+
+    out.append(
+        (
+            KernelContract(
+                name="fx_vmem_blowout",
+                site=_line("fx_vmem_blowout"),
+                grid=(2,),
+                scalars=(),
+                inputs=(
+                    OperandContract(
+                        "x",
+                        (2 * 2048, 128),
+                        "float32",
+                        (2048, 128),
+                        _id_map,
+                    ),
+                ),
+                outputs=(
+                    OperandContract(
+                        "o",
+                        (2 * 2048, 128),
+                        "float32",
+                        (2048, 128),
+                        _id_map,
+                    ),
+                ),
+                scratch=(((4096, 4096), "float32"),),
+            ),
+            "vmem",
+        )
+    )
+
+    return out

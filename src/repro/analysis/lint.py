@@ -1,0 +1,205 @@
+"""Repo-invariant lints: AST rules over ``src/`` the contract checker
+cannot see from a single call site.
+
+Rules (suppress a line with ``# lint: allow(<rule>)``):
+
+- ``flat-pad`` — flat posting arrays may only be sized through
+  :func:`repro.core.index.flat_tile_pad`.  Flags hand-rolled
+  ``(n // TILE ...) * TILE`` padding arithmetic anywhere outside that
+  function: every re-derivation is a chance to reintroduce the floor+1
+  bug the spare-tile contract exists to prevent.
+- ``posting-gather`` — no ``jnp.take`` / ``jnp.take_along_axis`` on
+  posting/attr arrays inside the kernel layer.  The streamed read path's
+  entire point is that windows stream from the flat arrays through
+  BlockSpec index maps; a host-side gather on the posting data would
+  silently reintroduce the materialization the CI bench gate measures
+  away.  (Gathers on *metadata* — offsets, lengths, skip tables — are the
+  mechanism and stay legal.)
+- ``interpret-literal`` — ``interpret=`` must be threaded (a variable or
+  function default), never hard-coded as a ``True``/``False`` literal at
+  a call site: hard-coding forks CPU-CI behavior from TPU behavior.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable
+
+RULES = ("flat-pad", "posting-gather", "interpret-literal")
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([a-z-]+)\)")
+
+#: Identifier substrings that mark an array as posting/attr payload data.
+_POSTING_NAMES = ("posting", "attr")
+
+#: Files exempt from posting-gather: the reference oracles are *defined*
+#: by their gather formulation.
+_GATHER_EXEMPT = ("kernels/ref.py",)
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    message: str
+    path: str
+    line: int
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _allowed(source_lines: list[str], node: ast.AST) -> set[str]:
+    """Rules suppressed on this node's lines, trailing comments included,
+    plus any comment-only lines immediately above the statement."""
+    out: set[str] = set()
+    first = getattr(node, "lineno", 0)
+    for lineno in {first, getattr(node, "end_lineno", 0)}:
+        if 1 <= lineno <= len(source_lines):
+            out.update(_ALLOW_RE.findall(source_lines[lineno - 1]))
+    lineno = first - 1
+    while 1 <= lineno <= len(source_lines):
+        stripped = source_lines[lineno - 1].strip()
+        if not stripped.startswith("#"):
+            break
+        out.update(_ALLOW_RE.findall(stripped))
+        lineno -= 1
+    return out
+
+
+def _contains_tile_floordiv(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.FloorDiv):
+            if isinstance(sub.right, ast.Name) and sub.right.id == "TILE":
+                return True
+            if (
+                isinstance(sub.left, ast.UnaryOp)
+                and isinstance(sub.right, ast.UnaryOp)
+            ):  # -(-n // TILE) spelled with the div nested
+                return _contains_tile_floordiv(sub.left) or (
+                    _contains_tile_floordiv(sub.right)
+                )
+    return False
+
+
+def _is_tile_name(node: ast.AST) -> bool:
+    return isinstance(node, ast.Name) and node.id == "TILE"
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: str, rel: str, source: str):
+        self.rel = rel
+        self.lines = source.splitlines()
+        self.findings: list[LintFinding] = []
+        self._func_stack: list[str] = []
+        self._gather_scoped = rel.startswith("repro/kernels/") and not any(
+            rel.endswith(e.split("/")[-1]) and e in rel for e in _GATHER_EXEMPT
+        )
+
+    def _emit(self, rule: str, message: str, node: ast.AST):
+        if rule in _allowed(self.lines, node):
+            return
+        self.findings.append(
+            LintFinding(rule, message, self.rel, getattr(node, "lineno", 0))
+        )
+
+    # -- flat-pad ----------------------------------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_BinOp(self, node: ast.BinOp):
+        in_flat_tile_pad = "flat_tile_pad" in self._func_stack
+        if (
+            not in_flat_tile_pad
+            and isinstance(node.op, ast.Mult)
+            and (_is_tile_name(node.left) or _is_tile_name(node.right))
+        ):
+            other = node.right if _is_tile_name(node.left) else node.left
+            if _contains_tile_floordiv(other):
+                self._emit(
+                    "flat-pad",
+                    "hand-rolled TILE padding arithmetic — size flat "
+                    "posting arrays through flat_tile_pad() so the "
+                    "spare-tile contract holds",
+                    node,
+                )
+        self.generic_visit(node)
+
+    # -- posting-gather / interpret-literal --------------------------------
+    def visit_Call(self, node: ast.Call):
+        fn = node.func
+        if (
+            self._gather_scoped
+            and isinstance(fn, ast.Attribute)
+            and fn.attr in ("take", "take_along_axis")
+            and isinstance(fn.value, ast.Name)
+            and fn.value.id == "jnp"
+            and node.args
+        ):
+            target = node.args[0]
+            name = ""
+            if isinstance(target, ast.Name):
+                name = target.id
+            elif isinstance(target, ast.Attribute):
+                name = target.attr
+            if any(p in name.lower() for p in _POSTING_NAMES):
+                self._emit(
+                    "posting-gather",
+                    f"jnp.{fn.attr} on posting/attr array {name!r} in the "
+                    "kernel layer — stream it through a BlockSpec index "
+                    "map instead",
+                    node,
+                )
+        for kw in node.keywords:
+            if kw.arg == "interpret" and isinstance(kw.value, ast.Constant):
+                if isinstance(kw.value.value, bool):
+                    self._emit(
+                        "interpret-literal",
+                        f"interpret={kw.value.value} hard-coded at a call "
+                        "site — thread it (default None resolves via "
+                        "ops.default_interpret())",
+                        kw.value,
+                    )
+        self.generic_visit(node)
+
+
+def lint_file(path: str, rel: str) -> list[LintFinding]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintFinding("flat-pad", f"unparseable: {e}", rel, e.lineno or 0)]
+    linter = _FileLinter(path, rel, source)
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_tree(root: str) -> list[LintFinding]:
+    """Lint every ``.py`` file under ``root`` (typically ``src/``)."""
+    findings: list[LintFinding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            findings.extend(lint_file(path, rel))
+    return findings
+
+
+def default_root() -> str:
+    """The ``src/`` tree this installed package was imported from."""
+    here = os.path.dirname(os.path.abspath(__file__))   # .../src/repro/analysis
+    return os.path.dirname(os.path.dirname(here))        # .../src
+
+
+def format_findings(findings: Iterable[LintFinding]) -> str:
+    return "\n".join(str(f) for f in findings)

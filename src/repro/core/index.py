@@ -71,6 +71,51 @@ def flat_tile_pad(n: int) -> int:
     """
     return (-(-n // TILE) + 1) * TILE
 
+
+def flat_live_extent(offsets: np.ndarray, lengths: np.ndarray) -> int:
+    """First flat offset past every list's BLOCK-aligned slot.
+
+    Everything at or beyond this offset is INVALID fill — the *live
+    extent* side of the padding contract.  Together with the array's
+    padded length it makes the spare-tile invariant machine-checkable
+    (:func:`padding_contract`, consumed by :mod:`repro.analysis`).
+    """
+    offsets = np.asarray(offsets)
+    lengths = np.asarray(lengths)
+    if offsets.size == 0:
+        return 0
+    padded = np.maximum(((lengths + BLOCK - 1) // BLOCK) * BLOCK, BLOCK)
+    return int(np.max(offsets.astype(np.int64) + padded.astype(np.int64)))
+
+
+class FlatPadding(NamedTuple):
+    """Checkable form of the flat-array padding contract.
+
+    ``live_extent`` is the first offset past every list's slot (see
+    :func:`flat_live_extent`); ``padded_len`` the flat array's actual
+    length.  The streamed read path is safe iff the array keeps at least
+    one whole spare INVALID tile past the live extent — what
+    :func:`flat_tile_pad` guarantees and :meth:`spare_tile_ok` verifies.
+    """
+
+    live_extent: int
+    padded_len: int
+
+    def spare_tile_ok(self, read_elems: int = TILE) -> bool:
+        """True iff a clamped ``read_elems``-sized edge read lies entirely
+        past the live extent (the invariant unblocked-index BlockSpecs
+        rely on)."""
+        return self.padded_len - read_elems >= self.live_extent
+
+
+def padding_contract(
+    offsets: np.ndarray, lengths: np.ndarray, padded_len: int
+) -> FlatPadding:
+    """The padding contract of a flat posting/attr array, as metadata the
+    static checker (:mod:`repro.analysis`) can verify without executing a
+    kernel."""
+    return FlatPadding(flat_live_extent(offsets, lengths), int(padded_len))
+
 # Tombstone bits of the online-update doc_flags bitmap (repro.indexing).
 # Defined here, next to the layout constants, so the kernel layer can fuse
 # the liveness predicate without depending on the write path: DEAD masks a
@@ -262,6 +307,8 @@ def build_sharded_index(
         # every shard keeps >= its own spare INVALID tile — see
         # flat_tile_pad — since stacking only ever widens the padding).
         if key in ("postings", "attrs"):
+            # lint: allow(flat-pad) — widening an already-flat_tile_pad'ed
+            # shard can only grow its spare-tile slack, never shrink it
             width = ((width + TILE - 1) // TILE) * TILE
         elif key == "doc_site":
             width = ((width + BLOCK - 1) // BLOCK) * BLOCK

@@ -67,6 +67,14 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1)).bit_length()
 
 
+def _exchange(x, swap, blocks, d, n):
+    """One compare-exchange stage applied to a rider array ``x``."""
+    x2 = x.reshape(blocks, 2, d)
+    lo = jnp.where(swap, x2[:, 1], x2[:, 0])
+    hi = jnp.where(swap, x2[:, 0], x2[:, 1])
+    return jnp.stack([lo, hi], axis=1).reshape(n)
+
+
 def _bitonic_merge_flat(key, src, payloads):
     """Ascending merge of a bitonic ``key`` sequence, ties broken by
     ``src`` (stream id); ``payloads`` travel with their key."""
@@ -81,16 +89,36 @@ def _bitonic_merge_flat(key, src, payloads):
         swap = (k2[:, 0] > k2[:, 1]) | (
             (k2[:, 0] == k2[:, 1]) & (s2[:, 0] > s2[:, 1])
         )
-
-        def exchange(x):
-            x2 = x.reshape(blocks, 2, d)
-            lo = jnp.where(swap, x2[:, 1], x2[:, 0])
-            hi = jnp.where(swap, x2[:, 0], x2[:, 1])
-            return jnp.stack([lo, hi], axis=1).reshape(n)
-
-        key, src = exchange(key), exchange(src)
-        payloads = tuple(exchange(p) for p in payloads)
+        key = _exchange(key, swap, blocks, d, n)
+        src = _exchange(src, swap, blocks, d, n)
+        payloads = tuple(_exchange(p, swap, blocks, d, n) for p in payloads)
     return key, src, payloads
+
+
+# BlockSpec index maps — module-level so the contract checker
+# (repro.analysis, via the registry at the bottom of this file) evaluates
+# the exact same code the pallas_call runs, never a re-derivation.
+
+
+def _main_window_map(rows_total):
+    def m_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+        # Unblocked element-row offset of window tile j; clamped at the
+        # array edge (spare-tile invariant keeps clamped tiles masked).
+        row = minfo_ref[q, 0] + j * TILE_ROWS
+        return (jnp.minimum(row, rows_total - TILE_ROWS), 0)
+
+    return m_map
+
+
+def _slab_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+    # empty slabs pin to block 0: the copy-through never reads the
+    # operand, and consecutive skipped queries coalesce onto one
+    # already-resident block instead of one slab DMA each
+    return (jnp.where(occ_ref[q] == 0, 0, slab_ref[q]), 0)
+
+
+def _merge_out_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+    return (q, 0, 0)
 
 
 def _merge_kernel(
@@ -226,20 +254,9 @@ def merge_delta_windows(
     dp2 = d_postings.reshape(-1, LANES)
     da2 = d_attrs.reshape(-1, LANES)
 
-    def m_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
-        # Unblocked element-row offset of window tile j; clamped at the
-        # array edge (spare-tile invariant keeps clamped tiles masked).
-        row = minfo_ref[q, 0] + j * TILE_ROWS
-        return (jnp.minimum(row, rows_total - TILE_ROWS), 0)
-
-    def d_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
-        # empty slabs pin to block 0: the copy-through never reads the
-        # operand, and consecutive skipped queries coalesce onto one
-        # already-resident block instead of one slab DMA each
-        return (jnp.where(occ_ref[q] == 0, 0, slab_ref[q]), 0)
-
-    def o_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
-        return (q, 0, 0)
+    m_map = _main_window_map(rows_total)
+    d_map = _slab_map
+    o_map = _merge_out_map
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
@@ -276,3 +293,129 @@ def merge_delta_windows(
         return x.reshape(q_n, -1)[:, :window]
 
     return unroll(docs), unroll(oattrs), unroll(src)
+
+
+# ---------------------------------------------------------------------------
+# Contract registration (repro.kernels.registry -> repro.analysis)
+# ---------------------------------------------------------------------------
+
+import numpy as np  # noqa: E402
+
+from repro.kernels.registry import (  # noqa: E402
+    UNBLOCKED,
+    KernelContract,
+    OperandContract,
+    kernel_contract,
+    site_of,
+    synthetic_delta_arrays,
+    synthetic_flat_index,
+)
+
+
+def _main_window_intended(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+    """Pre-clamp address of :func:`_main_window_map` — contract only."""
+    return (minfo_ref[q, 0] + j * TILE_ROWS, 0)
+
+
+def _main_window_consumed(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+    return bool(j * TILE < minfo_ref[q, 1])
+
+
+def _slab_intended(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+    return (slab_ref[q], 0)
+
+
+def _slab_consumed(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+    return bool(occ_ref[q] != 0)
+
+
+@kernel_contract("merge_delta_windows")
+def _contract_merge_delta_windows():
+    # Canonical main index: lists (150, 100, 90); the last list ends
+    # mid-tile at the array edge, so the last window tile of query 1
+    # clamps — safe only because of the spare INVALID tile.
+    arrays, live = synthetic_flat_index((150, 100, 90))
+    delta = synthetic_delta_arrays(3, TILE, fills=(5, 0, 12))
+    n_terms, cap = 3, TILE
+    bpt = cap // BLOCK
+    rows_total = arrays["postings"].shape[0] // LANES
+
+    window = 2 * TILE
+    s_w = -(-window // TILE)
+    out_rows = s_w * TILE_ROWS
+    q_n = 3
+    terms = np.array([0, 2, -1], np.int32)
+    m_off = np.array([0, 384, 256], np.int32)
+    m_neff = np.array([150, 90, 100], np.int32)
+
+    tt = np.clip(terms, 0, n_terms - 1)
+    slab = delta["d_offsets"][tt] // cap
+    d_len = np.where(terms < 0, 0, delta["d_lengths"][tt]).astype(np.int32)
+    occ_per_term = np.sum(
+        delta["d_block_max"].reshape(n_terms, bpt) != INVALID_DOC, axis=1
+    ).astype(np.int32)
+    d_occ = np.where(terms < 0, 0, occ_per_term[tt]).astype(np.int32)
+    minfo = np.stack([m_off // LANES, m_neff], axis=-1).astype(np.int32)
+    scalars = (minfo, slab.astype(np.int32), d_len, d_occ)
+
+    tile = (TILE_ROWS, LANES)
+    flat_main = (rows_total, LANES)
+    cap_rows = cap // LANES
+    flat_delta = (delta["d_postings"].shape[0] // LANES, LANES)
+    d_live = int(cap * n_terms)
+    main_kw = dict(
+        indexing_mode=UNBLOCKED,
+        intended_map=_main_window_intended,
+        consumed=_main_window_consumed,
+        padding_from=live,
+        spare_tile=True,
+    )
+    m_map = _main_window_map(rows_total)
+    ins = (
+        OperandContract(
+            "main_postings", flat_main, "int32", tile, m_map, **main_kw
+        ),
+        OperandContract(
+            "main_attrs", flat_main, "int32", tile, m_map, **main_kw
+        ),
+        OperandContract(
+            "delta_postings",
+            flat_delta,
+            "int32",
+            (cap_rows, LANES),
+            _slab_map,
+            intended_map=_slab_intended,
+            consumed=_slab_consumed,
+            padding_from=d_live,
+        ),
+        OperandContract(
+            "delta_attrs",
+            flat_delta,
+            "int32",
+            (cap_rows, LANES),
+            _slab_map,
+            intended_map=_slab_intended,
+            consumed=_slab_consumed,
+            padding_from=d_live,
+        ),
+    )
+    blk_o = (1, out_rows, LANES)
+    out_shape = (q_n, out_rows, LANES)
+    outs = tuple(
+        OperandContract(nm, out_shape, "int32", blk_o, _merge_out_map)
+        for nm in ("docs", "attrs", "src")
+    )
+    return KernelContract(
+        name="merge_delta_windows",
+        site=site_of(merge_delta_windows),
+        grid=(q_n, s_w),
+        scalars=scalars,
+        inputs=ins,
+        outputs=outs,
+        scratch=(
+            ((out_rows, LANES), "int32"),
+            ((out_rows, LANES), "int32"),
+        ),
+        revisit_dims=(1,),
+        notes="in-kernel bitonic merge of main + delta streams",
+    )

@@ -29,6 +29,23 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+# BlockSpec index maps — module-level so the contract checker
+# (repro.analysis, via the registry at the bottom of this file) evaluates
+# the exact same code the pallas_call runs.
+
+
+def _flash_q_map(r, qi, ki):
+    return (r, qi, 0)
+
+
+def _flash_kv_map(G):
+    # rows flattened (B, KV, G): k/v row of q-row r is r // G
+    def kv_map(r, qi, ki):
+        return (r // G, ki, 0)
+
+    return kv_map
+
+
 def _flash_kernel(
     q_ref,    # (1, Cq, hd)
     k_ref,    # (1, Ck, hd)
@@ -122,11 +139,11 @@ def flash_attention_fwd(
         ),
         grid=(B * H, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, cq, hd), lambda r, qi, ki: (r, qi, 0)),
-            pl.BlockSpec((1, ck, hd), lambda r, qi, ki: (r // G, ki, 0)),
-            pl.BlockSpec((1, ck, hd), lambda r, qi, ki: (r // G, ki, 0)),
+            pl.BlockSpec((1, cq, hd), _flash_q_map),
+            pl.BlockSpec((1, ck, hd), _flash_kv_map(G)),
+            pl.BlockSpec((1, ck, hd), _flash_kv_map(G)),
         ],
-        out_specs=pl.BlockSpec((1, cq, hd), lambda r, qi, ki: (r, qi, 0)),
+        out_specs=pl.BlockSpec((1, cq, hd), _flash_q_map),
         out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((cq,), jnp.float32),
@@ -152,3 +169,52 @@ def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
     return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Contract registration (repro.kernels.registry -> repro.analysis)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.registry import (  # noqa: E402
+    KernelContract,
+    OperandContract,
+    kernel_contract,
+    site_of,
+)
+
+
+@kernel_contract("flash_attention_fwd")
+def _contract_flash_attention_fwd():
+    # Canonical GQA config: B=1, S=T=256, H=2, KV=1 (G=2), hd=128,
+    # cq=ck=128 -> grid (B*H, nq, nk) = (2, 2, 2).
+    B, S, T, H, KV, hd = 1, 256, 256, 2, 1, 128
+    G = H // KV
+    cq, ck = 128, 128
+    nq, nk = S // cq, T // ck
+    q_shape = (B * H, S, hd)
+    kv_shape = (B * KV, T, hd)
+    return KernelContract(
+        name="flash_attention_fwd",
+        site=site_of(flash_attention_fwd),
+        grid=(B * H, nq, nk),
+        scalars=(),
+        inputs=(
+            OperandContract("q", q_shape, "float32", (1, cq, hd), _flash_q_map),
+            OperandContract(
+                "k", kv_shape, "float32", (1, ck, hd), _flash_kv_map(G)
+            ),
+            OperandContract(
+                "v", kv_shape, "float32", (1, ck, hd), _flash_kv_map(G)
+            ),
+        ),
+        outputs=(
+            OperandContract("o", q_shape, "float32", (1, cq, hd), _flash_q_map),
+        ),
+        scratch=(
+            ((cq,), "float32"),
+            ((cq,), "float32"),
+            ((cq, hd), "float32"),
+        ),
+        revisit_dims=(2,),
+        notes="online-softmax accumulation over the k-chunk grid dim",
+    )

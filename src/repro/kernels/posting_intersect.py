@@ -124,6 +124,83 @@ def _pad_to_tile(x: jnp.ndarray, fill) -> jnp.ndarray:
     return x
 
 
+# ---------------------------------------------------------------------------
+# BlockSpec index maps — module-level so the contract checker
+# (repro.analysis, via the registry at the bottom of this file) evaluates
+# the exact same code the pallas_calls run, never a re-derivation.
+# ---------------------------------------------------------------------------
+
+
+def _ibs_a_map(i, j, *_):
+    return (i, 0)
+
+
+def _ibs_b_map(num_b):
+    def b_map(i, j, b_start_ref, n_b_ref, attr_ref):
+        # Out-of-range steps remap to the last in-range tile: the block is
+        # already resident, so Pallas skips the DMA — the "skip" is free.
+        jj = jnp.minimum(j, jnp.maximum(n_b_ref[i] - 1, 0))
+        return (jnp.minimum(b_start_ref[i] + jj, num_b - 1), 0)
+
+    return b_map
+
+
+def _batched_a_map(q, i, t, j, *_):
+    return (q, i, 0)
+
+
+def _batched_b_map(num_b):
+    def b_map(q, i, t, j, b_start_ref, n_b_ref, active_ref, attr_ref):
+        # Out-of-range steps remap to an already-resident tile, so Pallas
+        # elides the DMA — the "skip" is free.  Zero-tile slots (inactive
+        # or no overlap) pin to block (q,0,0) regardless of t: consecutive
+        # inert steps then map to the same block and coalesce instead of
+        # pulling one fresh tile per (A-tile, slot).
+        nb = n_b_ref[q, t, i]
+        jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
+        tt = jnp.where(nb == 0, 0, t)
+        bb = jnp.where(
+            nb == 0, 0, jnp.minimum(b_start_ref[q, t, i] + jj, num_b - 1)
+        )
+        return (q, tt, bb, 0)
+
+    return b_map
+
+
+def _streamed_flat_map(start_idx, n_idx, num_tiles):
+    """Flat-array tile walk at the scalar-prefetched per-(q, t, i) range;
+    ``start_idx``/``n_idx`` address the range arrays in the prefetch refs."""
+
+    def b_map(q, i, t, j, *refs):
+        # Out-of-range steps remap to an already-resident tile (DMA
+        # elided); zero-tile slots pin to tile 0 so consecutive inert
+        # steps coalesce.
+        nb = refs[n_idx][q, t, i]
+        jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
+        tile = jnp.minimum(refs[start_idx][q, t, i] + jj, num_tiles - 1)
+        return (jnp.where(nb == 0, 0, tile), 0)
+
+    return b_map
+
+
+def _driver_window_map(rows_total, info_idx):
+    """Unblocked element-row offset of driver tile i: the per-query window
+    start rides in prefetch ref ``info_idx`` as ``[row0, n_eff]`` rows."""
+
+    def ad_map(q, i, t, j, *refs):
+        # Clamped at the array edge; the spare INVALID tile makes any
+        # clamped tile fully out-of-window, so the kernel's position mask
+        # discards it.
+        row = refs[info_idx][q, 0] + i * TILE_ROWS
+        return (jnp.minimum(row, rows_total - TILE_ROWS), 0)
+
+    return ad_map
+
+
+def _driver_out_map(q, i, t, j, *refs):
+    return (q, i, 0)
+
+
 def compute_skip_map(
     a_docs: jnp.ndarray, b_docs: jnp.ndarray
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -188,24 +265,15 @@ def intersect_block_skip(
     aa2 = aa.reshape(num_a * TILE_ROWS, LANES)
     b2 = b.reshape(num_b * TILE_ROWS, LANES)
 
-    def a_map(i, j, b_start_ref, n_b_ref, attr_ref):
-        return (i, 0)
-
-    def b_map(i, j, b_start_ref, n_b_ref, attr_ref):
-        # Out-of-range steps remap to the last in-range tile: the block is
-        # already resident, so Pallas skips the DMA — the "skip" is free.
-        jj = jnp.minimum(j, jnp.maximum(n_b_ref[i] - 1, 0))
-        return (jnp.minimum(b_start_ref[i] + jj, num_b - 1), 0)
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(num_a, s_max),
         in_specs=[
-            pl.BlockSpec((TILE_ROWS, LANES), a_map),
-            pl.BlockSpec((TILE_ROWS, LANES), a_map),
-            pl.BlockSpec((TILE_ROWS, LANES), b_map),
+            pl.BlockSpec((TILE_ROWS, LANES), _ibs_a_map),
+            pl.BlockSpec((TILE_ROWS, LANES), _ibs_a_map),
+            pl.BlockSpec((TILE_ROWS, LANES), _ibs_b_map(num_b)),
         ],
-        out_specs=pl.BlockSpec((TILE_ROWS, LANES), a_map),
+        out_specs=pl.BlockSpec((TILE_ROWS, LANES), _ibs_a_map),
     )
     out = pl.pallas_call(
         functools.partial(_intersect_kernel, s_max=s_max),
@@ -332,33 +400,16 @@ def intersect_batched_block_skip(
     al2 = al.reshape(q_n, num_a * TILE_ROWS, LANES)
     b2 = b.reshape(q_n, t_slots, num_b * TILE_ROWS, LANES)
 
-    def a_map(q, i, t, j, b_start_ref, n_b_ref, active_ref, attr_ref):
-        return (q, i, 0)
-
-    def b_map(q, i, t, j, b_start_ref, n_b_ref, active_ref, attr_ref):
-        # Out-of-range steps remap to an already-resident tile, so Pallas
-        # elides the DMA — the "skip" is free.  Zero-tile slots (inactive
-        # or no overlap) pin to block (q,0,0) regardless of t: consecutive
-        # inert steps then map to the same block and coalesce instead of
-        # pulling one fresh tile per (A-tile, slot).
-        nb = n_b_ref[q, t, i]
-        jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
-        tt = jnp.where(nb == 0, 0, t)
-        bb = jnp.where(
-            nb == 0, 0, jnp.minimum(b_start_ref[q, t, i] + jj, num_b - 1)
-        )
-        return (q, tt, bb, 0)
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(q_n, num_a, t_slots, s_max),
         in_specs=[
-            pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
-            pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
-            pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
-            pl.BlockSpec((1, 1, TILE_ROWS, LANES), b_map),
+            pl.BlockSpec((1, TILE_ROWS, LANES), _batched_a_map),
+            pl.BlockSpec((1, TILE_ROWS, LANES), _batched_a_map),
+            pl.BlockSpec((1, TILE_ROWS, LANES), _batched_a_map),
+            pl.BlockSpec((1, 1, TILE_ROWS, LANES), _batched_b_map(num_b)),
         ],
-        out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
+        out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), _batched_a_map),
         scratch_shapes=[pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)],
     )
     out = pl.pallas_call(
@@ -686,27 +737,15 @@ def intersect_batched_streamed(
     scalars += [active, attr_params]
     n_scalars = len(scalars)
 
-    def a_map(q, i, t, j, *_):
-        return (q, i, 0)
-
-    def _flat_map(start_idx, n_idx, num_tiles):
-        def b_map(q, i, t, j, *refs):
-            # Out-of-range steps remap to an already-resident tile (DMA
-            # elided); zero-tile slots pin to tile 0 so consecutive inert
-            # steps coalesce.
-            nb = refs[n_idx][q, t, i]
-            jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
-            tile = jnp.minimum(refs[start_idx][q, t, i] + jj, num_tiles - 1)
-            return (jnp.where(nb == 0, 0, tile), 0)
-        return b_map
-
     in_specs = [
-        pl.BlockSpec((1, TILE_ROWS, LANES), a_map) for _ in operands
-    ] + [pl.BlockSpec((TILE_ROWS, LANES), _flat_map(0, 1, num_m))]
+        pl.BlockSpec((1, TILE_ROWS, LANES), _batched_a_map) for _ in operands
+    ] + [pl.BlockSpec((TILE_ROWS, LANES), _streamed_flat_map(0, 1, num_m))]
     operands.append(pm2)
     scratch = [pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)]
     if has_delta:
-        in_specs.append(pl.BlockSpec((TILE_ROWS, LANES), _flat_map(3, 4, num_d)))
+        in_specs.append(
+            pl.BlockSpec((TILE_ROWS, LANES), _streamed_flat_map(3, 4, num_d))
+        )
         operands.append(pd2)
         scratch.append(pltpu.VMEM((TILE_ROWS, LANES), jnp.int32))
 
@@ -714,7 +753,7 @@ def intersect_batched_streamed(
         num_scalar_prefetch=n_scalars,
         grid=(q_n, num_a, t_slots, s_grid),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), a_map),
+        out_specs=pl.BlockSpec((1, TILE_ROWS, LANES), _batched_a_map),
         scratch_shapes=scratch,
     )
     out = pl.pallas_call(
@@ -876,21 +915,8 @@ def intersect_batched_driver_streamed(
     pm2 = postings.reshape(rows_total, LANES)
     pa2 = attrs.reshape(rows_total, LANES)
 
-    def ad_map(q, i, t, j, *refs):
-        # Unblocked: element row offset of the driver tile.  Clamped at the
-        # array edge; the spare INVALID tile makes any clamped tile fully
-        # out-of-window, so the kernel's position mask discards it.
-        row = refs[5][q, 0] + i * TILE_ROWS
-        return (jnp.minimum(row, rows_total - TILE_ROWS), 0)
-
-    def b_map(q, i, t, j, *refs):
-        nb = refs[1][q, t, i]
-        jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
-        tile = jnp.minimum(refs[0][q, t, i] + jj, num_m - 1)
-        return (jnp.where(nb == 0, 0, tile), 0)
-
-    def out_map(q, i, t, j, *refs):
-        return (q, i, 0)
+    ad_map = _driver_window_map(rows_total, 5)
+    b_map = _streamed_flat_map(0, 1, num_m)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=6,
@@ -901,8 +927,8 @@ def intersect_batched_driver_streamed(
             pl.BlockSpec((TILE_ROWS, LANES), b_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, TILE_ROWS, LANES), out_map),
-            pl.BlockSpec((1, TILE_ROWS, LANES), out_map),
+            pl.BlockSpec((1, TILE_ROWS, LANES), _driver_out_map),
+            pl.BlockSpec((1, TILE_ROWS, LANES), _driver_out_map),
         ],
         scratch_shapes=[pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)],
     )
@@ -930,3 +956,412 @@ def skip_fraction(a_docs: jnp.ndarray, b_docs: jnp.ndarray) -> jnp.ndarray:
     num_b = b.shape[0] // TILE
     scanned = jnp.sum(n_b)
     return 1.0 - scanned / (num_a * num_b)
+
+
+# ---------------------------------------------------------------------------
+# Contract registration (repro.kernels.registry -> repro.analysis)
+# ---------------------------------------------------------------------------
+#
+# Each pallas_call site above registers a builder that reconstructs its
+# grid / BlockSpec geometry on a small canonical index — built through the
+# REAL index builder (flat_tile_pad and all) — plus the clamp-safety
+# metadata Pallas cannot express: the pre-clamp ``intended`` address of
+# every clamping index map and the kernel's ``consumed`` masking.  The
+# static checker enumerates the grid and proves the invariants without
+# executing a kernel.  The canonical corpus deliberately places a short
+# list at the very end of the flat arrays (non-TILE-multiple live extent),
+# so the edge-clamp path — the PR 5 bug class — is exercised by contract.
+
+from repro.kernels.registry import (  # noqa: E402
+    UNBLOCKED,
+    KernelContract,
+    OperandContract,
+    kernel_contract,
+    site_of,
+    synthetic_flat_index,
+)
+
+# Canonical list lengths: 150 (2 blocks) + 100 + 90 postings -> live extent
+# 512, flat arrays flat_tile_pad'ed to 2048.  The last list (term 2) ends
+# mid-tile at the array edge: streaming its window forces the unblocked
+# read clamp that only the spare INVALID tile makes safe.
+_CANON_LISTS = (150, 100, 90)
+
+
+def _driver_window_intended(info_idx):
+    """Pre-clamp address of :func:`_driver_window_map` — contract only."""
+
+    def ad_map(q, i, t, j, *refs):
+        return (refs[info_idx][q, 0] + i * TILE_ROWS, 0)
+
+    return ad_map
+
+
+def _streamed_flat_intended(start_idx):
+    """Pre-clamp address of :func:`_streamed_flat_map` for consumed steps
+    (``jj == j`` whenever ``j < n_b``) — contract only."""
+
+    def b_map(q, i, t, j, *refs):
+        return (refs[start_idx][q, t, i] + j, 0)
+
+    return b_map
+
+
+def _streamed_flat_consumed(n_idx):
+    def consumed(q, i, t, j, *refs):
+        return bool(j < refs[n_idx][q, t, i])
+
+    return consumed
+
+
+def _attr_params(attr_filter: np.ndarray) -> np.ndarray:
+    return np.stack(
+        [attr_filter.astype(np.int32), (attr_filter >= 0).astype(np.int32)],
+        axis=-1,
+    )
+
+
+def _host_window(flat: np.ndarray, off: int, n_eff: int, width: int, fill):
+    w = np.full(width, fill, dtype=flat.dtype)
+    w[:n_eff] = flat[off : off + n_eff]
+    return w
+
+
+@kernel_contract("intersect_block_skip")
+def _contract_intersect_block_skip():
+    rng = np.random.default_rng(0)
+    num_a, num_b = 2, 3
+    a = np.sort(rng.choice(50_000, num_a * TILE, replace=False)).astype(np.int32)
+    b = np.sort(rng.choice(50_000, num_b * TILE, replace=False)).astype(np.int32)
+    s_max = num_b
+    b_start, n_b = (
+        np.asarray(x) for x in compute_skip_map(jnp.asarray(a), jnp.asarray(b))
+    )
+    n_b = np.minimum(n_b, s_max)
+    tile = (TILE_ROWS, LANES)
+    a_shape = (num_a * TILE_ROWS, LANES)
+    b_shape = (num_b * TILE_ROWS, LANES)
+
+    def b_intended(i, j, b_start_ref, n_b_ref, attr_ref):
+        return (b_start_ref[i] + j, 0)
+
+    def b_consumed(i, j, b_start_ref, n_b_ref, attr_ref):
+        return bool(j < n_b_ref[i])
+
+    return KernelContract(
+        name="intersect_block_skip",
+        site=site_of(intersect_block_skip),
+        grid=(num_a, s_max),
+        scalars=(b_start, n_b, np.array([-1, 0], np.int32)),
+        inputs=(
+            OperandContract("a_docs", a_shape, "int32", tile, _ibs_a_map),
+            OperandContract("a_attrs", a_shape, "int32", tile, _ibs_a_map),
+            OperandContract(
+                "b_docs",
+                b_shape,
+                "int32",
+                tile,
+                _ibs_b_map(num_b),
+                intended_map=b_intended,
+                consumed=b_consumed,
+            ),
+        ),
+        outputs=(
+            OperandContract("mask", a_shape, "int32", tile, _ibs_a_map),
+        ),
+        revisit_dims=(1,),
+    )
+
+
+@kernel_contract("intersect_batched_block_skip")
+def _contract_intersect_batched():
+    arrays, _live = synthetic_flat_index(_CANON_LISTS)
+    postings = arrays["postings"]
+    q_n, t_slots, window = 2, 2, TILE
+    a = np.stack(
+        [
+            _host_window(postings, 0, 150, window, INVALID_DOC),
+            _host_window(postings, 384, 90, window, INVALID_DOC),
+        ]
+    )
+    b = np.stack(
+        [
+            np.stack(
+                [
+                    _host_window(postings, 256, 100, 2 * TILE, INVALID_DOC),
+                    _host_window(postings, 384, 90, 2 * TILE, INVALID_DOC),
+                ]
+            ),
+            np.stack(
+                [
+                    _host_window(postings, 0, 150, 2 * TILE, INVALID_DOC),
+                    np.full(2 * TILE, INVALID_DOC, np.int32),
+                ]
+            ),
+        ]
+    )
+    num_a, num_b = 1, 2
+    s_max = num_b
+    active = np.array([[1, 1], [1, 0]], np.int32)
+    b_start, n_b = jax.vmap(jax.vmap(compute_skip_map, in_axes=(None, 0)))(
+        jnp.asarray(a), jnp.asarray(b)
+    )
+    n_b = np.minimum(np.asarray(n_b), s_max) * active[:, :, None]
+    scalars = (
+        np.asarray(b_start),
+        n_b,
+        active,
+        _attr_params(np.array([-1, -1], np.int32)),
+    )
+    blk_a = (1, TILE_ROWS, LANES)
+    a_shape = (q_n, num_a * TILE_ROWS, LANES)
+    b_shape = (q_n, t_slots, num_b * TILE_ROWS, LANES)
+
+    def b_intended(q, i, t, j, b_start_ref, n_b_ref, active_ref, attr_ref):
+        return (q, t, b_start_ref[q, t, i] + j, 0)
+
+    def b_consumed(q, i, t, j, b_start_ref, n_b_ref, active_ref, attr_ref):
+        return bool(j < n_b_ref[q, t, i])
+
+    ins = [
+        OperandContract(nm, a_shape, "int32", blk_a, _batched_a_map)
+        for nm in ("a_docs", "a_attrs", "a_live")
+    ]
+    ins.append(
+        OperandContract(
+            "b_docs",
+            b_shape,
+            "int32",
+            (1, 1, TILE_ROWS, LANES),
+            _batched_b_map(num_b),
+            intended_map=b_intended,
+            consumed=b_consumed,
+        )
+    )
+    return KernelContract(
+        name="intersect_batched_block_skip",
+        site=site_of(intersect_batched_block_skip),
+        grid=(q_n, num_a, t_slots, s_max),
+        scalars=scalars,
+        inputs=tuple(ins),
+        outputs=(
+            OperandContract("mask", a_shape, "int32", blk_a, _batched_a_map),
+        ),
+        scratch=(((TILE_ROWS, LANES), "int32"),),
+        revisit_dims=(2, 3),
+    )
+
+
+@kernel_contract("intersect_batched_streamed")
+def _contract_intersect_streamed():
+    from repro.kernels.registry import synthetic_delta_arrays
+
+    arrays, live = synthetic_flat_index(_CANON_LISTS)
+    postings = arrays["postings"]
+    offsets = arrays["offsets"]
+    lengths = arrays["lengths"]
+    block_max = arrays["block_max"]
+    delta = synthetic_delta_arrays(3, TILE, fills=(5, 0, 12))
+
+    q_n, t_slots, window = 2, 2, TILE
+    terms = np.array([[1, 2], [0, -1]], np.int32)
+    active = np.array([[1, 1], [1, 0]], np.int32)
+    a = np.stack(
+        [
+            _host_window(postings, 0, 150, window, INVALID_DOC),
+            _host_window(postings, 384, 90, window, INVALID_DOC),
+        ]
+    )
+    num_a = 1
+    num_m = postings.shape[0] // TILE
+    s_tiles_m = -(-window // TILE) + 1
+    a_spans = _a_tile_spans(jnp.asarray(a))
+    b_tile, n_b, bounds_m = _probe_plan(
+        a_spans,
+        jnp.asarray(terms),
+        jnp.asarray(offsets),
+        jnp.asarray(lengths),
+        jnp.asarray(block_max),
+        window=window,
+        s_tiles=s_tiles_m,
+    )
+    s_grid = _clamp_s_max(None, s_tiles_m)
+    n_b = np.minimum(np.asarray(n_b), s_grid) * active[:, :, None]
+
+    d_off, d_len, d_bm = (
+        delta["d_offsets"],
+        delta["d_lengths"],
+        delta["d_block_max"],
+    )
+    cap = d_bm.shape[0] * BLOCK // d_off.shape[0]
+    num_d = delta["d_postings"].shape[0] // TILE
+    s_tiles_d = -(-cap // TILE) + 1
+    d_tile, n_d, bounds_d = _probe_plan(
+        a_spans,
+        jnp.asarray(terms),
+        jnp.asarray(d_off),
+        jnp.asarray(d_len),
+        jnp.asarray(d_bm),
+        window=cap,
+        s_tiles=s_tiles_d,
+    )
+    s_grid = max(s_grid, _clamp_s_max(None, s_tiles_d))
+    n_d = np.minimum(np.asarray(n_d), s_grid) * active[:, :, None]
+
+    scalars = (
+        np.asarray(b_tile),
+        n_b,
+        np.asarray(bounds_m),
+        np.asarray(d_tile),
+        n_d,
+        np.asarray(bounds_d),
+        active,
+        _attr_params(np.array([-1, -1], np.int32)),
+    )
+    blk_a = (1, TILE_ROWS, LANES)
+    tile = (TILE_ROWS, LANES)
+    a_shape = (q_n, num_a * TILE_ROWS, LANES)
+    ins = [
+        OperandContract(nm, a_shape, "int32", blk_a, _batched_a_map)
+        for nm in ("a_docs", "a_attrs", "a_live", "a_flags")
+    ]
+    ins.append(
+        OperandContract(
+            "postings",
+            (num_m * TILE_ROWS, LANES),
+            "int32",
+            tile,
+            _streamed_flat_map(0, 1, num_m),
+            intended_map=_streamed_flat_intended(0),
+            consumed=_streamed_flat_consumed(1),
+            padding_from=live,
+        )
+    )
+    ins.append(
+        OperandContract(
+            "d_postings",
+            (num_d * TILE_ROWS, LANES),
+            "int32",
+            tile,
+            _streamed_flat_map(3, 4, num_d),
+            intended_map=_streamed_flat_intended(3),
+            consumed=_streamed_flat_consumed(4),
+            padding_from=int(cap * d_off.shape[0]),
+        )
+    )
+    return KernelContract(
+        name="intersect_batched_streamed",
+        site=site_of(intersect_batched_streamed),
+        grid=(q_n, num_a, t_slots, s_grid),
+        scalars=scalars,
+        inputs=tuple(ins),
+        outputs=(
+            OperandContract("mask", a_shape, "int32", blk_a, _batched_a_map),
+        ),
+        scratch=(((TILE_ROWS, LANES), "int32"), ((TILE_ROWS, LANES), "int32")),
+        revisit_dims=(2, 3),
+        notes="merge-on-read configuration (main + delta streams)",
+    )
+
+
+@kernel_contract("intersect_batched_driver_streamed")
+def _contract_driver_streamed():
+    arrays, live = synthetic_flat_index(_CANON_LISTS)
+    offsets = arrays["offsets"]
+    lengths = arrays["lengths"]
+    block_max = arrays["block_max"]
+    num_m = arrays["postings"].shape[0] // TILE
+    rows_total = num_m * TILE_ROWS
+
+    # window > live extent of the edge list: driver tile 1 of query 1 reads
+    # past the array end and clamps — safe iff the spare tile exists.
+    q_n, t_slots, window = 2, 2, 2 * TILE
+    d_off = np.array([0, 384], np.int32)       # term 0, term 2 (edge list)
+    d_neff = np.array([150, 90], np.int32)
+    terms = np.array([[1, 2], [0, -1]], np.int32)
+    active = np.array([[1, 1], [1, 0]], np.int32)
+
+    num_a = -(-window // TILE)
+    a_spans = jax.vmap(
+        functools.partial(
+            driver_tile_spans, jnp.asarray(block_max), s_tiles=num_a
+        )
+    )(jnp.asarray(d_off), jnp.asarray(d_neff))
+    s_tiles_b = -(-window // TILE) + 1
+    b_tile, n_b, bounds = _probe_plan(
+        a_spans,
+        jnp.asarray(terms),
+        jnp.asarray(offsets),
+        jnp.asarray(lengths),
+        jnp.asarray(block_max),
+        window=window,
+        s_tiles=s_tiles_b,
+    )
+    s_grid = _clamp_s_max(None, s_tiles_b)
+    n_b = np.minimum(np.asarray(n_b), s_grid) * active[:, :, None]
+    a_info = np.stack([d_off // LANES, d_neff], axis=-1).astype(np.int32)
+    scalars = (
+        np.asarray(b_tile),
+        n_b,
+        np.asarray(bounds),
+        active,
+        _attr_params(np.array([-1, -1], np.int32)),
+        a_info,
+    )
+
+    def ad_consumed(q, i, t, j, *refs):
+        return bool(i * TILE < refs[5][q, 1])
+
+    tile = (TILE_ROWS, LANES)
+    flat_shape = (rows_total, LANES)
+    out_shape = (q_n, num_a * TILE_ROWS, LANES)
+    stream_kw = dict(
+        indexing_mode=UNBLOCKED,
+        intended_map=_driver_window_intended(5),
+        consumed=ad_consumed,
+        padding_from=live,
+        spare_tile=True,
+    )
+    ins = (
+        OperandContract(
+            "postings(driver)",
+            flat_shape,
+            "int32",
+            tile,
+            _driver_window_map(rows_total, 5),
+            **stream_kw,
+        ),
+        OperandContract(
+            "attrs(driver)",
+            flat_shape,
+            "int32",
+            tile,
+            _driver_window_map(rows_total, 5),
+            **stream_kw,
+        ),
+        OperandContract(
+            "postings(probe)",
+            flat_shape,
+            "int32",
+            tile,
+            _streamed_flat_map(0, 1, num_m),
+            intended_map=_streamed_flat_intended(0),
+            consumed=_streamed_flat_consumed(1),
+            padding_from=live,
+        ),
+    )
+    blk_o = (1, TILE_ROWS, LANES)
+    return KernelContract(
+        name="intersect_batched_driver_streamed",
+        site=site_of(intersect_batched_driver_streamed),
+        grid=(q_n, num_a, t_slots, s_grid),
+        scalars=scalars,
+        inputs=ins,
+        outputs=(
+            OperandContract("docs", out_shape, "int32", blk_o, _driver_out_map),
+            OperandContract("mask", out_shape, "int32", blk_o, _driver_out_map),
+        ),
+        scratch=(((TILE_ROWS, LANES), "int32"),),
+        revisit_dims=(2, 3),
+        notes="fully-streamed read path: unblocked driver window stream",
+    )

@@ -50,10 +50,11 @@ def main() -> None:
         print(f"distributed merge={merge}: OK")
 
     # Kernel backend end-to-end inside shard_map: every slave runs the
-    # batched block-skipping Pallas join (interpret mode keeps CPU honest).
+    # batched block-skipping Pallas join (interpret defaults on from the
+    # backend probe on CPU, keeping the kernels honest).
     got_k = distributed_query_topk(
         sharded, batch, mesh=mesh, ns=ns, k=10, window=1024,
-        merge="tournament", backend="pallas", interpret=True,
+        merge="tournament", backend="pallas",
     )
     np.testing.assert_array_equal(np.asarray(got_k.docids), np.asarray(ref.docids))
     np.testing.assert_array_equal(np.asarray(got_k.n_hits), np.asarray(ref.n_hits))
@@ -96,7 +97,7 @@ def main() -> None:
         got_u = distributed_query_topk(
             sharded, batch, writer.device_delta(),
             mesh=mesh, ns=ns, k=10, window=1024, merge="tournament",
-            backend=backend, interpret=True if backend == "pallas" else None,
+            backend=backend,
         )
         np.testing.assert_array_equal(
             np.asarray(got_u.docids), np.asarray(ref_u.docids)

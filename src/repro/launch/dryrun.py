@@ -23,6 +23,7 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --list
 """
 import argparse
+import contextlib
 import json
 import math
 import time
@@ -71,7 +72,7 @@ def _sharded_bytes(avals, shardings, mesh) -> float:
     )):
         spec = sh.spec if isinstance(sh, NamedSharding) else sh
         shards = 1
-        for i, ax in enumerate(spec):
+        for ax in spec:
             if ax is None:
                 continue
             axes = ax if isinstance(ax, tuple) else (ax,)
@@ -216,7 +217,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = Tru
 
     chips = math.prod(mesh.shape.values())
     mem = None
-    try:
+    # memory_analysis() is best-effort across jax versions/backends
+    with contextlib.suppress(Exception):
         ma = compiled.memory_analysis()
         if ma is not None:
             mem = {
@@ -227,8 +229,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = Tru
                 )
                 if hasattr(ma, k)
             }
-    except Exception:
-        pass
     hlo = compiled.as_text()
     roof = roofline_from_compiled(
         compiled, chips, model_flops=model_flops_for(cfg, shape), hlo_text=hlo

@@ -1,0 +1,212 @@
+"""The static kernel contract checker + repo lints (repro.analysis)."""
+import numpy as np
+import pytest
+
+from repro.analysis import check_all, check_contract
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.blockspec import vmem_bytes
+from repro.analysis.fixtures import broken_contracts
+from repro.analysis.lint import lint_file, lint_tree, default_root
+from repro.core import index as core_index
+from repro.kernels import registry
+
+
+EXPECTED_KERNELS = {
+    "bitonic_sort",
+    "flash_attention_fwd",
+    "intersect_batched_block_skip",
+    "intersect_batched_driver_streamed",
+    "intersect_batched_streamed",
+    "intersect_block_skip",
+    "merge_delta_windows",
+    "merge_topk_rows",
+}
+
+
+# ------------------------------------------------------------- registry --
+def test_every_pallas_call_site_is_registered():
+    contracts = registry.load_contracts()
+    assert {c.name for c in contracts} == EXPECTED_KERNELS
+    for c in contracts:
+        # every site is a real, location-bearing anchor
+        path, _, line = c.site.rpartition(":")
+        assert path.startswith("src/repro/kernels/")
+        assert int(line) > 0
+
+
+def test_contracts_share_the_kernels_index_maps():
+    """The contract's index maps must BE the kernel module's hoisted maps
+    (same code object), not re-derivations."""
+    from repro.kernels import posting_intersect as pi
+
+    (c,) = registry.load_contracts(["intersect_block_skip"])
+    assert c.inputs[0].index_map is pi._ibs_a_map
+    assert c.outputs[0].index_map is pi._ibs_a_map
+
+
+# -------------------------------------------------------------- checker --
+def test_all_registered_kernels_pass():
+    contracts, findings = check_all()
+    assert len(contracts) == len(EXPECTED_KERNELS)
+    assert findings == []
+
+
+def test_historical_floor_pad_bug_is_caught(monkeypatch):
+    """Reverting the PR 5 ceil+1 fix must fail the checker: floor+1 leaves
+    a partial spare tile, so edge-clamped streamed reads serve the
+    previous list's postings."""
+    monkeypatch.setattr(
+        core_index,
+        "flat_tile_pad",
+        lambda n: (n // core_index.TILE + 1) * core_index.TILE,
+    )
+    _, findings = check_all()
+    checks = {f.check for f in findings}
+    assert "clamp-escape" in checks
+    assert "spare-tile" in checks
+    # both streamed sites are implicated
+    kernels = {f.kernel for f in findings}
+    assert "intersect_batched_driver_streamed" in kernels
+    assert "merge_delta_windows" in kernels
+
+
+def test_vmem_budget_is_enforced():
+    _, findings = check_all(vmem_budget=8 * 1024)   # 8 KiB: nothing fits
+    assert findings
+    assert all(f.check == "vmem" for f in findings)
+
+
+def test_vmem_estimates_are_reported():
+    contracts = registry.load_contracts()
+    for c in contracts:
+        total, parts = vmem_bytes(c)
+        assert total == sum(n for _, n in parts)
+        assert total > 0
+
+
+# ---------------------------------------------------- negative fixtures --
+@pytest.mark.parametrize(
+    "contract,expected",
+    broken_contracts(),
+    ids=[c.name for c, _ in broken_contracts()],
+)
+def test_negative_fixture_rejected_with_diagnostic(contract, expected):
+    findings = check_contract(contract)
+    hits = [f for f in findings if f.check == expected]
+    assert hits, f"{contract.name}: expected a {expected!r} finding"
+    for f in hits:
+        # location-bearing: the site threads through to the message
+        assert "fixtures.py" in f.site
+        assert str(f).startswith(f.site)
+        assert f.kernel == contract.name
+
+
+def test_fixture_violations_are_precise():
+    """Each fixture trips ONLY its intended check (no cross-talk noise
+    drowning the diagnostic)."""
+    for contract, expected in broken_contracts():
+        checks = {f.check for f in check_contract(contract)}
+        assert checks == {expected}, (contract.name, checks)
+
+
+# ----------------------------------------------------------------- lint --
+def test_src_tree_is_lint_clean():
+    assert lint_tree(default_root()) == []
+
+
+def test_lint_flags_handrolled_tile_padding(tmp_path):
+    p = tmp_path / "bad.py"
+    p.write_text(
+        "TILE = 1024\n"
+        "def pad(n):\n"
+        "    return (n // TILE + 1) * TILE\n"
+    )
+    findings = lint_file(str(p), "repro/core/bad.py")
+    assert [f.rule for f in findings] == ["flat-pad"]
+    assert findings[0].line == 3
+
+
+def test_lint_pragma_suppresses(tmp_path):
+    p = tmp_path / "ok.py"
+    p.write_text(
+        "TILE = 1024\n"
+        "def pad(n):\n"
+        "    # lint: allow(flat-pad) — deliberate\n"
+        "    return (n // TILE + 1) * TILE\n"
+    )
+    assert lint_file(str(p), "repro/core/ok.py") == []
+
+
+def test_lint_flat_tile_pad_itself_is_exempt(tmp_path):
+    p = tmp_path / "index.py"
+    p.write_text(
+        "TILE = 1024\n"
+        "def flat_tile_pad(n):\n"
+        "    return (-(-n // TILE) + 1) * TILE\n"
+    )
+    assert lint_file(str(p), "repro/core/index.py") == []
+
+
+def test_lint_flags_posting_gather_in_kernels_only(tmp_path):
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(postings, idx):\n"
+        "    return jnp.take(postings, idx)\n"
+    )
+    p = tmp_path / "k.py"
+    p.write_text(src)
+    in_kernels = lint_file(str(p), "repro/kernels/k.py")
+    assert [f.rule for f in in_kernels] == ["posting-gather"]
+    # same code outside the kernel layer is legal (host-side staging)
+    assert lint_file(str(p), "repro/core/k.py") == []
+    # gathers on metadata stay legal inside kernels/
+    p2 = tmp_path / "k2.py"
+    p2.write_text(
+        "import jax.numpy as jnp\n"
+        "def f(offsets, idx):\n"
+        "    return jnp.take(offsets, idx)\n"
+    )
+    assert lint_file(str(p2), "repro/kernels/k2.py") == []
+
+
+def test_lint_flags_hardcoded_interpret(tmp_path):
+    p = tmp_path / "call.py"
+    p.write_text(
+        "def g(interpret=False):\n"   # a def default is fine
+        "    pass\n"
+        "def h():\n"
+        "    g(interpret=True)\n"     # a call-site literal is not
+    )
+    findings = lint_file(str(p), "repro/launch/call.py")
+    assert [f.rule for f in findings] == ["interpret-literal"]
+    assert findings[0].line == 4
+
+
+# ------------------------------------------------------------------ CLI --
+def test_cli_check_lint_selftest_pass():
+    assert analysis_main(["check"]) == 0
+    assert analysis_main(["lint"]) == 0
+    assert analysis_main(["selftest"]) == 0
+
+
+def test_cli_check_fails_on_tiny_budget(capsys):
+    assert analysis_main(["check", "--vmem-budget", "0"]) == 1
+    err = capsys.readouterr().err
+    assert "vmem" in err
+
+
+def test_cli_check_kernel_subset():
+    assert analysis_main(["check", "merge_topk_rows"]) == 0
+
+
+# --------------------------------------------------- padding contract --
+def test_padding_contract_metadata():
+    offsets = np.array([0, 256, 384], np.int64)
+    lengths = np.array([150, 100, 90], np.int32)
+    live = core_index.flat_live_extent(offsets, lengths)
+    assert live == 512   # 384 + BLOCK-padded 90 -> 128
+    good = core_index.padding_contract(offsets, lengths, 2048)
+    assert good.spare_tile_ok(core_index.TILE)
+    bad = core_index.padding_contract(offsets, lengths, 1024)  # floor+1
+    assert not bad.spare_tile_ok(core_index.TILE)
+    assert core_index.flat_live_extent(np.array([]), np.array([])) == 0

@@ -1,0 +1,133 @@
+"""Fault-tolerance re-admission edges: core/faults.py + serving/router.py.
+
+The happy paths (dead set skipped, recovery resumes routing) live in
+test_substrate.py; these cover the edges the PR 6 issue called out — a
+set dying mid-flight, every set unhealthy, health flapping, and shared
+health masks mutated from outside the router.
+"""
+import numpy as np
+import pytest
+
+from repro.core.faults import (
+    SetHealth,
+    SpeculationPolicy,
+    degraded_recall_mask,
+    query_latency_with_speculation,
+)
+from repro.serving.router import HealthAwareRouter
+from repro.serving.scheduler import MultiSetRouter
+
+
+# --------------------------------------------------------- router edges --
+def test_set_dies_mid_flight_then_completes_cleanly():
+    r = HealthAwareRouter(3)
+    s = r.route(8)
+    assert s.in_flight == 8
+    r.fail(s.sid)
+    # the dead set receives nothing new...
+    for _ in range(6):
+        assert r.route(1).sid != s.sid
+    # ...but its in-flight batch may still land; completion stays legal
+    r.complete(s, 8)
+    assert s.in_flight == 0
+    # and it stays out of rotation until recovery
+    assert r.route(1).sid != s.sid
+
+
+def test_all_sets_unhealthy_raises():
+    r = HealthAwareRouter(2)
+    r.fail(0)
+    r.fail(1)
+    with pytest.raises(RuntimeError):
+        r.route(4)
+    # recovery of any one set un-wedges routing
+    r.recover(1)
+    assert r.route(4).sid == 1
+
+
+def test_health_flap_readmission_is_immediate_and_loadaware():
+    r = HealthAwareRouter(2)
+    # load up set 0 while set 1 is dead
+    r.fail(1)
+    for _ in range(4):
+        assert r.route(2).sid == 0
+    # flap: recover -> the idle set 1 is immediately preferred
+    r.recover(1)
+    assert r.route(2).sid == 1
+    # flap again: fail mid-rotation, traffic all lands on 0 again
+    r.fail(1)
+    assert r.route(2).sid == 0
+    r.recover(1)
+    assert r.route(1).sid == 1
+
+
+def test_shared_health_mask_mutated_externally_is_honored():
+    """The fault simulator's own SetHealth can be passed in; external
+    mutation must steer routing without going through the router API."""
+    h = SetHealth.all_alive(3)
+    r = HealthAwareRouter(3, health=h)
+    h.alive[0] = False
+    h.alive[2] = False
+    for _ in range(5):
+        assert r.route(1).sid == 1
+    h.alive[:] = False
+    with pytest.raises(RuntimeError):
+        r.route(1)
+
+
+def test_undersized_health_mask_rejected_at_construction():
+    with pytest.raises(ValueError):
+        HealthAwareRouter(4, health=SetHealth.all_alive(2))
+
+
+def test_health_router_inherits_least_loaded_tiebreak():
+    r = HealthAwareRouter(3)
+    a = r.route(5)
+    b = r.route(5)
+    c = r.route(5)
+    assert {a.sid, b.sid, c.sid} == {0, 1, 2}
+    r.complete(b, 5)
+    assert r.route(1).sid == b.sid  # fewest in-flight wins
+    base = MultiSetRouter(3)
+    assert base.route(1).sid == 0   # plain router untouched by health
+
+
+# ------------------------------------------------------- faults edges --
+def test_speculation_all_shards_straggle():
+    """Every shard past SLO: completion is replica-bound, rate is 1."""
+    primary = np.full((4, 3), 10.0)
+    replica = np.full((4, 3), 0.01)
+    pol = SpeculationPolicy(slo_factor=1.5, redispatch_overhead=1e-3)
+    lat, rate = query_latency_with_speculation(primary, replica, 0.1, pol)
+    assert rate == 1.0
+    np.testing.assert_allclose(lat, 0.15 + 1e-3 + 0.01)
+
+
+def test_speculation_never_hurts_when_replica_is_slow():
+    """A straggler whose replica is even slower completes at the primary
+    latency — speculation takes min(primary, re-dispatch path)."""
+    primary = np.array([[0.05, 0.30]])
+    replica = np.array([[0.05, 9.99]])
+    pol = SpeculationPolicy(slo_factor=1.5, redispatch_overhead=1e-3)
+    lat, rate = query_latency_with_speculation(primary, replica, 0.1, pol)
+    assert lat[0] == pytest.approx(0.30)
+    assert rate == pytest.approx(0.5)
+
+
+def test_speculation_zero_rate_below_slo():
+    primary = np.full((8, 4), 0.05)
+    replica = np.zeros((8, 4))
+    pol = SpeculationPolicy(slo_factor=1.5)
+    lat, rate = query_latency_with_speculation(primary, replica, 0.1, pol)
+    assert rate == 0.0
+    np.testing.assert_allclose(lat, 0.05)
+
+
+def test_degraded_recall_mask_edges():
+    np.testing.assert_array_equal(
+        degraded_recall_mask(4, []), np.ones(4, dtype=bool)
+    )
+    all_dead = degraded_recall_mask(3, [0, 1, 2])
+    assert not all_dead.any()
+    dup = degraded_recall_mask(4, [2, 2])
+    assert dup.sum() == 3 and not dup[2]
