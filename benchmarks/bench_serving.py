@@ -17,6 +17,12 @@ Closes the loop the paper closes in §5.1/Fig 11, but against OUR engine:
 Also reports the result cache's effect: the same trace replayed with the
 cache enabled (Zipf-repeating queries), with hit rate and mean response.
 
+The sweep runs with live observability (:mod:`repro.obs`): each replay
+folds its spans through a :class:`PhaseAggregator` (per-phase mean lines)
+and a :class:`ModelResidualMonitor` — the *online* Formula (18) gauge,
+printed next to the offline computation it must match (both call
+:meth:`Calibration.projected_response`, so they agree by construction).
+
 Emits ``serving,<metric>,<value>,<note>`` CSV lines.  On CPU the pallas
 backend runs under the interpreter (semantics, not speed); the jnp numbers
 are the meaningful CPU baseline.  ``smoke=True`` shrinks everything for
@@ -29,13 +35,13 @@ import jax
 
 from repro.core.calibrate import calibrate_from_engine
 from repro.core.index import build_sharded_index
-from repro.core.perfmodel import (
-    OdysPerfModel,
-    SINGLE_10_ONLY,
-    engine_cluster,
-    estimation_error,
-)
+from repro.core.perfmodel import estimation_error
 from repro.data.corpus import CorpusConfig, generate_corpus
+from repro.obs import (
+    MetricsRegistry,
+    ModelResidualMonitor,
+    PhaseAggregator,
+)
 from repro.serving.search import SearchService
 
 
@@ -94,11 +100,12 @@ def main(backend: str = "jnp", smoke: bool = False):
     print(f"serving,t_base,{cal.t_base*1e9:.2f},ns_fitted")
 
     # --- 2. open-loop lambda sweep through the scheduler -------------------
-    def make_service(cache_size: int) -> SearchService:
+    def make_service(cache_size: int, registry=None) -> SearchService:
         svc = SearchService(
             sharded, meta, mesh, ns=ns, k=10, window=window, t_max=2,
             t_max_buckets=(2,), backend=backend, interpret=interpret,
             batch_size=batch_size, cache_size=cache_size,
+            registry=registry,
         )
         return svc
 
@@ -112,33 +119,46 @@ def main(backend: str = "jnp", smoke: bool = False):
     mu = batch_size / batch_wall
     print(f"serving,capacity,{mu:.1f},queries_per_sec_{mode}")
 
-    model = OdysPerfModel(master=cal.master, network=cal.network)
-    cluster = engine_cluster(ns, n_sets=1)
-    mix = SINGLE_10_ONLY
     for frac in (0.25, 0.5, 0.75):
         lam = frac * mu
-        svc = make_service(cache_size=0)
+        reg = MetricsRegistry()
+        agg = PhaseAggregator(registry=reg)
+        monitor = ModelResidualMonitor(
+            cal, batch_size=batch_size, max_wait=batch_wall, lam=lam,
+            window=n_queries, registry=reg,
+        )
+        svc = make_service(cache_size=0, registry=reg)
         svc.scheduler.max_wait = batch_wall  # batch-formation deadline
         trace = poisson_trace(lam, n_queries, min(64, vocab),
                               repeat_frac=0.0, seed=int(frac * 100))
         # warm the bucket's trace so replay measures steady-state service
         svc.search([(terms, site) for _, terms, site in trace[:batch_size]])
+        # wire the span sinks only now: the warm batch's compile must not
+        # pollute the phase means or the residual window
+        svc.scheduler.span_sink = lambda s, a=agg, m=monitor: (
+            a.fold(s), m.sink(s),
+        )
         tickets = svc.scheduler.replay(trace)
         measured = _mean_response(tickets)
         # Formula (17) with the fitted params, plus the micro-batcher's
-        # admission delay — a scheduler parameter, not a queueing effect:
-        # a query waits for batch_size-1 more arrivals or the deadline.
-        formation = min(
-            svc.scheduler.max_wait, (batch_size - 1) / (2.0 * lam)
+        # admission delay (a scheduler parameter, not a queueing effect) —
+        # the one shared projection path (Calibration.projected_response).
+        projected = cal.projected_response(
+            lam, batch_size=batch_size, max_wait=svc.scheduler.max_wait
         )
-        projected = model.total_response_time(
-            lam, cluster, mix, cal.slave_max_time
-        ) + formation
         err = estimation_error(projected, measured)
+        online = monitor.update()
         tag = f"lam{frac:.2f}mu"
         print(f"serving,{tag}_measured,{measured*1e6:.1f},mean_response_us")
         print(f"serving,{tag}_model,{projected*1e6:.1f},"
-              f"err_formula18={err:.4f} formation_us={formation*1e6:.1f}")
+              f"err_formula18={err:.4f}")
+        print(f"serving,{tag}_residual_online,{online['error']:.4f},"
+              f"formula18_gauge n={online['n']}")
+        if frac == 0.5:
+            # the paper's latency decomposition, measured (span means)
+            for phase, mean in sorted(agg.means().items()):
+                print(f"serving,phase_{phase},{mean*1e6:.2f},"
+                      f"mean_us_lam{frac:.2f}mu")
 
     # --- 3. result cache under a Zipf-repeating stream ---------------------
     lam = 0.5 * mu

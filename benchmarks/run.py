@@ -16,8 +16,11 @@ streaming posting pipeline).
 ``--json-dir DIR`` additionally writes one ``BENCH_<suite>.json`` per
 suite run, containing every CSV record the suite printed (value + note
 per metric; latency suites emit ``<metric>`` mean and ``<metric>_p95``
-lines).  CI uploads these as artifacts and feeds ``BENCH_updates.json``
-to ``scripts/check_bench.py``, the streamed-vs-staged regression gate.
+lines; the serving suite adds ``phase_<name>`` per-phase span means and
+``lam*_residual_online`` Formula (18) gauges from the live observability
+layer).  CI uploads these as artifacts and feeds ``BENCH_updates.json``
+to ``scripts/check_bench.py``, the streamed-vs-staged regression gate —
+which ignores metric keys it does not recognize, so emitters may grow.
 """
 import argparse
 import contextlib

@@ -49,9 +49,12 @@ from repro.core.parallel import (
 )
 from repro.core.perfmodel import (
     KS,
+    SINGLE_10_ONLY,
     MasterParams,
     NetworkParams,
+    OdysPerfModel,
     PAPER_TABLE3_MASTER,
+    engine_cluster,
     sojourn,
 )
 from repro.core.slave_max import partitioning_method
@@ -108,6 +111,37 @@ class Calibration:
         st = self.st_slave[kk]
         inflation = self.slave_max[kk] / max(st, _FLOOR)
         return sojourn(lam / self.n_sets, st) * inflation
+
+    def projected_response(
+        self,
+        lam: float,
+        *,
+        batch_size: int = 1,
+        max_wait: float = 0.0,
+        mix=SINGLE_10_ONLY,
+    ) -> float:
+        """Formula (17) projection at arrival rate ``lam``, plus the
+        micro-batcher's expected formation delay.
+
+        This is the single code path both validation surfaces use:
+        ``benchmarks/bench_serving.py`` reports it offline against the
+        replay measurements, and the online
+        :class:`~repro.obs.residual.ModelResidualMonitor` compares it
+        against live spans — so the two Formula (18) errors agree by
+        construction.
+
+        The formation term is the mean residual wait of a Poisson arrival
+        in a size-``batch_size`` batch former, capped by the formation
+        deadline: ``min(max_wait, (batch_size - 1) / (2 lam))``.
+        """
+        model = OdysPerfModel(master=self.master, network=self.network)
+        cluster = engine_cluster(self.ns, n_sets=self.n_sets)
+        base = model.total_response_time(lam, cluster, mix, self.slave_max_time)
+        formation = (
+            min(max_wait, (batch_size - 1) / (2.0 * lam))
+            if batch_size > 1 else 0.0
+        )
+        return base + formation
 
 
 def fit_merge_constants(

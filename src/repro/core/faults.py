@@ -29,18 +29,43 @@ import numpy as np
 
 @dataclasses.dataclass
 class SetHealth:
+    """Liveness mask over ODYS sets, with change notification.
+
+    ``listeners`` are called as ``listener(set_id, alive)`` on every
+    *actual* transition (a repeated ``fail`` on a dead set notifies no
+    one) — the serving router's health-transition metrics hang off this.
+    """
+
     n_sets: int
     alive: np.ndarray  # bool[n_sets]
+    listeners: list = dataclasses.field(
+        default_factory=list, repr=False, compare=False
+    )
 
     @classmethod
     def all_alive(cls, n_sets: int) -> "SetHealth":
         return cls(n_sets, np.ones(n_sets, dtype=bool))
 
+    def subscribe(self, listener) -> None:
+        if listener not in self.listeners:
+            self.listeners.append(listener)
+
+    def unsubscribe(self, listener) -> None:
+        if listener in self.listeners:
+            self.listeners.remove(listener)
+
+    def _set(self, set_id: int, value: bool) -> None:
+        if bool(self.alive[set_id]) == value:
+            return
+        self.alive[set_id] = value
+        for listener in self.listeners:
+            listener(set_id, value)
+
     def fail(self, set_id: int) -> None:
-        self.alive[set_id] = False
+        self._set(set_id, False)
 
     def recover(self, set_id: int) -> None:
-        self.alive[set_id] = True
+        self._set(set_id, True)
 
 
 def route_queries(

@@ -28,6 +28,15 @@ measurements, and ``benchmarks/bench_serving.py`` replays Poisson arrival
 traces through `MasterScheduler.replay` to report measured vs projected
 response time with Formula (18) estimation error.
 
+The whole pipeline is observable (:mod:`repro.obs`): every stage reports
+counters/gauges/latency histograms into a metrics registry, each admitted
+query can carry a per-phase `QuerySpan` (admission wait, formation wait,
+cache lookup, route, slave dispatch, master merge, finalize), and an
+online `ModelResidualMonitor` exports the live Formula (18) error against
+the fitted model.  All of it is no-op by default — instrumentation costs
+one null-singleton call until ``repro.obs.enable()`` (or a registry is
+passed to `SearchService`).
+
 (`repro.serving.engine` is not imported here: it pulls in the LM model
 stack, which search-only users don't need.)
 """

@@ -51,6 +51,40 @@ class HealthAwareRouter(MultiSetRouter):
                 f"health mask covers {self.health.n_sets} sets, "
                 f"router has {n_sets}"
             )
+        self.health.subscribe(self._on_health_change)
+        # base __init__ bound the process registry before self.health
+        # existed — rebind now so the health instruments come up too
+        self.bind_registry(self._registry)
+
+    def bind_registry(self, reg) -> None:
+        super().bind_registry(reg)
+        self._registry = reg
+        self._c_transitions = {
+            to: reg.counter(
+                "odys_set_health_transitions_total",
+                help="set liveness transitions observed by the router",
+                to=to,
+            )
+            for to in ("alive", "dead")
+        }
+        health = getattr(self, "health", None)
+        self._g_alive = {
+            s.sid: reg.gauge(
+                "odys_set_alive",
+                help="1 while the set is routable, 0 while dead",
+                set=str(s.sid),
+            )
+            for s in self.sets
+        }
+        if health is not None:
+            for s in self.sets:
+                self._g_alive[s.sid].set(float(bool(health.alive[s.sid])))
+
+    def _on_health_change(self, set_id: int, alive: bool) -> None:
+        self._c_transitions["alive" if alive else "dead"].inc()
+        g = self._g_alive.get(set_id)
+        if g is not None:
+            g.set(1.0 if alive else 0.0)
 
     def _candidates(self) -> list[SetState]:
         alive = [s for s in self.sets if bool(self.health.alive[s.sid])]

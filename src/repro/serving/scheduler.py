@@ -35,6 +35,18 @@ decode loop):
   while measuring *real* batch service times — the measured half of the
   paper's hybrid model validation (benchmarks/bench_serving.py feeds it to
   Formula (18) against :class:`~repro.core.perfmodel.OdysPerfModel`).
+
+- **Observability** (:mod:`repro.obs`): every stage reports into a metrics
+  registry (queue depth, cache hit rate, per-set in-flight, per-phase
+  latency histograms) and, when tracing is on, every ticket carries a
+  :class:`~repro.obs.trace.QuerySpan` with the paper's §4 latency
+  decomposition.  Two clock domains by construction: waits are measured on
+  the scheduler's injectable ``clock`` (virtual under replay), measured
+  batch service on the injectable ``wall_clock`` (a real monotonic clock),
+  and the span schema labels which phase lives in which domain — replay
+  traces are never a mix of unlabeled virtual and wall time.  With the
+  default :class:`~repro.obs.registry.NullRegistry` all of this is no-op
+  singleton calls and no spans are allocated.
 """
 from __future__ import annotations
 
@@ -43,6 +55,9 @@ import math
 import time
 from collections import OrderedDict, deque
 from typing import Any, Callable, Sequence
+
+from repro.obs.registry import MetricsRegistry, get_registry
+from repro.obs.trace import PHASES, QuerySpan
 
 __all__ = [
     "CacheStats",
@@ -95,6 +110,7 @@ class QueryTicket:
     from_cache: bool = False
     finish_time: float | None = None
     set_id: int | None = None
+    span: "QuerySpan | None" = None   # phase trace (tracing schedulers only)
 
     @property
     def response_time(self) -> float:
@@ -122,37 +138,64 @@ class ResultCache:
     version; a mismatch evicts the entry and counts as ``stale`` (every
     mutation and every compaction bumps the writer version, so staleness
     needs no explicit invalidation hook on the write path).
+
+    ``registry`` (default: the process registry, a no-op unless enabled)
+    mirrors the counters as ``odys_cache_*`` metrics plus hit-rate and
+    residency gauges, so a scrape sees the cache without calling into it.
     """
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, registry: MetricsRegistry | None = None):
         assert capacity > 0
         self.capacity = capacity
         self._entries: OrderedDict[tuple, tuple[int, Any]] = OrderedDict()
         self.stats = CacheStats()
+        reg = registry if registry is not None else get_registry()
+        self._c_hits = reg.counter(
+            "odys_cache_hits_total", help="result-cache hits")
+        self._c_misses = reg.counter(
+            "odys_cache_misses_total", help="result-cache misses")
+        self._c_stale = reg.counter(
+            "odys_cache_stale_total",
+            help="entries evicted because the snapshot version moved")
+        self._c_evicted = reg.counter(
+            "odys_cache_evicted_total", help="LRU capacity evictions")
+        self._g_hit_rate = reg.gauge(
+            "odys_cache_hit_rate", help="hits / (hits + misses), lifetime")
+        self._g_entries = reg.gauge(
+            "odys_cache_entries", help="resident result-cache entries")
 
     def __len__(self) -> int:
         return len(self._entries)
 
+    def _miss(self) -> None:
+        self.stats.misses += 1
+        self._c_misses.inc()
+        self._g_hit_rate.set(self.stats.hit_rate())
+
     def get(self, key: tuple, version: int, now: float = math.inf):
         entry = self._entries.get(key)
         if entry is None:
-            self.stats.misses += 1
+            self._miss()
             return None
         stored_version, available_at, result = entry
         if stored_version != version:
             del self._entries[key]
             self.stats.stale += 1
-            self.stats.misses += 1
+            self._c_stale.inc()
+            self._g_entries.set(len(self._entries))
+            self._miss()
             return None
         if available_at > now:
             # The producing batch has not finished yet at ``now`` (this
             # happens in virtual-time replay): the result exists on the
             # host but the modeled system could not have served it — treat
             # as a miss, leave the entry for when it matures.
-            self.stats.misses += 1
+            self._miss()
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
+        self._c_hits.inc()
+        self._g_hit_rate.set(self.stats.hit_rate())
         return result
 
     def put(self, key: tuple, version: int, result,
@@ -162,9 +205,12 @@ class ResultCache:
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.stats.evicted += 1
+            self._c_evicted.inc()
+        self._g_entries.set(len(self._entries))
 
     def clear(self) -> None:
         self._entries.clear()
+        self._g_entries.set(0)
 
 
 @dataclasses.dataclass
@@ -190,6 +236,32 @@ class MultiSetRouter:
     def __init__(self, n_sets: int):
         assert n_sets >= 1
         self.sets = [SetState(sid) for sid in range(n_sets)]
+        self.bind_registry(get_registry())
+
+    def bind_registry(self, reg: MetricsRegistry) -> None:
+        """(Re)create the per-set instruments on ``reg``.
+
+        Called at construction with the process registry and again by the
+        scheduler with its own — so a router built before the scheduler
+        (e.g. a pre-wired :class:`HealthAwareRouter`) still reports into
+        the pipeline's registry.  Idempotent; no-op on a null registry.
+        """
+        self._g_in_flight = {
+            s.sid: reg.gauge(
+                "odys_set_in_flight",
+                help="queries currently dispatched to the set",
+                set=str(s.sid),
+            )
+            for s in self.sets
+        }
+        self._c_set_batches = {
+            s.sid: reg.counter(
+                "odys_set_batches_total",
+                help="batches routed to the set",
+                set=str(s.sid),
+            )
+            for s in self.sets
+        }
 
     @property
     def n_sets(self) -> int:
@@ -208,11 +280,14 @@ class MultiSetRouter:
         s.in_flight += n_queries
         s.n_batches += 1
         s.n_queries += n_queries
+        self._g_in_flight[s.sid].set(s.in_flight)
+        self._c_set_batches[s.sid].inc()
         return s
 
     def complete(self, s: SetState, n_queries: int) -> None:
         s.in_flight -= n_queries
         assert s.in_flight >= 0
+        self._g_in_flight[s.sid].set(s.in_flight)
 
     def snapshot(self) -> list[dict]:
         return [dataclasses.asdict(s) for s in self.sets]
@@ -277,6 +352,31 @@ class MasterScheduler:
     width_fn:
         Effective padded width of ``(terms, site)`` — lets the service
         account for the ``site_term`` strategy's extra join term.
+    clock:
+        The scheduler's time source (waits, deadlines, finish stamps);
+        virtual under :meth:`replay`.  Injectable for tests.
+    wall_clock:
+        The *measurement* time source: batch service and the wall-domain
+        span phases are timed here, never on ``clock`` — so replay mixes
+        a virtual timeline with real measured service without the two
+        bleeding into each other.  Injectable for tests; must be a real
+        monotonic clock in production.
+    registry:
+        Metrics sink (:mod:`repro.obs.registry`).  Default: the process
+        registry — a no-op unless ``repro.obs.enable()`` was called.
+    trace:
+        Allocate a :class:`~repro.obs.trace.QuerySpan` per ticket.
+        Default (``None``): trace iff the registry is live.
+    exec_phases_fn:
+        Called once after each executor return; may yield a
+        ``{phase: seconds}`` dict splitting the batch's service into
+        wall-domain sub-phases (the search service reports
+        slave_dispatch / master_merge / finalize through this).  Without
+        it the whole measured batch wall time lands in ``slave_dispatch``.
+    span_sink:
+        Called with each *finished* span (dispatch completion or cache
+        hit) — wire a :class:`~repro.obs.trace.PhaseAggregator` or
+        :class:`~repro.obs.residual.ModelResidualMonitor` here.
     """
 
     def __init__(
@@ -295,10 +395,20 @@ class MasterScheduler:
         version_fn: Callable[[], int] | None = None,
         width_fn: Callable[[tuple, int | None], int] | None = None,
         clock: Callable[[], float] = time.perf_counter,
+        wall_clock: Callable[[], float] = time.perf_counter,
+        registry: MetricsRegistry | None = None,
+        trace: bool | None = None,
+        exec_phases_fn: Callable[[], "dict[str, float] | None"] | None = None,
+        span_sink: Callable[[QuerySpan], None] | None = None,
     ):
         assert batch_size >= 1
         buckets = tuple(sorted(set(int(b) for b in t_max_buckets)))
         assert buckets and buckets[0] >= 1
+        reg = registry if registry is not None else get_registry()
+        self.registry = reg
+        self.trace = bool(reg.enabled) if trace is None else bool(trace)
+        self.span_sink = span_sink
+        self._exec_phases_fn = exec_phases_fn
         self.executor = executor
         self.batch_size = batch_size
         self.t_max_buckets = buckets
@@ -306,11 +416,15 @@ class MasterScheduler:
         self.max_wait = max_wait
         self.adaptive_wait = adaptive_wait
         self.capacity_qps = capacity_qps
-        self.cache = ResultCache(cache_size) if cache_size > 0 else None
+        self.cache = (
+            ResultCache(cache_size, registry=reg) if cache_size > 0 else None
+        )
         self.router = router if router is not None else MultiSetRouter(n_sets)
+        self.router.bind_registry(reg)
         self._version_fn = version_fn or (lambda: 0)
         self._width_fn = width_fn or (lambda terms, site: len(terms))
         self._clock = clock
+        self._wall_clock = wall_clock
         self._vclock: float | None = None       # non-None while replaying
         self._queues: dict[tuple[int, int], list[QueryTicket]] = {}
         self._next_qid = 0
@@ -320,6 +434,31 @@ class MasterScheduler:
         self._key_arrivals: dict[tuple, deque] = {}       # per bucket (fill)
         self._warm_keys: set[tuple] = set()   # buckets past their XLA compile
         self._service_ewma: float | None = None  # seconds per batch
+        self._m_submitted = reg.counter(
+            "odys_queries_submitted_total", help="queries admitted")
+        self._m_batches = reg.counter(
+            "odys_batches_dispatched_total", help="micro-batches executed")
+        self._m_padded = reg.counter(
+            "odys_padded_queries_total",
+            help="inert padding clones dispatched in partial batches")
+        self._m_queue_depth = reg.gauge(
+            "odys_queue_depth", help="queries waiting for batch formation")
+        self._m_response = reg.histogram(
+            "odys_response_seconds",
+            help="submit-to-finish response time (scheduler clock domain; "
+                 "virtual seconds under replay)")
+        self._m_service = reg.histogram(
+            "odys_batch_service_seconds",
+            help="measured batch service wall time (wall domain)")
+        self._m_phase = {
+            p: reg.histogram(
+                "odys_phase_seconds",
+                help="per-phase latency decomposition (see span schema for "
+                     "clock domains)",
+                phase=p,
+            )
+            for p in PHASES
+        }
 
     # ------------------------------------------------------------------
     # admission
@@ -359,15 +498,32 @@ class MasterScheduler:
             bucket=bucket, submit_time=now,
         )
         self._next_qid += 1
+        self._m_submitted.inc()
+        span = None
+        if self.trace:
+            span = QuerySpan(qid=ticket.qid, submit_time=now)
+            ticket.span = span
         if self.cache is not None:
+            w0 = self._wall_clock() if span is not None else 0.0
             hit = self.cache.get((terms_t, site, k), self._version_fn(), now)
+            if span is not None:
+                span.add("cache_lookup", self._wall_clock() - w0)
             if hit is not None:
                 ticket.result = hit
                 ticket.done = True
                 ticket.from_cache = True
                 ticket.finish_time = now
+                self._m_response.observe(0.0)
+                if span is not None:
+                    span.from_cache = True
+                    span.finish_time = now
+                    self._m_phase["cache_lookup"].observe(
+                        span.phases["cache_lookup"])
+                    if self.span_sink is not None:
+                        self.span_sink(span)
                 return ticket
         self._queues.setdefault((bucket, k), []).append(ticket)
+        self._m_queue_depth.set(self.pending())
         return ticket
 
     def pending(self) -> int:
@@ -439,6 +595,7 @@ class MasterScheduler:
         """Form and execute one micro-batch from bucket ``key``."""
         t_max, k = key
         queue = self._queues[key]
+        t_form = self._now()        # batch formation instant (scheduler clock)
         batch = form_batch(
             queue, self.batch_size,
             pad=lambda first: dataclasses.replace(first, qid=-1),
@@ -448,6 +605,7 @@ class MasterScheduler:
         if not batch:
             return []
         real = [t for t in batch if t.qid >= 0]
+        route_w0 = self._wall_clock() if self.trace else 0.0
         try:
             sref = self.router.route(len(real))
         except BaseException:
@@ -455,10 +613,13 @@ class MasterScheduler:
             # router): the popped tickets must survive for a later retry
             self._queues.setdefault(key, [])[:0] = real
             raise
+        route_wall = self._wall_clock() - route_w0 if self.trace else 0.0
         version = self._version_fn()
         queries = [(list(t.terms), t.site) for t in batch]
         start = max(self._now(), sref.busy_until)
-        wall0 = time.perf_counter()
+        # Measured service stays on the real monotonic wall clock — never
+        # the (possibly virtual) scheduler clock; the span labels it so.
+        wall0 = self._wall_clock()
         try:
             results = self.executor(queries, t_max, k, sref.sid)
         except BaseException:
@@ -467,7 +628,11 @@ class MasterScheduler:
             self.router.complete(sref, len(real))
             self._queues.setdefault(key, [])[:0] = real
             raise
-        wall = time.perf_counter() - wall0
+        wall = self._wall_clock() - wall0
+        exec_phases = (
+            self._exec_phases_fn() if self._exec_phases_fn is not None
+            else None
+        )
         if key in self._warm_keys:
             self._service_ewma = (
                 wall if self._service_ewma is None
@@ -481,6 +646,8 @@ class MasterScheduler:
         finish = start + wall if self._vclock is not None else self._clock()
         sref.busy_until = finish
         self.router.complete(sref, len(real))
+        self._m_service.observe(wall)
+        batch_id = self.n_batches
         for ticket, res in zip(batch, results):
             if ticket.qid < 0:
                 continue
@@ -488,6 +655,29 @@ class MasterScheduler:
             ticket.done = True
             ticket.finish_time = finish
             ticket.set_id = sref.sid
+            self._m_response.observe(finish - ticket.submit_time)
+            span = ticket.span
+            if span is not None:
+                span.set_id = sref.sid
+                span.batch_id = batch_id
+                span.batch_queries = len(real)
+                span.add("admission_wait", t_form - span.submit_time)
+                span.add("formation_wait", start - t_form)
+                span.add("route", route_wall)
+                if exec_phases:
+                    for phase, dt in exec_phases.items():
+                        span.add(phase, dt)
+                else:
+                    # opaque executor: the whole measured batch service is
+                    # one undecomposed dispatch phase
+                    span.add("slave_dispatch", wall)
+                span.finish_time = finish
+                for phase, dt in span.phases.items():
+                    hist = self._m_phase.get(phase)
+                    if hist is not None:
+                        hist.observe(dt)
+                if self.span_sink is not None:
+                    self.span_sink(span)
             if self.cache is not None:
                 # stamped with the batch's finish: under replay a result
                 # must not be served at a virtual time before it existed
@@ -497,6 +687,9 @@ class MasterScheduler:
                 )
         self.n_batches += 1
         self.n_padded += len(batch) - len(real)
+        self._m_batches.inc()
+        self._m_padded.inc(len(batch) - len(real))
+        self._m_queue_depth.set(self.pending())
         return real
 
     def step(self) -> list[QueryTicket]:

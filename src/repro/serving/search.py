@@ -34,6 +34,7 @@ at a compaction boundary anyway, so the delta may change shape there too.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -45,6 +46,7 @@ from repro.core.parallel import SearchResult, distributed_query_topk
 from repro.data.corpus import Corpus
 from repro.indexing.compaction import compact as _compact
 from repro.indexing.delta import DeltaWriter
+from repro.obs.registry import MetricsRegistry, get_registry
 from repro.serving.scheduler import MasterScheduler, QueryTicket
 
 
@@ -119,6 +121,8 @@ class SearchService:
         adaptive_wait: bool = False,
         capacity_qps: float | None = None,
         set_health: "SetHealth | None" = None,
+        registry: MetricsRegistry | None = None,
+        span_sink=None,
     ):
         self.index = index
         self.meta = meta
@@ -159,6 +163,8 @@ class SearchService:
             from repro.serving.router import HealthAwareRouter
 
             router = HealthAwareRouter(n_sets, set_health)
+        self.registry = registry if registry is not None else get_registry()
+        self._exec_phases: dict[str, float] | None = None
         self.scheduler = MasterScheduler(
             self._execute,
             batch_size=batch_size,
@@ -172,6 +178,9 @@ class SearchService:
             router=router,
             version_fn=self._snapshot_version,
             width_fn=self._query_width,
+            registry=self.registry,
+            exec_phases_fn=self._take_exec_phases,
+            span_sink=span_sink,
         )
 
     # ------------------------------------------------------------------
@@ -258,23 +267,51 @@ class SearchService:
             interpret=self.interpret,
         )
 
+    def _take_exec_phases(self) -> dict[str, float] | None:
+        """Return-and-clear the last :meth:`_execute`'s phase breakdown.
+
+        The scheduler calls this right after each executor return (its
+        ``exec_phases_fn`` hook) to fold the wall-domain service phases
+        into the batch's spans."""
+        phases, self._exec_phases = self._exec_phases, None
+        return phases
+
     def _execute(self, queries, t_max: int, k: int, set_id: int) -> list[SearchHit]:
         """Scheduler executor: run one formed micro-batch.
 
         ``set_id`` identifies the replicated set the router picked; the
         in-process deployment time-shares one mesh across sets (a multi-pod
-        deployment would dispatch to pod ``set_id`` here)."""
+        deployment would dispatch to pod ``set_id`` here).
+
+        When the registry is live, the batch's service is decomposed at
+        the batch boundary only — dispatch of the jitted program, the
+        ``np.asarray`` device sync that was already on this path (the
+        fused slave top-k + master merge completes under it), and the
+        host-side result extraction.  No host syncs are added inside the
+        device program."""
         del set_id
+        timed = self.registry.enabled
+        w0 = time.perf_counter() if timed else 0.0
         res = self._run_engine(queries, t_max=t_max, k=k)
+        w1 = time.perf_counter() if timed else 0.0
         docs = np.asarray(res.docids)
         hits = np.asarray(res.n_hits)
-        return [
+        w2 = time.perf_counter() if timed else 0.0
+        out = [
             SearchHit(
                 docids=[int(d) for d in row if d != INVALID_DOC],
                 n_hits=int(h),
             )
             for row, h in zip(docs, hits)
         ]
+        if timed:
+            w3 = time.perf_counter()
+            self._exec_phases = {
+                "slave_dispatch": w1 - w0,   # host build + async dispatch
+                "master_merge": w2 - w1,     # batch-boundary device sync
+                "finalize": w3 - w2,         # host result extraction
+            }
+        return out
 
     def submit(
         self, terms, site: int | None = None, *, k: int | None = None
