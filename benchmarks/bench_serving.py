@@ -34,7 +34,7 @@ import numpy as np
 import jax
 
 from repro.core.calibrate import calibrate_from_engine
-from repro.core.index import build_sharded_index
+from repro.core.index import build_sharded_index, pack_flat_postings
 from repro.core.perfmodel import estimation_error
 from repro.data.corpus import CorpusConfig, generate_corpus
 from repro.obs import (
@@ -86,6 +86,20 @@ def main(backend: str = "jnp", smoke: bool = False):
     ns = 1
     sharded, meta = build_sharded_index(corpus, ns)
     mesh = jax.make_mesh((ns,), ("data",))
+
+    # resident posting bytes: raw flat arrays vs the block-codec layout
+    n_live = int(np.sum(np.asarray(sharded.lengths)))
+    raw_bytes = int(np.asarray(sharded.postings).nbytes)
+    packed_bytes = sum(
+        pack_flat_postings(np.asarray(sharded.postings)[s]).nbytes()
+        for s in range(ns)
+    )
+    print(f"serving,index_bytes_raw,{raw_bytes},flat_posting_bytes")
+    print(f"serving,index_bytes_packed,{packed_bytes},words+descriptors")
+    print(f"serving,bytes_per_posting_raw,{raw_bytes/max(n_live,1):.3f},"
+          f"n_live={n_live}")
+    print(f"serving,bytes_per_posting_packed,"
+          f"{packed_bytes/max(n_live,1):.3f},n_live={n_live}")
 
     # --- 1. closed-loop calibration from the live engine -------------------
     cal = calibrate_from_engine(

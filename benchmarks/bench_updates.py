@@ -16,7 +16,16 @@ Reports, as ``updates,<metric>,<value>,<note>`` CSV lines:
   the before/after comparison for the streaming-pipeline refactor —
   ``scripts/check_bench.py`` gates CI on their ratio;
 - **compaction**: wall time of the fold + rebuild, and the post-compaction
-  query latency (which should return to the baseline).
+  query latency (which should return to the baseline);
+- **index residency**: raw vs block-codec (packed) resident posting bytes
+  and bytes/posting — always emitted.  With ``codec="packed"`` the query
+  sweep itself runs the packed read path (in-kernel VMEM decode), and
+  under the pallas backend each fill level interleaves packed vs raw
+  streamed reps and emits the ``packed_over_raw_fill<N>`` median per-rep
+  ratio that ``scripts/check_bench.py --require-packed`` gates on (the
+  staged comparison is skipped in that mode to keep the smoke budget
+  flat).  Post-compaction the rebuilt shard re-enters the codec through
+  ``pack_index`` and is queried packed.
 
 On CPU the pallas backend runs under the interpreter (semantics, not
 speed); the jnp numbers are the meaningful CPU baseline.  ``smoke=True``
@@ -28,7 +37,7 @@ import numpy as np
 import jax
 
 from repro.core.engine import make_query_batch, query_topk
-from repro.core.index import build_index
+from repro.core.index import build_index, pack_flat_postings, pack_index
 from repro.data.corpus import (
     CorpusConfig,
     MutationConfig,
@@ -55,10 +64,11 @@ def _timed(fn, *args, reps=5, **kw):
     return _stats(samples)
 
 
-def _query_latency(idx, delta, qb, *, window, backend, interpret, reps=5):
+def _query_latency(idx, delta, qb, *, window, backend, interpret, reps=5,
+                   codec="raw"):
     return _timed(
         query_topk, idx, qb, delta=delta, k=10, window=window,
-        backend=backend, interpret=interpret, reps=reps,
+        backend=backend, interpret=interpret, codec=codec, reps=reps,
     )
 
 
@@ -70,38 +80,60 @@ def _stats(samples):
     )
 
 
-def _query_latency_pair(idx, delta, qb, *, window, interpret, reps=9):
-    """Streamed vs staged stats with *interleaved* reps, plus the median
-    per-rep ratio.
+def _query_latency_pair(idx, delta, qb, *, window, interpret, reps=9,
+                        variants=(("pallas", "raw"), ("pallas_staged", "raw"))):
+    """Two query variants timed with *interleaved* reps, plus the median
+    per-rep ``first/second`` ratio.
 
-    The regression gate compares the two paths as a ratio; measuring them
-    in separate phases lets a sustained machine-load swing land on one
-    side only and flip the verdict.  Alternating the reps makes both
-    paths sample the same noise window, and the median of the per-rep
-    ratios cancels whatever correlated noise remains — that median is the
-    statistic scripts/check_bench.py gates on.
+    The regression gates compare two paths as a ratio; measuring them in
+    separate phases lets a sustained machine-load swing land on one side
+    only and flip the verdict.  Alternating the reps makes both paths
+    sample the same noise window, and the median of the per-rep ratios
+    cancels whatever correlated noise remains — that median is the
+    statistic scripts/check_bench.py gates on.  The default variant pair
+    is streamed-vs-staged; the codec sweep passes packed-vs-raw.
     """
-    def run(backend):
+    def run(backend, codec):
         return query_topk(
             idx, qb, delta=delta, k=10, window=window,
-            backend=backend, interpret=interpret,
+            backend=backend, interpret=interpret, codec=codec,
         )
 
-    jax.block_until_ready(run("pallas"))          # compile
-    jax.block_until_ready(run("pallas_staged"))
-    streamed, staged = [], []
+    for v in variants:                            # compile
+        jax.block_until_ready(run(*v))
+    first, second = [], []
     for _ in range(reps):
         t0 = time.perf_counter()
-        jax.block_until_ready(run("pallas"))
-        streamed.append(time.perf_counter() - t0)
+        jax.block_until_ready(run(*variants[0]))
+        first.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
-        jax.block_until_ready(run("pallas_staged"))
-        staged.append(time.perf_counter() - t0)
-    ratio = float(np.median(np.asarray(streamed) / np.asarray(staged)))
-    return _stats(streamed), _stats(staged), ratio
+        jax.block_until_ready(run(*variants[1]))
+        second.append(time.perf_counter() - t0)
+    ratio = float(np.median(np.asarray(first) / np.asarray(second)))
+    return _stats(first), _stats(second), ratio
 
 
-def main(backend: str = "jnp", smoke: bool = False):
+def _report_index_bytes(idx):
+    """Raw vs block-codec resident posting bytes (+ per-posting)."""
+    n_live = int(np.sum(np.asarray(idx.lengths)))
+    raw = int(np.asarray(idx.postings).nbytes)
+    print(f"updates,index_bytes_raw,{raw},flat_posting_bytes")
+    print(f"updates,bytes_per_posting_raw,{raw/max(n_live,1):.3f},"
+          f"n_live={n_live}")
+    pk = idx.packed
+    if pk is None:   # report residency even when the run queries raw
+        pk = pack_flat_postings(np.asarray(idx.postings))
+    packed = pk.nbytes()
+    print(f"updates,index_bytes_packed,{packed},words+descriptors")
+    print(f"updates,bytes_per_posting_packed,{packed/max(n_live,1):.3f},"
+          f"n_live={n_live}")
+    print(f"updates,posting_compression_ratio,{raw/packed:.3f},"
+          f"raw_over_packed")
+
+
+def main(backend: str = "jnp", smoke: bool = False, codec: str = "raw"):
+    if codec not in ("raw", "packed"):
+        raise ValueError(f"unknown codec {codec!r}")
     on_tpu = jax.default_backend() == "tpu"
     interpret = None if backend == "jnp" else (not on_tpu)
     n_docs, vocab, n_ops = (2_500, 500, 120) if smoke else (20_000, 2_000, 400)
@@ -109,7 +141,8 @@ def main(backend: str = "jnp", smoke: bool = False):
         CorpusConfig(n_docs=n_docs, vocab_size=vocab, mean_doc_len=60,
                      n_sites=50, seed=3)
     )
-    idx, meta = build_index(corpus)
+    idx, meta = build_index(corpus, codec=codec)
+    _report_index_bytes(idx)
     term_cap = 256 if smoke else 1024
     # Zipf-head lists absorb ~one posting per mutated doc; size the ingest
     # writer for the three n_ops streams below without compacting.
@@ -149,7 +182,8 @@ def main(backend: str = "jnp", smoke: bool = False):
         print(f"updates,{name}_min,{best:.1f},per_query_us_{mode}")
 
     nodelta_stats = _query_latency(
-        idx, None, qb, window=window, backend=backend, interpret=interpret
+        idx, None, qb, window=window, backend=backend, interpret=interpret,
+        codec=codec,
     )
     nodelta = nodelta_stats[0]
     _report("query_nodelta", nodelta_stats)
@@ -157,14 +191,29 @@ def main(backend: str = "jnp", smoke: bool = False):
     # Drive the delta's hottest list to the target fill with inserts over
     # the head of the vocabulary (Zipf head = worst-case merge cost).
     writer2 = DeltaWriter(corpus, meta, ns=1, term_capacity=term_cap,
-                          doc_headroom=4 * term_cap)
+                          doc_headroom=4 * term_cap, codec=codec)
     lat, lat_staged = {}, {}
     for target in (0.0, 0.5, 1.0):
         while writer2.posting_fill() < target:
             terms = np.unique(rng.integers(0, 64, size=60))
             writer2.insert_docs([(terms, int(rng.integers(50)))])
-        delta = local_delta(writer2.device_delta())
-        if backend == "pallas":
+        # shard_deltas carries the packed twin; ns=1 so shard 0 is local
+        delta = (writer2.shard_deltas()[0] if codec == "packed"
+                 else local_delta(writer2.device_delta()))
+        fill = int(target * 100)
+        if backend == "pallas" and codec == "packed":
+            # codec before/after: packed in-kernel decode vs the raw
+            # streamed path, interleaved for a stable gate ratio
+            stats, rstats, ratio = _query_latency_pair(
+                idx, delta, qb, window=window, interpret=interpret,
+                variants=(("pallas", "packed"), ("pallas", "raw")),
+            )
+            lat[target] = stats[0]
+            _report(f"query_fill{fill}", stats)
+            _report(f"query_fill{fill}_raw", rstats)
+            print(f"updates,packed_over_raw_fill{fill},"
+                  f"{ratio:.3f},median_interleaved_rep_ratio")
+        elif backend == "pallas":
             # before/after: the legacy gather + host-sort data path,
             # interleaved with the streamed path for a stable gate ratio
             stats, sstats, ratio = _query_latency_pair(
@@ -172,15 +221,16 @@ def main(backend: str = "jnp", smoke: bool = False):
             )
             lat[target] = stats[0]
             lat_staged[target] = sstats[0]
-            _report(f"query_fill{int(target*100)}", stats)
-            _report(f"query_fill{int(target*100)}_staged", sstats)
-            print(f"updates,streamed_over_staged_fill{int(target*100)},"
+            _report(f"query_fill{fill}", stats)
+            _report(f"query_fill{fill}_staged", sstats)
+            print(f"updates,streamed_over_staged_fill{fill},"
                   f"{ratio:.3f},median_interleaved_rep_ratio")
         else:
             stats = _query_latency(idx, delta, qb, window=window,
-                                   backend=backend, interpret=interpret)
+                                   backend=backend, interpret=interpret,
+                                   codec=codec)
             lat[target] = stats[0]
-            _report(f"query_fill{int(target*100)}", stats)
+            _report(f"query_fill{fill}", stats)
 
     # Freshness tax: how much a full delta slows queries vs an empty one
     # (and vs running with no delta attached at all).
@@ -188,7 +238,7 @@ def main(backend: str = "jnp", smoke: bool = False):
           f"fill100_over_fill0_{mode}")
     print(f"updates,freshness_tax_vs_nodelta,{lat[1.0]/nodelta:.3f},"
           f"fill100_over_nodelta_{mode}")
-    if backend == "pallas":
+    if lat_staged:
         print(f"updates,freshness_tax_staged,"
               f"{lat_staged[1.0]/lat_staged[0.0]:.3f},"
               f"fill100_over_fill0_{mode}")
@@ -202,9 +252,15 @@ def main(backend: str = "jnp", smoke: bool = False):
     print(f"updates,compaction_time,{dt*1e3:.1f},ms")
     from repro.core.index import InvertedIndex
     new_local = InvertedIndex(*(x[0] for x in new_sharded))
-    delta0 = local_delta(writer2.device_delta())
+    if codec == "packed":
+        # the rebuilt shard re-enters the codec through the one packer
+        new_local = pack_index(new_local)
+        delta0 = writer2.shard_deltas()[0]
+    else:
+        delta0 = local_delta(writer2.device_delta())
     dt, _, _ = _query_latency(new_local, delta0, qb, window=window,
-                              backend=backend, interpret=interpret)
+                              backend=backend, interpret=interpret,
+                              codec=codec)
     print(f"updates,query_post_compaction,{dt/len(q)*1e6:.1f},"
           f"per_query_us_{mode}")
 

@@ -21,6 +21,12 @@ lines; the serving suite adds ``phase_<name>`` per-phase span means and
 layer).  CI uploads these as artifacts and feeds ``BENCH_updates.json``
 to ``scripts/check_bench.py``, the streamed-vs-staged regression gate —
 which ignores metric keys it does not recognize, so emitters may grow.
+
+``--codec packed`` (updates suite) runs the query sweep through the
+block-codec read path — packed words decoded in-kernel — and, under
+``--backend pallas``, interleaves packed vs raw reps per fill level; a
+second ``check_bench.py --require-packed`` invocation gates those
+``packed_over_raw_fill*`` ratios and the compression floor.
 """
 import argparse
 import contextlib
@@ -106,6 +112,13 @@ def main() -> None:
         help="CI-sized runs for the suites that support it",
     )
     ap.add_argument(
+        "--codec", default=None, choices=["raw", "packed"],
+        help="posting codec for the suites that support it (updates): "
+             "packed queries the block-codec in-kernel decode path and, "
+             "under --backend pallas, emits the packed_over_raw_fill* "
+             "gate ratios",
+    )
+    ap.add_argument(
         "--json-dir", default=None, metavar="DIR",
         help="also write one BENCH_<suite>.json per suite (CI artifacts; "
              "consumed by scripts/check_bench.py)",
@@ -124,6 +137,8 @@ def main() -> None:
             kw["backend"] = args.backend
         if args.smoke and "smoke" in params:
             kw["smoke"] = True
+        if args.codec is not None and "codec" in params:
+            kw["codec"] = args.codec
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         tee = _Tee(sys.stdout)
@@ -140,6 +155,7 @@ def main() -> None:
             payload = {
                 "suite": name,
                 "backend": kw.get("backend"),
+                "codec": kw.get("codec"),
                 "smoke": bool(kw.get("smoke", False)),
                 "elapsed_s": round(time.time() - t0, 3),
                 "metrics": _parse_records(tee.buf.getvalue(), name),

@@ -11,8 +11,17 @@ fill level.  Interpret-mode CPU timings under-credit streaming (per-grid-
 step overhead dominates; see ROADMAP), which is why the gate is a
 don't-regress bound rather than a must-win bound.
 
+With ``--require-packed`` the gate instead checks the block-codec run
+(``--codec packed``): the ``packed_over_raw_fill<N>`` median interleaved
+rep ratio must stay within ``--max-ratio`` at every fill level (in-kernel
+decode may not slow the streamed path beyond the don't-regress bound —
+the same interpret-mode caveat applies), and ``posting_compression_ratio``
+must hold the ``--min-compression`` floor (default 2.5x): the codec must
+actually pay for itself in resident bytes.
+
 Usage:
     python scripts/check_bench.py BENCH_DIR [--max-ratio 1.5]
+    python scripts/check_bench.py PACKED_DIR --require-packed
 """
 from __future__ import annotations
 
@@ -24,12 +33,30 @@ from pathlib import Path
 FILLS = (0, 50, 100)
 
 
+def _report_ignored(metrics: dict, consumed: set) -> None:
+    # Unknown keys are expected, not an error: bench emitters grow new
+    # lines (per-phase spans, residual gauges, ...) faster than this gate.
+    extra = sorted(set(metrics) - consumed)
+    if extra:
+        shown = ", ".join(extra[:8]) + ("..." if len(extra) > 8 else "")
+        print(f"check_bench: ignoring {len(extra)} unrecognized metric "
+              f"key(s): {shown}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("bench_dir", type=Path,
                     help="directory holding BENCH_updates.json")
     ap.add_argument("--max-ratio", type=float, default=1.5,
-                    help="fail if streamed/staged exceeds this at any fill")
+                    help="fail if streamed/staged (or packed/raw with "
+                         "--require-packed) exceeds this at any fill")
+    ap.add_argument("--require-packed", action="store_true",
+                    help="gate the block-codec run: packed_over_raw_fill* "
+                         "must exist and hold --max-ratio, and the "
+                         "compression floor must hold")
+    ap.add_argument("--min-compression", type=float, default=2.5,
+                    help="minimum raw/packed posting-bytes ratio with "
+                         "--require-packed")
     args = ap.parse_args()
 
     path = args.bench_dir / "BENCH_updates.json"
@@ -42,6 +69,66 @@ def main() -> int:
     failures = []
     checked = 0
     consumed: set[str] = set()
+    if args.require_packed:
+        # Block-codec gate: the packed in-kernel-decode path vs the raw
+        # streamed path, same median-of-interleaved-reps statistic as the
+        # streamed/staged gate below.
+        for fill in FILLS:
+            for suffix in ("", "_p95", "_min"):
+                consumed.update(
+                    k for k in (f"query_fill{fill}{suffix}",
+                                f"query_fill{fill}_raw{suffix}")
+                    if k in metrics
+                )
+            key = f"packed_over_raw_fill{fill}"
+            direct = metrics.get(key)
+            if direct is None:
+                continue
+            consumed.add(key)
+            checked += 1
+            ratio = direct["value"]
+            verdict = "ok" if ratio <= args.max_ratio else "FAIL"
+            print(f"check_bench: fill{fill:<3} packed/raw ratio="
+                  f"{ratio:.3f} (median interleaved rep ratio; "
+                  f"max {args.max_ratio}) {verdict}")
+            if ratio > args.max_ratio:
+                failures.append((fill, ratio))
+        consumed.update(
+            k for k in ("index_bytes_raw", "index_bytes_packed",
+                        "bytes_per_posting_raw", "bytes_per_posting_packed",
+                        "posting_compression_ratio")
+            if k in metrics
+        )
+        comp = metrics.get("posting_compression_ratio")
+        if comp is None:
+            print("check_bench: --require-packed but no "
+                  "posting_compression_ratio metric — was the suite run "
+                  "with --codec packed?", file=sys.stderr)
+            return 1
+        cratio = comp["value"]
+        cverdict = "ok" if cratio >= args.min_compression else "FAIL"
+        print(f"check_bench: compression raw/packed={cratio:.2f}x "
+              f"(floor {args.min_compression}x) {cverdict}")
+        if cratio < args.min_compression:
+            print(f"check_bench: block codec only reaches {cratio:.2f}x "
+                  f"compression (floor {args.min_compression}x)",
+                  file=sys.stderr)
+            return 1
+        if checked == 0:
+            print("check_bench: no packed_over_raw_fill* ratios found — "
+                  "was the suite run with --backend pallas --codec packed?",
+                  file=sys.stderr)
+            return 1
+        if failures:
+            print(f"check_bench: packed read path regressed beyond "
+                  f"{args.max_ratio}x at fills {[f for f, _ in failures]}",
+                  file=sys.stderr)
+            return 1
+        _report_ignored(metrics, consumed)
+        print(f"check_bench: {checked} fill levels within {args.max_ratio}x "
+              f"and compression >= {args.min_compression}x — packed read "
+              f"path holds")
+        return 0
     for fill in FILLS:
         # Gate on the median of interleaved per-rep ratios when the bench
         # emitted it: shared-CI machines show multi-ms scheduler stalls and
@@ -75,13 +162,7 @@ def main() -> int:
               f"({detail}; max {args.max_ratio}) {verdict}")
         if ratio > args.max_ratio:
             failures.append((fill, ratio))
-    # Unknown keys are expected, not an error: bench emitters grow new
-    # lines (per-phase spans, residual gauges, ...) faster than this gate.
-    extra = sorted(set(metrics) - consumed)
-    if extra:
-        shown = ", ".join(extra[:8]) + ("..." if len(extra) > 8 else "")
-        print(f"check_bench: ignoring {len(extra)} unrecognized metric "
-              f"key(s): {shown}")
+    _report_ignored(metrics, consumed)
     if checked == 0:
         print("check_bench: no streamed/staged metric pairs found — was the "
               "suite run with --backend pallas?", file=sys.stderr)

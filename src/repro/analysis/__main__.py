@@ -48,7 +48,8 @@ def _cmd_lint(args) -> int:
 def _cmd_selftest(args) -> int:
     """Every negative fixture must be rejected with the expected check."""
     from repro.analysis.contracts import check_contract
-    from repro.analysis.fixtures import broken_contracts
+    from repro.analysis.fixtures import broken_contracts, broken_lint_sources
+    from repro.analysis.lint import lint_source
 
     bad = 0
     for contract, expected in broken_contracts():
@@ -62,6 +63,18 @@ def _cmd_selftest(args) -> int:
             print(
                 f"[FAIL] {contract.name:28s} expected {expected!r}, "
                 f"got {got}",
+                file=sys.stderr,
+            )
+    for name, rel, source, expected in broken_lint_sources():
+        findings = lint_source(source, rel)
+        hit = [f for f in findings if f.rule == expected]
+        if hit:
+            print(f"[ok  ] {name:28s} rejected by {expected!r}")
+        else:
+            bad += 1
+            got = sorted({f.rule for f in findings}) or ["<nothing>"]
+            print(
+                f"[FAIL] {name:28s} expected {expected!r}, got {got}",
                 file=sys.stderr,
             )
     print(f"selftest: {bad} missed rejection(s)")

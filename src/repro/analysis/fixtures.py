@@ -141,6 +141,49 @@ def broken_contracts() -> list[tuple[KernelContract, str]]:
         )
     )
 
+    # Block-codec words truncated to their live extent — reverting the
+    # spare packed chunk ``packed_word_pad`` reserves.  The rows clamp the
+    # packed index maps carry (min(woff // 128, rows - chunk_rows)) then
+    # lands edge chunks on live words of *other* block spans with no
+    # dead region to absorb them: the packed-space spare-tile violation.
+    from repro.core.index import pack_flat_postings
+    from repro.kernels.registry import synthetic_flat_index
+
+    arrays, _live = synthetic_flat_index((150, 100, 90))
+    pk = pack_flat_postings(arrays["postings"])
+    live_w = int(np.asarray(pk.blk_woff)[-1])
+    cr = pk.chunk_rows
+    rows_t = max(-(-live_w // 1024) * 8, cr)  # spare chunk reverted
+    woff = np.asarray(pk.blk_woff)
+
+    def _truncated_packed_map(i, woff_ref):
+        return (int(np.minimum(woff_ref[i] // 128, rows_t - cr)), 0)
+
+    out.append(
+        (
+            KernelContract(
+                name="fx_packed_words_no_spare_chunk",
+                site=_line("fx_packed_words_no_spare_chunk"),
+                grid=(4,),
+                scalars=(woff,),
+                inputs=(
+                    OperandContract(
+                        "packed_words",
+                        (rows_t, 128),
+                        "int32",
+                        (cr, 128),
+                        _truncated_packed_map,
+                        indexing_mode=UNBLOCKED,
+                        padding_from=live_w,
+                        spare_tile=True,
+                    ),
+                ),
+                outputs=(_flat_op("o", 4, _id_map),),
+            ),
+            "spare-tile",
+        )
+    )
+
     out.append(
         (
             KernelContract(
@@ -220,3 +263,52 @@ def broken_contracts() -> list[tuple[KernelContract, str]]:
     )
 
     return out
+
+
+def broken_lint_sources() -> list[tuple[str, str, str, str]]:
+    """``(name, rel_path, source, expected_rule)`` — deliberately-bad
+    source snippets each lint rule MUST flag, the lint-side twin of
+    :func:`broken_contracts`.  ``python -m repro.analysis selftest``
+    runs both families."""
+    return [
+        (
+            "fx_lint_handrolled_pad",
+            "repro/core/bad_pad.py",
+            "TILE = 1024\n"
+            "def pad(n):\n"
+            "    return (n // TILE + 1) * TILE\n",
+            "flat-pad",
+        ),
+        (
+            "fx_lint_posting_gather",
+            "repro/kernels/bad_gather.py",
+            "import jax.numpy as jnp\n"
+            "def f(postings, idx):\n"
+            "    return jnp.take(postings, idx)\n",
+            "posting-gather",
+        ),
+        (
+            "fx_lint_hardcoded_interpret",
+            "repro/launch/bad_call.py",
+            "def h(g):\n"
+            "    g(interpret=True)\n",
+            "interpret-literal",
+        ),
+        (
+            "fx_lint_adhoc_posting_alloc",
+            "repro/indexing/bad_alloc.py",
+            "import numpy as np\n"
+            "def build(n):\n"
+            "    postings = np.full(n * 1024, -1, dtype=np.int32)\n"
+            "    return postings\n",
+            "posting-alloc",
+        ),
+        (
+            "fx_lint_adhoc_attrs_kwarg_alloc",
+            "repro/indexing/bad_kwarg.py",
+            "import numpy as np\n"
+            "def build(shard, n):\n"
+            "    return shard._replace(attrs=np.zeros(n, dtype=np.int32))\n",
+            "posting-alloc",
+        ),
+    ]

@@ -18,6 +18,15 @@ Rules (suppress a line with ``# lint: allow(<rule>)``):
 - ``interpret-literal`` — ``interpret=`` must be threaded (a variable or
   function default), never hard-coded as a ``True``/``False`` literal at
   a call site: hard-coding forks CPU-CI behavior from TPU behavior.
+- ``posting-alloc`` — flat posting/attr arrays may only be allocated
+  with sizes derived from the layout/codec layer
+  (:func:`repro.core.index.flat_tile_pad` /
+  :func:`repro.core.index.packed_word_pad`).  Flags ``np.zeros`` /
+  ``np.full`` / ... bound to a posting/attrs name whose size expression
+  neither calls those helpers nor references a name assigned from them:
+  an ad-hoc size is how an array misses the spare tile (or spare packed
+  chunk) every streamed BlockSpec read relies on.  Host-side mirrors
+  with deliberately different layouts carry the pragma.
 """
 
 from __future__ import annotations
@@ -28,7 +37,7 @@ import os
 import re
 from typing import Iterable
 
-RULES = ("flat-pad", "posting-gather", "interpret-literal")
+RULES = ("flat-pad", "posting-gather", "interpret-literal", "posting-alloc")
 
 _ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([a-z-]+)\)")
 
@@ -38,6 +47,48 @@ _POSTING_NAMES = ("posting", "attr")
 #: Files exempt from posting-gather: the reference oracles are *defined*
 #: by their gather formulation.
 _GATHER_EXEMPT = ("kernels/ref.py",)
+
+#: Array constructors whose result is a fresh allocation.
+_ALLOC_FNS = ("zeros", "empty", "full", "ones")
+_ALLOC_MODULES = ("np", "jnp", "numpy")
+
+#: Size helpers from the layout/codec layer.  An allocation whose size
+#: expression calls one of these (or references a name assigned from
+#: one) carries the spare tile / spare packed chunk by construction.
+_PAD_FNS = ("flat_tile_pad", "packed_word_pad")
+
+#: The layout layer itself — where the pad helpers live and the one
+#: place allowed to size posting arrays from first principles.
+_ALLOC_EXEMPT = ("repro/core/index.py",)
+
+
+def _is_payload_name(name: str) -> bool:
+    """Posting/attr *payload* arrays — not scalars like a query's single
+    ``attr`` filter value; the flat attr payloads are always plural."""
+    low = name.lower()
+    return "posting" in low or "attrs" in low
+
+
+def _is_alloc_call(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in _ALLOC_FNS
+        and isinstance(node.func.value, ast.Name)
+        and node.func.value.id in _ALLOC_MODULES
+    )
+
+
+def _calls_pad_fn(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            fn = sub.func
+            fname = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else ""
+            )
+            if fname in _PAD_FNS:
+                return True
+    return False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +148,11 @@ class _FileLinter(ast.NodeVisitor):
         self._gather_scoped = rel.startswith("repro/kernels/") and not any(
             rel.endswith(e.split("/")[-1]) and e in rel for e in _GATHER_EXEMPT
         )
+        self._alloc_scoped = rel not in _ALLOC_EXEMPT
+        # Per-scope sets of names assigned from flat_tile_pad /
+        # packed_word_pad (or from another tracked name) — sizes built
+        # from these inherit the spare tile.
+        self._pad_names: list[set[str]] = [set()]
 
     def _emit(self, rule: str, message: str, node: ast.AST):
         if rule in _allowed(self.lines, node):
@@ -108,10 +164,60 @@ class _FileLinter(ast.NodeVisitor):
     # -- flat-pad ----------------------------------------------------------
     def visit_FunctionDef(self, node: ast.FunctionDef):
         self._func_stack.append(node.name)
+        self._pad_names.append(set())
         self.generic_visit(node)
+        self._pad_names.pop()
         self._func_stack.pop()
 
     visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- posting-alloc -----------------------------------------------------
+    def _pad_tracked(self, node: ast.AST) -> bool:
+        """Does this expression reference a pad-derived name?  Closures
+        see enclosing scopes, so check the whole stack."""
+        tracked = set().union(*self._pad_names)
+        return any(
+            isinstance(sub, ast.Name) and sub.id in tracked
+            for sub in ast.walk(node)
+        )
+
+    def _pad_derived(self, value: ast.AST) -> bool:
+        return _calls_pad_fn(value) or self._pad_tracked(value)
+
+    def _check_alloc(self, name: str, value: ast.AST, node: ast.AST):
+        if not (
+            self._alloc_scoped
+            and _is_alloc_call(value)
+            and _is_payload_name(name)
+        ):
+            return
+        size_ok = any(
+            self._pad_derived(arg)
+            for arg in list(value.args) + [kw.value for kw in value.keywords]  # type: ignore[attr-defined]
+        )
+        if not size_ok:
+            self._emit(
+                "posting-alloc",
+                f"posting/attr array {name!r} allocated with an ad-hoc "
+                "size — derive it from flat_tile_pad()/packed_word_pad() "
+                "(or pragma a deliberately different host-side layout)",
+                node,
+            )
+
+    def visit_Assign(self, node: ast.Assign):
+        for target in node.targets:
+            if isinstance(target, ast.Name):
+                if self._pad_derived(node.value):
+                    self._pad_names[-1].add(target.id)
+                self._check_alloc(target.id, node.value, node)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign):
+        if isinstance(node.target, ast.Name) and node.value is not None:
+            if self._pad_derived(node.value):
+                self._pad_names[-1].add(node.target.id)
+            self._check_alloc(node.target.id, node.value, node)
+        self.generic_visit(node)
 
     def visit_BinOp(self, node: ast.BinOp):
         in_flat_tile_pad = "flat_tile_pad" in self._func_stack
@@ -157,6 +263,8 @@ class _FileLinter(ast.NodeVisitor):
                     node,
                 )
         for kw in node.keywords:
+            if kw.arg is not None and not _is_alloc_call(node):
+                self._check_alloc(kw.arg, kw.value, kw.value)
             if kw.arg == "interpret" and isinstance(kw.value, ast.Constant):
                 if isinstance(kw.value.value, bool):
                     self._emit(
@@ -169,16 +277,21 @@ class _FileLinter(ast.NodeVisitor):
         self.generic_visit(node)
 
 
+def lint_source(source: str, rel: str) -> list[LintFinding]:
+    """Lint a source string as if it lived at ``rel`` under ``src/``."""
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as e:
+        return [LintFinding("flat-pad", f"unparseable: {e}", rel, e.lineno or 0)]
+    linter = _FileLinter(rel, rel, source)
+    linter.visit(tree)
+    return linter.findings
+
+
 def lint_file(path: str, rel: str) -> list[LintFinding]:
     with open(path, encoding="utf-8") as f:
         source = f.read()
-    try:
-        tree = ast.parse(source, filename=path)
-    except SyntaxError as e:
-        return [LintFinding("flat-pad", f"unparseable: {e}", rel, e.lineno or 0)]
-    linter = _FileLinter(path, rel, source)
-    linter.visit(tree)
-    return linter.findings
+    return lint_source(source, rel)
 
 
 def lint_tree(root: str) -> list[LintFinding]:

@@ -100,6 +100,7 @@ from repro.core.index import (
     IndexMeta,
     InvertedIndex,
     site_term_id,
+    unpack_flat_postings_jnp,
 )
 from repro.indexing.delta import DOC_DEAD, DOC_SUPERSEDED, DeltaIndex
 from repro.obs.registry import get_registry
@@ -487,6 +488,7 @@ def _query_topk_batch_pallas(
     attr_strategy: str,
     interpret: bool,
     delta: DeltaIndex | None = None,
+    use_packed: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fully-streamed Pallas path: the PostingSource hands the kernels
     driver tile spans (:class:`DriverSpan`) and every posting — driver and
@@ -527,17 +529,21 @@ def _query_topk_batch_pallas(
     if attr_strategy not in ("embed", "gather", "site_term"):
         raise ValueError(attr_strategy)
 
+    packed = index.packed if use_packed else None
     if delta is None:
         docs, mask = ops.intersect_fullstream(
             span.off, span.n_eff, batch.terms, active, kernel_filter,
             index.postings, index.attrs, index.offsets, index.lengths,
-            index.block_max, window=window, interpret=interpret,
+            index.block_max, window=window, packed=packed,
+            interpret=interpret,
         )
     else:
+        d_packed = delta.packed if use_packed else None
         docs, mattrs, msrc = ops.merge_windows(
             index.postings, index.attrs, span.off, span.n_eff,
             delta.postings, delta.attrs, delta.offsets, delta.lengths,
-            delta.block_max, d_terms, window=window, interpret=interpret,
+            delta.block_max, d_terms, window=window,
+            packed=packed, d_packed=d_packed, interpret=interpret,
         )
         a_flags = source.driver_flags(docs)
         live = source.driver_live(docs, msrc, a_flags)
@@ -546,6 +552,7 @@ def _query_topk_batch_pallas(
             index.postings, index.offsets, index.lengths, index.block_max,
             delta.postings, delta.offsets, delta.lengths, delta.block_max,
             a_flags,
+            packed=packed, d_packed=d_packed,
             interpret=interpret,
         )
 
@@ -665,7 +672,9 @@ def _query_topk_batch_staged(
 
 @partial(
     jax.jit,
-    static_argnames=("k", "window", "attr_strategy", "backend", "interpret"),
+    static_argnames=(
+        "k", "window", "attr_strategy", "backend", "interpret", "codec"
+    ),
 )
 def query_topk(
     index: InvertedIndex,
@@ -677,6 +686,7 @@ def query_topk(
     attr_strategy: str = "embed",
     backend: str = "jnp",
     interpret: bool | None = None,
+    codec: str = "raw",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Batched local top-k.  Returns (docids[Q, k], n_hits[Q]).
 
@@ -705,7 +715,36 @@ def query_topk(
     - ``"pallas_staged"`` — the legacy gather-based path (per-batch
       ``(Q, T_MAX, window)`` staging + host-side merge sort), kept as the
       before/after comparator for ``benchmarks/bench_updates.py``.
+
+    ``codec="packed"`` reads postings through the block codec: the index
+    (and delta snapshot, when attached) must carry its packed twin.  On
+    the ``pallas`` backend the packed words stream straight into the
+    kernels and decode in VMEM; the other backends decode the full array
+    on device first (``unpack_flat_postings_jnp``) — same results, which
+    is exactly the codec bit-parity oracle.  ``codec="raw"`` (default)
+    keeps the uncompressed read path as the A/B comparator.
     """
+    if codec not in ("raw", "packed"):
+        raise ValueError(f"unknown codec {codec!r}")
+    if codec == "packed":
+        if index.packed is None:
+            raise ValueError(
+                "codec='packed' needs an index carrying its packed twin "
+                "(build_index(codec='packed') or pack_index)"
+            )
+        if delta is not None and delta.packed is None:
+            raise ValueError(
+                "codec='packed' needs a delta snapshot with a packed twin "
+                "(DeltaWriter(codec='packed'))"
+            )
+        if backend != "pallas":
+            index = index._replace(
+                postings=unpack_flat_postings_jnp(index.packed)
+            )
+            if delta is not None:
+                delta = delta._replace(
+                    postings=unpack_flat_postings_jnp(delta.packed)
+                )
     if backend == "jnp":
         source = make_posting_source(index, delta)
         fn = partial(
@@ -721,12 +760,18 @@ def query_topk(
 
         if interpret is None:
             interpret = ops.default_interpret()
-        impl = (
-            _query_topk_batch_pallas
-            if backend == "pallas"
-            else _query_topk_batch_staged
-        )
-        return impl(
+        if backend == "pallas":
+            return _query_topk_batch_pallas(
+                index,
+                batch,
+                k=k,
+                window=window,
+                attr_strategy=attr_strategy,
+                interpret=interpret,
+                delta=delta,
+                use_packed=codec == "packed",
+            )
+        return _query_topk_batch_staged(
             index,
             batch,
             k=k,

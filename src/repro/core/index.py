@@ -31,6 +31,14 @@ TPU-native layout (all dense, HBM-resident):
   ``include_site_terms=True``, each siteId also gets its *own* posting list
   under term id ``vocab_size + site``, so a limited search can instead run
   as a two-list ZigZag join (Fig 4(a)).
+- **Block codec** (packed postings): the flat posting array additionally
+  has a compressed twin, :class:`PackedFlatArrays` — per-BLOCK
+  delta-encoded, bit-packed docID gaps with a fixed power-of-two bit width
+  per block, chosen from the block's max gap and stored in a per-block
+  descriptor next to the skip table.  HBM then holds packed words; the
+  streamed kernels decode each block into VMEM right after the DMA, and
+  main index, delta snapshots, and compaction all encode through
+  :func:`pack_flat_postings` — one implementation, one layout contract.
 """
 from __future__ import annotations
 
@@ -39,6 +47,7 @@ from typing import NamedTuple
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.data.corpus import Corpus
@@ -125,6 +134,241 @@ DOC_DEAD = np.int32(1)
 DOC_SUPERSEDED = np.int32(2)
 
 
+# ---------------------------------------------------------------------------
+# Block codec: per-BLOCK delta-encoded, bit-packed postings
+# ---------------------------------------------------------------------------
+#
+# Every BLOCK (128 postings, one lane row) compresses independently:
+#
+#   base  = first docID of the block (docIDs ascend inside a list, and a
+#           block never straddles lists — list starts are BLOCK-aligned)
+#   gaps  = docID[l] - docID[l-1]  (gap[0] = 0; base carries the level)
+#   width = the smallest of PACK_WIDTHS whose range covers the block's max
+#           gap — powers of two dividing 32, so a w-bit field never
+#           straddles a 32-bit word and lane l's field sits at word
+#           (l*w) >> 5, shift (l*w) & 31 of the block's 4*w packed words
+#
+# Gap coding (not offset-from-base) is deliberate: a block's gaps are ~128x
+# smaller than its docID range, which is where the 3-4x win lives.  The
+# per-block descriptor (base, width|count, cumulative word offset) rides in
+# SMEM next to the skip table; the packed words are the only posting bytes
+# HBM serves on the streamed read path — raw int32 postings exist only as
+# VMEM decode output inside the kernels.
+
+#: Legal per-block bit widths.  All divide 32 (no field straddles a word);
+#: 0 encodes blocks with <= 1 posting (no gaps), 32 is the exact-docID
+#: fallback for blocks whose max gap needs the full range.
+PACK_WIDTHS = (0, 1, 2, 4, 8, 16, 32)
+
+#: Descriptor arrays carry this many trailing zero blocks so a clamped
+#: chunk's decode (up to TILE/BLOCK blocks past the live range) never
+#: indexes out of bounds; a padding descriptor decodes to all-INVALID.
+DESC_PAD = 8
+
+
+def packed_word_pad(n_words: int, chunk_rows: int) -> int:
+    """Padded length of a packed-words array holding ``n_words`` words.
+
+    The packed twin of :func:`flat_tile_pad`: packed chunks are read as
+    (``chunk_rows``, 128) word blocks from *row-misaligned* starts (a
+    block's words begin wherever the previous block's ended), so one spare
+    tile is not enough — the edge clamp must absorb a whole chunk, not a
+    whole tile.  Padding ``n_words + chunk_rows * BLOCK`` through
+    ``flat_tile_pad`` keeps >= one chunk plus one spare tile of zero fill
+    past the live words, which is the packed-space spare-tile invariant
+    the contract checker (repro.analysis) verifies.
+    """
+    return flat_tile_pad(n_words + chunk_rows * BLOCK)
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedFlatArrays:
+    """Compressed twin of a flat posting array (see module docstring).
+
+    Array leaves (pytree children; device-resident under jit):
+
+    - ``words``:    int32[W]  bit-packed gap fields, 4*width words per
+      block, concatenated in block order; zero-filled padding per
+      :func:`packed_word_pad`
+    - ``blk_base``: int32[n_blocks + DESC_PAD]  first docID per block
+    - ``blk_meta``: int32[n_blocks + DESC_PAD]  ``width | (count << 6)``
+    - ``blk_woff``: int32[n_blocks + DESC_PAD + 1]  cumulative word offset
+      of each block (constant past the live range — padding blocks pack to
+      zero words)
+
+    ``chunk_rows`` is static (pytree aux): the fixed (rows, 128) read that
+    covers any ``span_blocks`` consecutive blocks' words regardless of
+    their word alignment — it sizes every packed BlockSpec, so it must be
+    a compile-time constant.
+    """
+
+    def __init__(self, words, blk_base, blk_meta, blk_woff, *, chunk_rows):
+        self.words = words
+        self.blk_base = blk_base
+        self.blk_meta = blk_meta
+        self.blk_woff = blk_woff
+        self.chunk_rows = int(chunk_rows)
+
+    def tree_flatten(self):
+        return (
+            (self.words, self.blk_base, self.blk_meta, self.blk_woff),
+            (self.chunk_rows,),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, chunk_rows=aux[0])
+
+    @property
+    def n_blocks(self) -> int:
+        """Block count of the flat array this packs (descriptor arrays
+        carry DESC_PAD extra padding entries past it)."""
+        return self.blk_base.shape[0] - DESC_PAD
+
+    def nbytes(self) -> int:
+        """Resident bytes of the packed structure (words + descriptors)."""
+        return int(
+            self.words.nbytes + self.blk_base.nbytes
+            + self.blk_meta.nbytes + self.blk_woff.nbytes
+        )
+
+    def padding(self) -> FlatPadding:
+        """The packed-space padding contract: live words vs padded words.
+        Check with ``spare_tile_ok(read_elems=chunk_rows * BLOCK)``."""
+        live_words = int(np.asarray(self.blk_woff)[-1])
+        return FlatPadding(live_words, int(self.words.shape[0]))
+
+
+def pack_flat_postings(
+    flat: np.ndarray, *, span_blocks: int = DESC_PAD
+) -> PackedFlatArrays:
+    """Encode a TILE-padded flat posting array into packed-word form.
+
+    ``span_blocks`` is the widest run of consecutive blocks any consumer
+    decodes from one chunk read — TILE/BLOCK (= 8) for the tile-granular
+    probe/driver streams; a delta snapshot whose per-term capacity exceeds
+    TILE passes its blocks-per-term so slab decodes fit one chunk too.
+    """
+    flat = np.asarray(flat, dtype=np.int32)
+    if flat.ndim != 1 or flat.shape[0] % TILE:
+        raise ValueError("pack_flat_postings needs a TILE-padded flat array")
+    n_blocks = flat.shape[0] // BLOCK
+    blocks = flat.reshape(n_blocks, BLOCK)
+    lane = np.arange(BLOCK, dtype=np.int32)
+
+    valid = blocks != INVALID_DOC
+    cnt = valid.sum(axis=1).astype(np.int32)
+    if not np.array_equal(valid, lane[None, :] < cnt[:, None]):
+        raise ValueError("valid postings must be a prefix of every BLOCK")
+    base = np.where(cnt > 0, blocks[:, 0], 0).astype(np.int32)
+
+    gaps = np.zeros_like(blocks)
+    gaps[:, 1:] = blocks[:, 1:] - blocks[:, :-1]
+    gaps = np.where(lane[None, :] < cnt[:, None], gaps, 0)
+    gaps[:, 0] = 0
+    if gaps.min(initial=0) < 0:
+        raise ValueError("postings must ascend within every BLOCK")
+    maxgap = gaps.max(axis=1, initial=0)
+
+    widths = np.full(n_blocks, 32, np.int32)
+    for w in (16, 8, 4, 2, 1):
+        widths = np.where(maxgap <= (1 << w) - 1, w, widths)
+    widths = np.where(maxgap == 0, 0, widths).astype(np.int32)
+
+    # Cumulative word offsets; padding blocks (all-INVALID) pack to zero
+    # words, so woff is constant past the live range by construction.
+    wpb = widths * (BLOCK // 32)
+    woff = np.zeros(n_blocks + DESC_PAD + 1, np.int64)
+    np.cumsum(wpb, out=woff[1:n_blocks + 1])
+    total_words = int(woff[n_blocks])
+    woff[n_blocks + 1:] = total_words
+
+    # The fixed chunk read covering any span_blocks consecutive blocks:
+    # worst case over every start block of (words spanned, rounded out to
+    # whole 128-word rows from the start block's row).
+    span = max(DESC_PAD, int(span_blocks))
+    b0 = np.arange(n_blocks, dtype=np.int64)
+    end = np.minimum(b0 + span, n_blocks)
+    r0 = woff[b0] // BLOCK
+    rows_needed = -(-(woff[end] - r0 * BLOCK) // BLOCK)
+    # Rounded up to the 8-sublane tile: chunk BlockSpecs must stay
+    # (8, 128)-aligned like every other int32 block.
+    sub = TILE // BLOCK
+    chunk_rows = int(max(1, rows_needed.max(initial=1)))
+    chunk_rows = -(-chunk_rows // sub) * sub
+
+    words = np.zeros(packed_word_pad(total_words, chunk_rows), np.uint32)
+    ug = gaps.astype(np.uint32)
+    for w in PACK_WIDTHS[1:]:
+        sel = np.nonzero(widths == w)[0]
+        if sel.size == 0:
+            continue
+        lanes_per_word = 32 // w
+        nw = BLOCK // lanes_per_word          # 4*w words per block
+        g3 = ug[sel].reshape(sel.size, nw, lanes_per_word).astype(np.uint64)
+        sh = np.arange(lanes_per_word, dtype=np.uint64) * np.uint64(w)
+        packed = np.bitwise_or.reduce(g3 << sh[None, None, :], axis=2)
+        dst = woff[sel][:, None] + np.arange(nw)[None, :]
+        words[dst] = packed.astype(np.uint32)
+
+    desc_len = n_blocks + DESC_PAD
+    blk_base = np.zeros(desc_len, np.int32)
+    blk_base[:n_blocks] = base
+    blk_meta = np.zeros(desc_len, np.int32)
+    blk_meta[:n_blocks] = widths | (cnt << 6)
+    return PackedFlatArrays(
+        words=jnp.asarray(words.view(np.int32)),
+        blk_base=jnp.asarray(blk_base),
+        blk_meta=jnp.asarray(blk_meta),
+        blk_woff=jnp.asarray(woff.astype(np.int32)),
+        chunk_rows=chunk_rows,
+    )
+
+
+def unpack_flat_postings(packed: PackedFlatArrays) -> np.ndarray:
+    """Host-side (numpy) decode — the round-trip reference for the codec
+    property tests.  Returns the raw TILE-padded flat array bit-exactly."""
+    words = np.asarray(packed.words).view(np.uint32)
+    n_blocks = packed.n_blocks
+    meta = np.asarray(packed.blk_meta)[:n_blocks].astype(np.int64)
+    woff = np.asarray(packed.blk_woff).astype(np.int64)[:n_blocks]
+    base = np.asarray(packed.blk_base)[:n_blocks].astype(np.int64)
+    w = meta & 63
+    cnt = meta >> 6
+    lane = np.arange(BLOCK, dtype=np.int64)
+    idx = woff[:, None] + ((lane[None, :] * w[:, None]) >> 5)
+    lane_word = words[np.minimum(idx, words.shape[0] - 1)].astype(np.uint64)
+    shift = ((lane[None, :] * w[:, None]) & 31).astype(np.uint64)
+    mask = (np.uint64(1) << w.astype(np.uint64)[:, None]) - np.uint64(1)
+    gaps = (lane_word >> shift) & mask
+    docs = base[:, None] + np.cumsum(gaps.astype(np.int64), axis=1)
+    out = np.where(lane[None, :] < cnt[:, None], docs, int(INVALID_DOC))
+    return out.astype(np.int32).reshape(-1)
+
+
+def unpack_flat_postings_jnp(packed: PackedFlatArrays) -> jnp.ndarray:
+    """Device-side full-array decode: the jnp backend's packed read path
+    (host/XLA, not Pallas) — proves bit-parity of the codec itself, while
+    ``backend="pallas"`` decodes per-block in VMEM."""
+    n_blocks = packed.n_blocks
+    meta = packed.blk_meta[:n_blocks]
+    w = meta & 63
+    cnt = meta >> 6
+    lane = jnp.arange(BLOCK, dtype=jnp.int32)
+    idx = packed.blk_woff[:n_blocks, None] + ((lane[None, :] * w[:, None]) >> 5)
+    lane_word = jnp.take(packed.words, idx, mode="fill", fill_value=0)
+    shift = (lane[None, :] * w[:, None]) & 31
+    mask = jnp.where(
+        w >= 32, jnp.int32(-1), (jnp.int32(1) << jnp.minimum(w, 31)) - 1
+    )
+    gaps = jax.lax.shift_right_logical(lane_word, shift) & mask[:, None]
+    docs = packed.blk_base[:n_blocks, None] + jnp.cumsum(
+        gaps, axis=1, dtype=jnp.int32
+    )
+    out = jnp.where(lane[None, :] < cnt[:, None], docs, INVALID_DOC)
+    return out.reshape(-1)
+
+
 class InvertedIndex(NamedTuple):
     """Device-side index. All fields are jnp arrays (pytree-friendly)."""
 
@@ -134,6 +378,7 @@ class InvertedIndex(NamedTuple):
     attrs: jnp.ndarray      # int32[P]         embedded attribute per posting
     block_max: jnp.ndarray  # int32[P//BLOCK]  skip table (max docID per block)
     doc_site: jnp.ndarray   # int32[n_docs_pad] docID -> siteId (gather strategy)
+    packed: PackedFlatArrays | None = None  # block-codec twin of ``postings``
 
     @property
     def n_terms(self) -> int:
@@ -228,11 +473,52 @@ def _build_numpy(
     return arrays, meta
 
 
+def export_index_bytes(
+    raw_nbytes: int, packed_nbytes: int | None, *, kind: str
+) -> None:
+    """Export the ``odys_index_bytes{layout, kind}`` gauges (repro.obs):
+    resident posting-structure bytes of the raw flat array and, when the
+    codec is on, its packed twin — the compression win as a dashboard
+    number.  No-op unless metrics are enabled."""
+    from repro.obs import get_registry
+
+    reg = get_registry()
+    help_ = "resident posting-structure bytes by layout and index kind"
+    reg.gauge("odys_index_bytes", help=help_, layout="raw", kind=kind).set(
+        int(raw_nbytes)
+    )
+    if packed_nbytes is not None:
+        reg.gauge(
+            "odys_index_bytes", help=help_, layout="packed", kind=kind
+        ).set(int(packed_nbytes))
+
+
+def pack_index(index: InvertedIndex) -> InvertedIndex:
+    """Attach the block-codec twin to an existing index (e.g. a shard of a
+    freshly-compacted :class:`ShardedIndex`)."""
+    return index._replace(
+        packed=pack_flat_postings(np.asarray(index.postings))
+    )
+
+
 def build_index(
-    corpus: Corpus, *, include_site_terms: bool = True
+    corpus: Corpus, *, include_site_terms: bool = True, codec: str = "raw"
 ) -> tuple[InvertedIndex, IndexMeta]:
+    if codec not in ("raw", "packed"):
+        raise ValueError(f"unknown codec {codec!r}")
     arrays, meta = _build_numpy(corpus, include_site_terms)
-    return InvertedIndex(**{k: jnp.asarray(v) for k, v in arrays.items()}), meta
+    packed = (
+        pack_flat_postings(arrays["postings"]) if codec == "packed" else None
+    )
+    idx = InvertedIndex(
+        **{k: jnp.asarray(v) for k, v in arrays.items()}, packed=packed
+    )
+    export_index_bytes(
+        arrays["postings"].nbytes,
+        None if packed is None else packed.nbytes(),
+        kind="main",
+    )
+    return idx, meta
 
 
 # ---------------------------------------------------------------------------

@@ -345,6 +345,7 @@ def sequential_reference(
     deltas: list[DeltaIndex] | None = None,
     backend: str = "jnp",
     interpret: bool | None = None,
+    codec: str = "raw",
 ) -> SearchResult:
     """Run each shard sequentially on one device and merge on host —
     the oracle for :func:`distributed_query_topk`.  ``deltas`` supplies
@@ -355,7 +356,7 @@ def sequential_reference(
             idx, batch,
             delta=None if deltas is None else deltas[s],
             k=k, window=window, attr_strategy=attr_strategy,
-            backend=backend, interpret=interpret,
+            backend=backend, interpret=interpret, codec=codec,
         )
         all_cands.append(local_to_global_docids(docs, jnp.int32(s), ns))
         all_hits.append(hits)

@@ -58,12 +58,16 @@ import jax.numpy as jnp
 
 from repro.core.index import (
     BLOCK,
+    DESC_PAD,
     DOC_DEAD,       # noqa: F401  (canonical home: core.index, next to the
     DOC_SUPERSEDED,  # noqa: F401  layout constants the kernels import)
     INVALID_ATTR,
     INVALID_DOC,
     IndexMeta,
+    PackedFlatArrays,
+    export_index_bytes,
     flat_tile_pad,
+    pack_flat_postings,
 )
 from repro.data.corpus import Corpus, corpus_from_docs
 
@@ -99,6 +103,10 @@ class DeltaIndex(NamedTuple):
     block_max: jnp.ndarray  # int32[(n_terms*cap)//BLOCK] skip table (valid-max)
     doc_flags: jnp.ndarray  # int32[nd_cap]    tombstone bitmap (both structures)
     doc_site: jnp.ndarray   # int32[nd_cap]    authoritative docID -> siteId
+    # Block-codec twin of ``postings`` (DeltaWriter(codec="packed") attaches
+    # it per shard); trailing + defaulted so positional construction from
+    # the 7 ShardedDelta fields keeps working.
+    packed: PackedFlatArrays | None = None
 
     @property
     def term_capacity(self) -> int:
@@ -175,8 +183,13 @@ class DeltaWriter:
         *,
         term_capacity: int = 2 * BLOCK,
         doc_headroom: int = 1024,
+        codec: str = "raw",
     ):
         assert ns >= 1
+        if codec not in ("raw", "packed"):
+            raise ValueError(f"unknown codec {codec!r}")
+        self.codec = codec
+        self._packed_cache: tuple[int, list[PackedFlatArrays]] | None = None
         self.ns = ns
         self.meta = meta
         self.include_site_terms = meta.include_site_terms
@@ -219,9 +232,13 @@ class DeltaWriter:
     def _fresh_shard(self, base: Corpus, s: int) -> _ShardState:
         st = _ShardState(
             lengths=np.zeros(self.n_terms, dtype=np.int32),
+            # 2-D host-side write mirrors, flattened + tile-padded only
+            # at snapshot time in device_delta().
+            # lint: allow(posting-alloc)
             postings=np.full(
                 (self.n_terms, self.term_capacity), INVALID_DOC, dtype=np.int32
             ),
+            # lint: allow(posting-alloc)
             attrs=np.full(
                 (self.n_terms, self.term_capacity), INVALID_ATTR, dtype=np.int32
             ),
@@ -524,12 +541,41 @@ class DeltaWriter:
             doc_site=jnp.asarray(np.stack([s.doc_site for s in self._shards])),
         )
         self._snapshot_version = self._version
+        export_index_bytes(int(postings.nbytes), None, kind="delta")
         return self._snapshot
 
     def shard_deltas(self) -> list[DeltaIndex]:
-        """Per-shard device views (for the sequential reference path)."""
+        """Per-shard device views (for the sequential reference path).
+
+        With ``codec="packed"`` each view carries the block-codec twin of
+        its posting slab (re-encoded per snapshot version, cached like the
+        snapshot itself) and the ``odys_index_bytes{kind="delta"}`` gauges
+        report both layouts' resident totals.
+        """
         stacked = self.device_delta()
-        return [DeltaIndex(*(x[s] for x in stacked)) for s in range(self.ns)]
+        shards = [DeltaIndex(*(x[s] for x in stacked)) for s in range(self.ns)]
+        if self.codec != "packed":
+            return shards
+        if self._packed_cache is None or self._packed_cache[0] != self._version:
+            # Slab decodes span the whole per-term capacity, so descriptor
+            # reads may run cap//BLOCK blocks ahead of the slab start.
+            bpt = self.term_capacity // BLOCK
+            packs = [
+                pack_flat_postings(
+                    np.asarray(d.postings), span_blocks=max(DESC_PAD, bpt)
+                )
+                for d in shards
+            ]
+            export_index_bytes(
+                sum(int(np.asarray(d.postings).nbytes) for d in shards),
+                sum(p.nbytes() for p in packs),
+                kind="delta",
+            )
+            self._packed_cache = (self._version, packs)
+        return [
+            d._replace(packed=p)
+            for d, p in zip(shards, self._packed_cache[1])
+        ]
 
     def mutated_corpus(self) -> Corpus:
         """Materialize the authoritative post-mutation corpus (deleted docs

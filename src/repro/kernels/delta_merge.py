@@ -51,10 +51,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.index import BLOCK, INVALID_ATTR, INVALID_DOC, TILE
+from repro.core.index import (
+    BLOCK,
+    DESC_PAD,
+    INVALID_ATTR,
+    INVALID_DOC,
+    TILE,
+    PackedFlatArrays,
+    pack_flat_postings,
+)
 from repro.kernels.posting_intersect import (
     LANES,
     TILE_ROWS,
+    _decode_span,
+    _packed_row0,
     _tile_positions,
 )
 
@@ -101,7 +111,7 @@ def _bitonic_merge_flat(key, src, payloads):
 
 
 def _main_window_map(rows_total):
-    def m_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+    def m_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref, *_):
         # Unblocked element-row offset of window tile j; clamped at the
         # array edge (spare-tile invariant keeps clamped tiles masked).
         row = minfo_ref[q, 0] + j * TILE_ROWS
@@ -110,37 +120,74 @@ def _main_window_map(rows_total):
     return m_map
 
 
-def _slab_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+def _slab_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref, *_):
     # empty slabs pin to block 0: the copy-through never reads the
     # operand, and consecutive skipped queries coalesce onto one
     # already-resident block instead of one slab DMA each
     return (jnp.where(occ_ref[q] == 0, 0, slab_ref[q]), 0)
 
 
-def _merge_out_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+def _merge_out_map(q, j, minfo_ref, slab_ref, len_ref, occ_ref, *_):
     return (q, 0, 0)
 
 
+def _packed_window_map(woff_idx, n_blocks, rows_w, chunk_rows):
+    """Chunk row of the packed words holding window tile ``j``'s span.
+
+    ``minfo[q, 0]`` is the window's start row, which with LANES == BLOCK
+    is also its start *block*; clamping the block index into the
+    descriptor pad keeps every read in packed bounds (the spare packed
+    chunk makes the edge rows-clamp provably inert).
+    """
+
+    def m_map(q, j, *refs):
+        b0c = jnp.minimum(refs[0][q, 0] + j * TILE_ROWS, n_blocks)
+        return (_packed_row0(refs[woff_idx], b0c, rows_w, chunk_rows), 0)
+
+    return m_map
+
+
+def _packed_slab_map(woff_idx, bpt, n_blocks, rows_w, chunk_rows):
+    """Chunk row of the packed delta words holding query ``q``'s slab."""
+
+    def d_map(q, j, *refs):
+        b0 = jnp.where(refs[3][q] == 0, 0, refs[1][q]) * bpt
+        b0c = jnp.minimum(b0, n_blocks)
+        return (_packed_row0(refs[woff_idx], b0c, rows_w, chunk_rows), 0)
+
+    return d_map
+
+
 def _merge_kernel(
-    # scalar-prefetch (SMEM):
-    minfo_ref,  # int32[Q, 2] [window row0, live postings] of the driver term
-    slab_ref,   # int32[Q] delta slab index of each query's driver term
-    len_ref,    # int32[Q] valid postings in that slab
-    occ_ref,    # int32[Q] occupied blocks per slab (from the skip table)
-    # VMEM:
-    mp_ref,     # (8, 128)        current main-window tile (unblocked stream)
-    ma_ref,     # (8, 128)        its attrs
-    dp_ref,     # (cap/128, 128)  delta slab docids (streamed)
-    da_ref,     # (cap/128, 128)  delta slab attrs (streamed)
-    od_ref, oa_ref, os_ref,       # (1, out_rows, 128) merged outputs
-    # scratch:
-    sd_ref, sa_ref,               # (out_rows, 128) window accumulators
-    *,
+    # raw refs: [minfo, slab, d_len, d_occ] scalars, then
+    #   mp (8,128) window tile / ma (8,128) attrs /
+    #   dp (cap/128,128) slab docids / da slab attrs,
+    #   od/oa/os (1,out_rows,128) outputs, sd/sa (out_rows,128) scratch.
+    # packed mode appends six descriptor scalars
+    #   [m_base, m_meta, m_woff, d_base, d_meta, d_woff]
+    # and mp/dp become packed-word chunks (chunk_rows, 128); attrs stay raw.
+    *refs,
     out_w: int,
     cap: int,
     n_pad: int,
     s_w: int,
+    packed_m=None,  # (n_blocks, rows_w, chunk_rows) of the main words
+    packed_d=None,  # same for the delta words
 ):
+    if packed_m is not None:
+        (
+            minfo_ref, slab_ref, len_ref, occ_ref,
+            mba_ref, mme_ref, mwo_ref, dba_ref, dme_ref, dwo_ref,
+            mp_ref, ma_ref, dp_ref, da_ref,
+            od_ref, oa_ref, os_ref, sd_ref, sa_ref,
+        ) = refs
+    else:
+        (
+            minfo_ref, slab_ref, len_ref, occ_ref,
+            mp_ref, ma_ref, dp_ref, da_ref,
+            od_ref, oa_ref, os_ref, sd_ref, sa_ref,
+        ) = refs
+
     q = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -148,8 +195,17 @@ def _merge_kernel(
     # its intended window position (tiles are window-aligned): a clamped
     # edge read can only affect fully-masked slots (spare-tile invariant).
     in_win = _tile_positions(j) < minfo_ref[q, 1]
+    if packed_m is not None:
+        n_bm, rows_wm, cr_m = packed_m
+        b0c = jnp.minimum(minfo_ref[q, 0] + j * TILE_ROWS, n_bm)
+        row0 = _packed_row0(mwo_ref, b0c, rows_wm, cr_m)
+        m_tile = _decode_span(
+            mp_ref[...], mba_ref, mme_ref, mwo_ref, b0c, row0, TILE_ROWS
+        )
+    else:
+        m_tile = mp_ref[...]
     sd_ref[pl.dslice(j * TILE_ROWS, TILE_ROWS), :] = jnp.where(
-        in_win, mp_ref[...], INVALID_DOC
+        in_win, m_tile, INVALID_DOC
     )
     sa_ref[pl.dslice(j * TILE_ROWS, TILE_ROWS), :] = jnp.where(
         in_win, ma_ref[...], INVALID_ATTR
@@ -167,7 +223,21 @@ def _merge_kernel(
         md = sd_ref[...].reshape(-1)
         ma = sa_ref[...].reshape(-1)
         d_valid = jnp.arange(cap, dtype=jnp.int32) < len_ref[q]
-        dd = jnp.where(d_valid, dp_ref[...].reshape(-1), INVALID_DOC)
+        if packed_d is not None:
+            n_bd, rows_wd, cr_d = packed_d
+            bpt = cap // BLOCK
+            # Same address arithmetic as _packed_slab_map so the decode
+            # offsets match the chunk the BlockSpec actually loaded.
+            b0d = jnp.minimum(
+                jnp.where(occ_ref[q] == 0, 0, slab_ref[q]) * bpt, n_bd
+            )
+            row0d = _packed_row0(dwo_ref, b0d, rows_wd, cr_d)
+            dd_raw = _decode_span(
+                dp_ref[...], dba_ref, dme_ref, dwo_ref, b0d, row0d, bpt
+            ).reshape(-1)
+        else:
+            dd_raw = dp_ref[...].reshape(-1)
+        dd = jnp.where(d_valid, dd_raw, INVALID_DOC)
         da = jnp.where(d_valid, da_ref[...].reshape(-1), INVALID_ATTR)
 
         # ascending main ++ pad ++ descending delta = bitonic
@@ -204,6 +274,8 @@ def merge_delta_windows(
     terms: jnp.ndarray,        # int32[Q] driver term per query
     *,
     window: int,
+    packed: PackedFlatArrays | None = None,
+    d_packed: PackedFlatArrays | None = None,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Merged (docs, attrs, src) driver windows, each int32[Q, window].
@@ -247,26 +319,63 @@ def merge_delta_windows(
         [m_off.astype(jnp.int32) // LANES, m_neff.astype(jnp.int32)], axis=-1
     )
 
+    if (packed is None) != (d_packed is None):
+        raise ValueError(
+            "merge_delta_windows: packed and d_packed go together"
+        )
+
     n_pad = _next_pow2(out_w + cap)
     cap_rows = cap // LANES
-    mp2 = postings.reshape(rows_total, LANES)
     ma2 = attrs.reshape(rows_total, LANES)
-    dp2 = d_postings.reshape(-1, LANES)
     da2 = d_attrs.reshape(-1, LANES)
 
     m_map = _main_window_map(rows_total)
     d_map = _slab_map
     o_map = _merge_out_map
 
+    scalars = [minfo, slab, d_len, d_occ]
+    pk_m = pk_d = None
+    if packed is not None:
+        # Descriptor scalars ride after the raw four so every existing
+        # scalar index (and the raw maps' signatures) stays valid.
+        scalars += [
+            packed.blk_base, packed.blk_meta, packed.blk_woff,
+            d_packed.blk_base, d_packed.blk_meta, d_packed.blk_woff,
+        ]
+        words_m2 = packed.words.reshape(-1, LANES)
+        words_d2 = d_packed.words.reshape(-1, LANES)
+        pk_m = (packed.n_blocks, words_m2.shape[0], packed.chunk_rows)
+        pk_d = (d_packed.n_blocks, words_d2.shape[0], d_packed.chunk_rows)
+        in_specs = [
+            pl.BlockSpec(
+                (packed.chunk_rows, LANES),
+                _packed_window_map(6, *pk_m),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec(
+                (d_packed.chunk_rows, LANES),
+                _packed_slab_map(9, bpt, *pk_d),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((cap_rows, LANES), d_map),
+        ]
+        operands = [words_m2, ma2, words_d2, da2]
+    else:
+        mp2 = postings.reshape(rows_total, LANES)
+        dp2 = d_postings.reshape(-1, LANES)
+        in_specs = [
+            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((cap_rows, LANES), d_map),
+            pl.BlockSpec((cap_rows, LANES), d_map),
+        ]
+        operands = [mp2, ma2, dp2, da2]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=len(scalars),
         grid=(q_n, s_w),
-        in_specs=[
-            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
-            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
-            pl.BlockSpec((cap_rows, LANES), d_map),
-            pl.BlockSpec((cap_rows, LANES), d_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, out_rows, LANES), o_map),
             pl.BlockSpec((1, out_rows, LANES), o_map),
@@ -280,15 +389,18 @@ def merge_delta_windows(
     shape = jax.ShapeDtypeStruct((q_n, out_rows, LANES), jnp.int32)
     docs, oattrs, src = pl.pallas_call(
         functools.partial(
-            _merge_kernel, out_w=out_w, cap=cap, n_pad=n_pad, s_w=s_w
+            _merge_kernel,
+            out_w=out_w,
+            cap=cap,
+            n_pad=n_pad,
+            s_w=s_w,
+            packed_m=pk_m,
+            packed_d=pk_d,
         ),
         grid_spec=grid_spec,
         out_shape=[shape, shape, shape],
         interpret=interpret,
-    )(
-        minfo, slab, d_len, d_occ,
-        mp2, ma2, dp2, da2,
-    )
+    )(*scalars, *operands)
     def unroll(x):
         return x.reshape(q_n, -1)[:, :window]
 
@@ -312,25 +424,44 @@ from repro.kernels.registry import (  # noqa: E402
 )
 
 
-def _main_window_intended(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+def _main_window_intended(q, j, minfo_ref, slab_ref, len_ref, occ_ref, *_):
     """Pre-clamp address of :func:`_main_window_map` — contract only."""
     return (minfo_ref[q, 0] + j * TILE_ROWS, 0)
 
 
-def _main_window_consumed(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+def _main_window_consumed(q, j, minfo_ref, slab_ref, len_ref, occ_ref, *_):
     return bool(j * TILE < minfo_ref[q, 1])
 
 
-def _slab_intended(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+def _slab_intended(q, j, minfo_ref, slab_ref, len_ref, occ_ref, *_):
     return (slab_ref[q], 0)
 
 
-def _slab_consumed(q, j, minfo_ref, slab_ref, len_ref, occ_ref):
+def _slab_consumed(q, j, minfo_ref, slab_ref, len_ref, occ_ref, *_):
     return bool(occ_ref[q] != 0)
 
 
-@kernel_contract("merge_delta_windows")
-def _contract_merge_delta_windows():
+def _packed_window_intended(woff_idx, n_blocks):
+    """:func:`_packed_window_map` minus the rows clamp (provably inert:
+    ``packed_word_pad`` leaves a full spare chunk past the live words)."""
+
+    def intended(q, j, *refs):
+        b0c = jnp.minimum(refs[0][q, 0] + j * TILE_ROWS, n_blocks)
+        return (refs[woff_idx][b0c] // LANES, 0)
+
+    return intended
+
+
+def _packed_slab_intended(woff_idx, bpt, n_blocks):
+    def intended(q, j, *refs):
+        b0 = jnp.where(refs[3][q] == 0, 0, refs[1][q]) * bpt
+        b0c = jnp.minimum(b0, n_blocks)
+        return (refs[woff_idx][b0c] // LANES, 0)
+
+    return intended
+
+
+def _build_merge_contract(use_packed):
     # Canonical main index: lists (150, 100, 90); the last list ends
     # mid-tile at the array edge, so the last window tile of query 1
     # clamps — safe only because of the spare INVALID tile.
@@ -371,14 +502,47 @@ def _contract_merge_delta_windows():
         spare_tile=True,
     )
     m_map = _main_window_map(rows_total)
-    ins = (
-        OperandContract(
+    if use_packed:
+        pk_m = pack_flat_postings(arrays["postings"])
+        pk_d = pack_flat_postings(
+            delta["d_postings"], span_blocks=max(DESC_PAD, bpt)
+        )
+        scalars = scalars + tuple(
+            np.asarray(x)
+            for pk in (pk_m, pk_d)
+            for x in (pk.blk_base, pk.blk_meta, pk.blk_woff)
+        )
+        rows_wm = np.asarray(pk_m.words).shape[0] // LANES
+        rows_wd = np.asarray(pk_d.words).shape[0] // LANES
+        mp_op = OperandContract(
+            "packed_words(main)",
+            (rows_wm, LANES),
+            "int32",
+            (pk_m.chunk_rows, LANES),
+            _packed_window_map(6, pk_m.n_blocks, rows_wm, pk_m.chunk_rows),
+            indexing_mode=UNBLOCKED,
+            intended_map=_packed_window_intended(6, pk_m.n_blocks),
+            consumed=_main_window_consumed,
+            padding_from=int(np.asarray(pk_m.blk_woff)[-1]),
+            spare_tile=True,
+        )
+        dp_op = OperandContract(
+            "packed_words(delta)",
+            (rows_wd, LANES),
+            "int32",
+            (pk_d.chunk_rows, LANES),
+            _packed_slab_map(9, bpt, pk_d.n_blocks, rows_wd, pk_d.chunk_rows),
+            indexing_mode=UNBLOCKED,
+            intended_map=_packed_slab_intended(9, bpt, pk_d.n_blocks),
+            consumed=_slab_consumed,
+            padding_from=int(np.asarray(pk_d.blk_woff)[-1]),
+            spare_tile=True,
+        )
+    else:
+        mp_op = OperandContract(
             "main_postings", flat_main, "int32", tile, m_map, **main_kw
-        ),
-        OperandContract(
-            "main_attrs", flat_main, "int32", tile, m_map, **main_kw
-        ),
-        OperandContract(
+        )
+        dp_op = OperandContract(
             "delta_postings",
             flat_delta,
             "int32",
@@ -387,7 +551,13 @@ def _contract_merge_delta_windows():
             intended_map=_slab_intended,
             consumed=_slab_consumed,
             padding_from=d_live,
+        )
+    ins = (
+        mp_op,
+        OperandContract(
+            "main_attrs", flat_main, "int32", tile, m_map, **main_kw
         ),
+        dp_op,
         OperandContract(
             "delta_attrs",
             flat_delta,
@@ -405,8 +575,9 @@ def _contract_merge_delta_windows():
         OperandContract(nm, out_shape, "int32", blk_o, _merge_out_map)
         for nm in ("docs", "attrs", "src")
     )
+    suffix = "_packed" if use_packed else ""
     return KernelContract(
-        name="merge_delta_windows",
+        name="merge_delta_windows" + suffix,
         site=site_of(merge_delta_windows),
         grid=(q_n, s_w),
         scalars=scalars,
@@ -417,5 +588,16 @@ def _contract_merge_delta_windows():
             ((out_rows, LANES), "int32"),
         ),
         revisit_dims=(1,),
-        notes="in-kernel bitonic merge of main + delta streams",
+        notes="in-kernel bitonic merge of main + delta streams"
+        + (" (block-codec decode in VMEM)" if use_packed else ""),
     )
+
+
+@kernel_contract("merge_delta_windows")
+def _contract_merge_delta_windows():
+    return _build_merge_contract(False)
+
+
+@kernel_contract("merge_delta_windows_packed")
+def _contract_merge_delta_windows_packed():
+    return _build_merge_contract(True)

@@ -55,10 +55,13 @@ def intersect_streamed(a_docs, a_attrs, a_live, terms, active, attr_filter,
                        postings, offsets, lengths, block_max,
                        d_postings=None, d_offsets=None, d_lengths=None,
                        d_block_max=None, a_flags=None, *,
+                       packed=None, d_packed=None,
                        s_max=None, interpret: bool | None = None):
     """Batched ZigZag join with other-term windows streamed straight from
     the flat index arrays (no ``(Q, T, W)`` staging gather).  Pass the
-    ``d_*`` delta arrays + ``a_flags`` for merge-on-read.
+    ``d_*`` delta arrays + ``a_flags`` for merge-on-read; pass ``packed``
+    (+ ``d_packed`` with deltas) to stream block-codec words decoded in
+    VMEM instead of raw posting tiles.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -66,13 +69,15 @@ def intersect_streamed(a_docs, a_attrs, a_live, terms, active, attr_filter,
         a_docs, a_attrs, a_live, terms, active, attr_filter,
         postings, offsets, lengths, block_max,
         d_postings, d_offsets, d_lengths, d_block_max, a_flags,
+        packed=packed, d_packed=d_packed,
         s_max=s_max, interpret=interpret,
     )
 
 
 def intersect_fullstream(d_off, d_neff, terms, active, attr_filter,
                          postings, attrs, offsets, lengths, block_max, *,
-                         window, s_max=None, interpret: bool | None = None):
+                         window, packed=None, s_max=None,
+                         interpret: bool | None = None):
     """Fully-streamed batched ZigZag join: the DRIVER window also reads
     straight from the flat arrays (unblocked-index BlockSpecs at the
     scalar-prefetched per-query offsets) — no ``(Q, window)`` gather
@@ -84,13 +89,14 @@ def intersect_fullstream(d_off, d_neff, terms, active, attr_filter,
     return intersect_batched_driver_streamed(
         d_off, d_neff, terms, active, attr_filter,
         postings, attrs, offsets, lengths, block_max,
-        window=window, s_max=s_max, interpret=interpret,
+        window=window, packed=packed, s_max=s_max, interpret=interpret,
     )
 
 
 def merge_windows(postings, attrs, m_off, m_neff, d_postings, d_attrs,
                   d_offsets, d_lengths, d_block_max, terms, *,
-                  window, interpret: bool | None = None):
+                  window, packed=None, d_packed=None,
+                  interpret: bool | None = None):
     """In-VMEM merge of main driver windows with the delta posting streams.
     Both sides stream from their flat arrays (the main window through an
     unblocked-index BlockSpec at the prefetched per-query offset, the
@@ -104,7 +110,8 @@ def merge_windows(postings, attrs, m_off, m_neff, d_postings, d_attrs,
     return merge_delta_windows(
         postings, attrs, m_off, m_neff, d_postings, d_attrs,
         d_offsets, d_lengths, d_block_max, terms,
-        window=window, interpret=interpret,
+        window=window, packed=packed, d_packed=d_packed,
+        interpret=interpret,
     )
 
 

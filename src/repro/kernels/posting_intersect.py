@@ -40,6 +40,7 @@ from repro.core.index import (
     INVALID_ATTR,
     INVALID_DOC,
     TILE,
+    PackedFlatArrays,
 )
 
 TILE_ROWS = 8
@@ -199,6 +200,116 @@ def _driver_window_map(rows_total, info_idx):
 
 def _driver_out_map(q, i, t, j, *refs):
     return (q, i, 0)
+
+
+# ---------------------------------------------------------------------------
+# Block-codec decode (core.index.PackedFlatArrays): packed HBM words are
+# DMA'd as (chunk_rows, 128) word chunks and expanded to raw int32 docIDs
+# right here, in VMEM — on a packed stream HBM never serves a raw posting.
+# ---------------------------------------------------------------------------
+
+
+def _packed_row0(woff_ref, b0c, rows_w: int, chunk_rows: int):
+    """First word row of the chunk covering block ``b0c``'s packed words.
+
+    The edge clamp mirrors the raw maps' pattern but is provably inert:
+    ``packed_word_pad`` keeps >= chunk_rows*BLOCK + TILE zero words past
+    the live words, so ``woff[b0c] // LANES <= rows_w - chunk_rows`` for
+    every descriptor-clamped ``b0c`` — the packed-space spare-tile
+    invariant the contract checker verifies.
+    """
+    return jnp.minimum(woff_ref[b0c] // LANES, rows_w - chunk_rows)
+
+
+def _decode_block(chunk, base, meta, rel):
+    """One BLOCK's packed gap fields -> (1, 128) raw docIDs.
+
+    ``chunk`` is the resident (chunk_rows, 128) word chunk, ``rel`` the
+    block's first word's flat index inside it.  Lane l's w-bit field sits
+    at word ``(l*w) >> 5``, shift ``(l*w) & 31`` (widths divide 32, so no
+    field straddles a word boundary); the per-lane word gather is a
+    one-hot select-and-sum — the VPU formulation, since VMEM has no
+    scalar gather.  A block packs at most 128 words, which never span
+    more than two consecutive 128-word rows, so the one-hot runs over
+    that row pair (256 words) rather than the whole chunk — the decode
+    cost is then independent of ``chunk_rows``.  A padding descriptor
+    (meta == 0 => cnt == 0) masks every lane to INVALID, so a clamped or
+    stale chunk can never decode into live-looking postings; an
+    out-of-window ``rel`` matches nothing and sums to zero, which the
+    same mask discards.
+    """
+    w = meta & 63
+    cnt = meta >> 6
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+    idx = rel + ((lane * w) >> 5)
+    rows = chunk.shape[0]
+    # the row pair holding this block's words (chunk_rows is always >= 8;
+    # a live block starting in the last row also fits entirely in it, so
+    # the clamp only shifts the window start, never drops live words)
+    r0b = jnp.minimum(rel >> 7, rows - 2)
+    fr = jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 0)
+    top = jnp.sum(jnp.where(fr == r0b, chunk, 0), axis=0)
+    bot = jnp.sum(jnp.where(fr == r0b + 1, chunk, 0), axis=0)
+    window = jnp.concatenate([top, bot])[:, None]          # (256, 1)
+    idx2 = idx - r0b * LANES                               # window-relative
+    wid = jax.lax.broadcasted_iota(jnp.int32, (2 * LANES, LANES), 0)
+    lane_word = jnp.sum(jnp.where(wid == idx2, window, 0), axis=0)
+    shift = (lane * w) & 31
+    mask = jnp.where(
+        w >= 32, jnp.int32(-1), (jnp.int32(1) << jnp.minimum(w, 31)) - 1
+    )
+    # logical shift: a 32-bit field may have the sign bit set.
+    gaps = jax.lax.shift_right_logical(lane_word[None, :], shift) & mask
+    docs = base + jnp.cumsum(gaps, axis=1, dtype=jnp.int32)
+    return jnp.where(lane < cnt, docs, INVALID_DOC)
+
+
+def _decode_span(chunk, base_ref, meta_ref, woff_ref, b0c, row0, n_span: int):
+    """Decode ``n_span`` consecutive blocks (statically unrolled) from one
+    resident word chunk into an (n_span, 128) raw docID tile.
+
+    ``b0c`` is the (descriptor-clamped) first block, ``row0`` the chunk's
+    first word row.  Descriptor refs live in SMEM and tolerate reads up to
+    DESC_PAD blocks past the live block range — padding descriptors decode
+    to all-INVALID rows, exactly what the raw layout's INVALID fill reads.
+    """
+    out = []
+    for k in range(n_span):
+        bk = b0c + k
+        rel = woff_ref[bk] - row0 * LANES
+        out.append(_decode_block(chunk, base_ref[bk], meta_ref[bk], rel))
+    return jnp.concatenate(out, axis=0)
+
+
+def _packed_flat_map(start_idx, n_idx, woff_idx, n_blocks, rows_w, chunk_rows):
+    """Packed twin of :func:`_streamed_flat_map`: walks the *word* chunks
+    holding the probe tiles' blocks.  Same skip/coalesce behavior (inert
+    steps pin to block 0's chunk); the kernel recomputes the identical
+    b0c/row0 so the decoded tile always matches the chunk this map DMA'd.
+    """
+
+    def b_map(q, i, t, j, *refs):
+        nb = refs[n_idx][q, t, i]
+        jj = jnp.minimum(j, jnp.maximum(nb - 1, 0))
+        tile = jnp.where(nb == 0, 0, refs[start_idx][q, t, i] + jj)
+        b0c = jnp.minimum(tile * (TILE // BLOCK), n_blocks)
+        return (_packed_row0(refs[woff_idx], b0c, rows_w, chunk_rows), 0)
+
+    return b_map
+
+
+def _packed_driver_map(info_idx, woff_idx, n_blocks, rows_w, chunk_rows):
+    """Packed twin of :func:`_driver_window_map`: the word chunk holding
+    driver tile i's blocks (``a_info[q, 0]`` is the window's first block —
+    BLOCK-aligned list offsets make row and block indices coincide)."""
+
+    def ad_map(q, i, t, j, *refs):
+        b0c = jnp.minimum(
+            refs[info_idx][q, 0] + i * (TILE // BLOCK), n_blocks
+        )
+        return (_packed_row0(refs[woff_idx], b0c, rows_w, chunk_rows), 0)
+
+    return ad_map
 
 
 def compute_skip_map(
@@ -578,14 +689,32 @@ def _tile_positions(tile_id):
     return tile_id * TILE + r * LANES + c
 
 
-def _streamed_kernel(*refs, t_slots: int, s_max: int, has_delta: bool):
+def _streamed_kernel(
+    *refs, t_slots: int, s_max: int, has_delta: bool,
+    packed_m=None, packed_d=None,
+):
+    # packed_m / packed_d: static (n_blocks, rows_w, chunk_rows) triples
+    # when the corresponding stream is block-codec packed (the operand is
+    # then a word chunk decoded below), None when it streams raw tiles.
+    packed = packed_m is not None
     if has_delta:
-        (bt_ref, nb_ref, mb_ref, dt_ref, nd_ref, db_ref, act_ref, attr_ref,
-         a_ref, aa_ref, al_ref, af_ref, pm_ref, pd_ref,
-         out_ref, mm_ref, md_ref) = refs
+        if packed:
+            (bt_ref, nb_ref, mb_ref, dt_ref, nd_ref, db_ref, act_ref,
+             attr_ref, mba_ref, mme_ref, mwo_ref, dba_ref, dme_ref, dwo_ref,
+             a_ref, aa_ref, al_ref, af_ref, pm_ref, pd_ref,
+             out_ref, mm_ref, md_ref) = refs
+        else:
+            (bt_ref, nb_ref, mb_ref, dt_ref, nd_ref, db_ref, act_ref,
+             attr_ref, a_ref, aa_ref, al_ref, af_ref, pm_ref, pd_ref,
+             out_ref, mm_ref, md_ref) = refs
     else:
-        (bt_ref, nb_ref, mb_ref, act_ref, attr_ref,
-         a_ref, aa_ref, al_ref, pm_ref, out_ref, mm_ref) = refs
+        if packed:
+            (bt_ref, nb_ref, mb_ref, act_ref, attr_ref,
+             mba_ref, mme_ref, mwo_ref,
+             a_ref, aa_ref, al_ref, pm_ref, out_ref, mm_ref) = refs
+        else:
+            (bt_ref, nb_ref, mb_ref, act_ref, attr_ref,
+             a_ref, aa_ref, al_ref, pm_ref, out_ref, mm_ref) = refs
     q = pl.program_id(0)
     i = pl.program_id(1)
     t = pl.program_id(2)
@@ -601,22 +730,39 @@ def _streamed_kernel(*refs, t_slots: int, s_max: int, has_delta: bool):
         if has_delta:
             md_ref[...] = jnp.zeros_like(md_ref)
 
-    def _probe(start_ref, n_ref, bounds_ref, tile_arr_ref, member_ref):
+    def _probe(start_ref, n_ref, bounds_ref, tile_arr_ref, member_ref,
+               desc=None):
         # Posting skipping: only tiles inside the precomputed overlap range
         # are compared (and, on TPU, DMA'd — see the index maps).  The tile
         # is range-masked to the term's logical window so postings of
         # neighboring lists sharing the tile can never produce a match.
         @pl.when(j < n_ref[q, t, i])
         def _():
-            pos = _tile_positions(start_ref[q, t, i] + j)
+            tile = start_ref[q, t, i] + j
+            if desc is None:
+                b = tile_arr_ref[...]
+            else:
+                # Packed stream: the operand is a word chunk; decode its
+                # TILE/BLOCK blocks here, recomputing the index map's
+                # exact b0c/row0 (j < n_b implies jj == j in the map).
+                base_ref, meta_ref, woff_ref, (nbk, rows_w, cr) = desc
+                b0c = jnp.minimum(tile * (TILE // BLOCK), nbk)
+                row0 = _packed_row0(woff_ref, b0c, rows_w, cr)
+                b = _decode_span(
+                    tile_arr_ref[...], base_ref, meta_ref, woff_ref,
+                    b0c, row0, TILE_ROWS,
+                )
+            pos = _tile_positions(tile)
             in_range = (pos >= bounds_ref[q, t, 0]) & (pos < bounds_ref[q, t, 1])
-            b = jnp.where(in_range, tile_arr_ref[...], INVALID_DOC)
+            b = jnp.where(in_range, b, INVALID_DOC)
             m = _tile_member(a_ref[0], b)
             member_ref[...] = member_ref[...] | m.astype(jnp.int32)
 
-    _probe(bt_ref, nb_ref, mb_ref, pm_ref, mm_ref)
+    _probe(bt_ref, nb_ref, mb_ref, pm_ref, mm_ref,
+           desc=(mba_ref, mme_ref, mwo_ref, packed_m) if packed else None)
     if has_delta:
-        _probe(dt_ref, nd_ref, db_ref, pd_ref, md_ref)
+        _probe(dt_ref, nd_ref, db_ref, pd_ref, md_ref,
+               desc=(dba_ref, dme_ref, dwo_ref, packed_d) if packed else None)
 
     # End of this term's sweep: AND the term's membership into the mask.
     @pl.when(j == s_max - 1)
@@ -665,6 +811,8 @@ def intersect_batched_streamed(
     d_block_max: jnp.ndarray | None = None,
     a_flags: jnp.ndarray | None = None,      # int32[Q, W] driver doc_flags
     *,
+    packed: PackedFlatArrays | None = None,    # block-codec main postings
+    d_packed: PackedFlatArrays | None = None,  # block-codec delta postings
     s_max: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
@@ -680,9 +828,17 @@ def intersect_batched_streamed(
     Passing the delta arrays (``d_*`` + ``a_flags``, all or none) turns on
     merge-on-read: each term is probed against main *and* delta streams
     and the driver posting's tombstone flags decide which probe counts.
-    Returns int32[Q, W] in {0, 1}.
+
+    Passing ``packed`` (and ``d_packed`` whenever the delta arrays are
+    given) switches the probe streams to the block codec: HBM serves
+    (chunk_rows, 128) packed-word chunks instead of raw tiles, decoded in
+    VMEM right after the DMA — same skip ranges, same results, ~3-4x
+    fewer posting bytes moved.  Returns int32[Q, W] in {0, 1}.
     """
     has_delta = d_postings is not None
+    use_packed = packed is not None
+    if use_packed and has_delta and d_packed is None:
+        raise ValueError("packed codec needs d_packed when delta arrays are given")
     q_n, n_a = a_docs.shape
     window = n_a
     t_slots = terms.shape[1]
@@ -735,18 +891,54 @@ def intersect_batched_streamed(
         operands.append(af2)
         pd2 = d_postings.reshape(num_d * TILE_ROWS, LANES)
     scalars += [active, attr_params]
+    # Block-codec descriptors append at the END of the prefetch list so
+    # every raw-mode scalar keeps its ref index in the maps and kernel.
+    pk_m = pk_d = None
+    if use_packed:
+        woff_m_idx = len(scalars) + 2
+        scalars += [packed.blk_base, packed.blk_meta, packed.blk_woff]
+        if has_delta:
+            woff_d_idx = len(scalars) + 2
+            scalars += [d_packed.blk_base, d_packed.blk_meta, d_packed.blk_woff]
     n_scalars = len(scalars)
 
     in_specs = [
         pl.BlockSpec((1, TILE_ROWS, LANES), _batched_a_map) for _ in operands
-    ] + [pl.BlockSpec((TILE_ROWS, LANES), _streamed_flat_map(0, 1, num_m))]
-    operands.append(pm2)
+    ]
+    if use_packed:
+        words_m = packed.words.reshape(-1, LANES)
+        pk_m = (packed.n_blocks, words_m.shape[0], packed.chunk_rows)
+        in_specs.append(
+            pl.BlockSpec(
+                (packed.chunk_rows, LANES),
+                _packed_flat_map(0, 1, woff_m_idx, *pk_m),
+                indexing_mode=pl.unblocked,
+            )
+        )
+        operands.append(words_m)
+    else:
+        in_specs.append(
+            pl.BlockSpec((TILE_ROWS, LANES), _streamed_flat_map(0, 1, num_m))
+        )
+        operands.append(pm2)
     scratch = [pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)]
     if has_delta:
-        in_specs.append(
-            pl.BlockSpec((TILE_ROWS, LANES), _streamed_flat_map(3, 4, num_d))
-        )
-        operands.append(pd2)
+        if use_packed:
+            words_d = d_packed.words.reshape(-1, LANES)
+            pk_d = (d_packed.n_blocks, words_d.shape[0], d_packed.chunk_rows)
+            in_specs.append(
+                pl.BlockSpec(
+                    (d_packed.chunk_rows, LANES),
+                    _packed_flat_map(3, 4, woff_d_idx, *pk_d),
+                    indexing_mode=pl.unblocked,
+                )
+            )
+            operands.append(words_d)
+        else:
+            in_specs.append(
+                pl.BlockSpec((TILE_ROWS, LANES), _streamed_flat_map(3, 4, num_d))
+            )
+            operands.append(pd2)
         scratch.append(pltpu.VMEM((TILE_ROWS, LANES), jnp.int32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -759,7 +951,7 @@ def intersect_batched_streamed(
     out = pl.pallas_call(
         functools.partial(
             _streamed_kernel, t_slots=t_slots, s_max=s_grid,
-            has_delta=has_delta,
+            has_delta=has_delta, packed_m=pk_m, packed_d=pk_d,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(
@@ -794,38 +986,68 @@ def intersect_batched_streamed(
 # *output* (the candidate set top-k selects from), never as input staging.
 
 
-def _driver_streamed_kernel(
-    # scalar-prefetch (SMEM):
-    bt_ref,     # int32[Q, T, num_a]  first overlapping B tile
-    nb_ref,     # int32[Q, T, num_a]  B tiles to stream (0 = inert)
-    mb_ref,     # int32[Q, T, 2]      logical [lo, hi) bounds per term
-    act_ref,    # int32[Q, T]         1 iff slot t joins query q
-    attr_ref,   # int32[Q, 2]         [attr_filter, attr_enabled]
-    ainfo_ref,  # int32[Q, 2]         [driver row0, driver n_eff]
-    # VMEM:
-    ad_ref,     # (8,128) driver docID tile (unblocked stream)
-    aa_ref,     # (8,128) driver attr tile (unblocked stream)
-    pm_ref,     # (8,128) current other-term tile
-    # outputs:
-    outd_ref,   # (1,8,128) driver docIDs (window-aligned, INVALID past n_eff)
-    outm_ref,   # (1,8,128) int32 final mask (AND over terms)
-    # scratch:
-    mm_ref,     # (8,128) per-term OR accumulator
-    *,
-    t_slots: int,
-    s_max: int,
-):
+def _driver_streamed_kernel(*refs, t_slots: int, s_max: int, packed=None):
+    # Refs (raw mode), in order:
+    #   scalar-prefetch (SMEM):
+    #     bt_ref     int32[Q, T, num_a]  first overlapping B tile
+    #     nb_ref     int32[Q, T, num_a]  B tiles to stream (0 = inert)
+    #     mb_ref     int32[Q, T, 2]      logical [lo, hi) bounds per term
+    #     act_ref    int32[Q, T]         1 iff slot t joins query q
+    #     attr_ref   int32[Q, 2]         [attr_filter, attr_enabled]
+    #     ainfo_ref  int32[Q, 2]         [driver row0, driver n_eff]
+    #   VMEM:
+    #     ad_ref     (8,128) driver docID tile (unblocked stream)
+    #     aa_ref     (8,128) driver attr tile (unblocked stream)
+    #     pm_ref     (8,128) current other-term tile
+    #   outputs:
+    #     outd_ref   (1,8,128) driver docIDs (window-aligned, INVALID past n_eff)
+    #     outm_ref   (1,8,128) int32 final mask (AND over terms)
+    #   scratch:
+    #     mm_ref     (8,128) per-term OR accumulator
+    # Packed mode (``packed`` = static (n_blocks, rows_w, chunk_rows)):
+    # the main-postings descriptors (base, meta, woff) follow ainfo_ref in
+    # SMEM; ad_ref/pm_ref become word chunks decoded below (attrs stay
+    # raw); adk_ref, an extra (8,128) scratch, caches the decoded driver
+    # tile across the (t, j) sweep of each (q, i).
+    if packed is not None:
+        (bt_ref, nb_ref, mb_ref, act_ref, attr_ref, ainfo_ref,
+         mba_ref, mme_ref, mwo_ref,
+         ad_ref, aa_ref, pm_ref, outd_ref, outm_ref,
+         mm_ref, adk_ref) = refs
+        nbk, rows_w, cr = packed
+    else:
+        (bt_ref, nb_ref, mb_ref, act_ref, attr_ref, ainfo_ref,
+         ad_ref, aa_ref, pm_ref, outd_ref, outm_ref, mm_ref) = refs
     q = pl.program_id(0)
     i = pl.program_id(1)
     t = pl.program_id(2)
     j = pl.program_id(3)
+
+    if packed is not None:
+        # Decode the driver tile once per (q, i) — (t, j) = (0, 0) is the
+        # first grid step for every (q, i); the scratch persists across
+        # the rest of the sweep like any accumulator.
+        @pl.when((t == 0) & (j == 0))
+        def _decode_driver():
+            b0c = jnp.minimum(
+                ainfo_ref[q, 0] + i * (TILE // BLOCK), nbk
+            )
+            row0 = _packed_row0(mwo_ref, b0c, rows_w, cr)
+            adk_ref[...] = _decode_span(
+                ad_ref[...], mba_ref, mme_ref, mwo_ref,
+                b0c, row0, TILE_ROWS,
+            )
+
+        a_src = adk_ref
+    else:
+        a_src = ad_ref
 
     # The driver tile, masked by *intended* window position: slots at or
     # past n_eff read INVALID no matter what the (possibly clamped) DMA
     # delivered.  Tiles are window-aligned, so tile i holds window
     # positions [i*TILE, (i+1)*TILE).
     in_win = _tile_positions(i) < ainfo_ref[q, 1]
-    a = jnp.where(in_win, ad_ref[...], INVALID_DOC)
+    a = jnp.where(in_win, a_src[...], INVALID_DOC)
 
     @pl.when((t == 0) & (j == 0))
     def _init_out():
@@ -840,9 +1062,19 @@ def _driver_streamed_kernel(
     # the precomputed overlap range are compared (or, on TPU, DMA'd).
     @pl.when(j < nb_ref[q, t, i])
     def _probe():
-        pos = _tile_positions(bt_ref[q, t, i] + j)
+        tile = bt_ref[q, t, i] + j
+        if packed is None:
+            b = pm_ref[...]
+        else:
+            b0c = jnp.minimum(tile * (TILE // BLOCK), nbk)
+            row0 = _packed_row0(mwo_ref, b0c, rows_w, cr)
+            b = _decode_span(
+                pm_ref[...], mba_ref, mme_ref, mwo_ref,
+                b0c, row0, TILE_ROWS,
+            )
+        pos = _tile_positions(tile)
         in_range = (pos >= mb_ref[q, t, 0]) & (pos < mb_ref[q, t, 1])
-        b = jnp.where(in_range, pm_ref[...], INVALID_DOC)
+        b = jnp.where(in_range, b, INVALID_DOC)
         m = _tile_member(a, b)
         mm_ref[...] = mm_ref[...] | m.astype(jnp.int32)
 
@@ -870,6 +1102,7 @@ def intersect_batched_driver_streamed(
     offsets: jnp.ndarray, lengths: jnp.ndarray, block_max: jnp.ndarray,
     *,
     window: int,
+    packed: PackedFlatArrays | None = None,  # block-codec main postings
     s_max: int | None = None,
     interpret: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -883,6 +1116,10 @@ def intersect_batched_driver_streamed(
     directly.  Driver-tile docID spans for the other-term probe plan come
     from the BLOCK skip table (:func:`driver_tile_spans`) — conservative,
     never lossy.
+
+    With ``packed``, both posting streams (driver window and other-term
+    probes) read block-codec word chunks instead of raw tiles and decode
+    in VMEM; the attrs stream stays raw (attributes don't gap-compress).
 
     Returns ``(docs, mask)``, both int32[Q, window]: the driver window as
     read by the kernel (INVALID_DOC past the live range) and the join mask
@@ -918,29 +1155,57 @@ def intersect_batched_driver_streamed(
     ad_map = _driver_window_map(rows_total, 5)
     b_map = _streamed_flat_map(0, 1, num_m)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
-        grid=(q_n, num_a, t_slots, s_grid),
-        in_specs=[
+    scalars = [b_tile, n_b, bounds, active, attr_params, a_info]
+    scratch = [pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)]
+    if packed is not None:
+        # Descriptors append after a_info (indices 6, 7, 8); both posting
+        # streams become packed-word chunks sharing one descriptor set.
+        scalars += [packed.blk_base, packed.blk_meta, packed.blk_woff]
+        words_m = packed.words.reshape(-1, LANES)
+        pk = (packed.n_blocks, words_m.shape[0], packed.chunk_rows)
+        chunk = (packed.chunk_rows, LANES)
+        in_specs = [
+            pl.BlockSpec(
+                chunk, _packed_driver_map(5, 8, *pk),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((TILE_ROWS, LANES), ad_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec(
+                chunk, _packed_flat_map(0, 1, 8, *pk),
+                indexing_mode=pl.unblocked,
+            ),
+        ]
+        operands = [words_m, pa2, words_m]
+        scratch.append(pltpu.VMEM((TILE_ROWS, LANES), jnp.int32))
+    else:
+        pk = None
+        in_specs = [
             pl.BlockSpec((TILE_ROWS, LANES), ad_map, indexing_mode=pl.unblocked),
             pl.BlockSpec((TILE_ROWS, LANES), ad_map, indexing_mode=pl.unblocked),
             pl.BlockSpec((TILE_ROWS, LANES), b_map),
-        ],
+        ]
+        operands = [pm2, pa2, pm2]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
+        grid=(q_n, num_a, t_slots, s_grid),
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, TILE_ROWS, LANES), _driver_out_map),
             pl.BlockSpec((1, TILE_ROWS, LANES), _driver_out_map),
         ],
-        scratch_shapes=[pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)],
+        scratch_shapes=scratch,
     )
     shape = jax.ShapeDtypeStruct((q_n, num_a * TILE_ROWS, LANES), jnp.int32)
     docs, mask = pl.pallas_call(
         functools.partial(
-            _driver_streamed_kernel, t_slots=t_slots, s_max=s_grid
+            _driver_streamed_kernel, t_slots=t_slots, s_max=s_grid,
+            packed=pk,
         ),
         grid_spec=grid_spec,
         out_shape=[shape, shape],
         interpret=interpret,
-    )(b_tile, n_b, bounds, active, attr_params, a_info, pm2, pa2, pm2)
+    )(*scalars, *operands)
     return (
         docs.reshape(q_n, -1)[:, :window],
         mask.reshape(q_n, -1)[:, :window],
@@ -1012,6 +1277,60 @@ def _streamed_flat_consumed(n_idx):
         return bool(j < refs[n_idx][q, t, i])
 
     return consumed
+
+
+def _packed_flat_intended(start_idx, woff_idx, n_blocks):
+    """Pre-rows-clamp address of :func:`_packed_flat_map` for consumed
+    steps (``jj == j`` whenever ``j < n_b``).  The descriptor clamp on
+    ``b0c`` stays — ``blk_woff`` really does end at ``n_blocks +
+    DESC_PAD``, and past-the-live-range chunks carry only zero fill —
+    so only the rows_w edge clamp is exposed to the checker, and
+    ``packed_word_pad`` guarantees it never engages."""
+
+    def b_map(q, i, t, j, *refs):
+        b0c = jnp.minimum(
+            (refs[start_idx][q, t, i] + j) * (TILE // BLOCK), n_blocks
+        )
+        return (refs[woff_idx][b0c] // LANES, 0)
+
+    return b_map
+
+
+def _packed_driver_intended(info_idx, woff_idx, n_blocks):
+    """Pre-rows-clamp address of :func:`_packed_driver_map` — contract
+    only (same descriptor-clamp caveat as :func:`_packed_flat_intended`)."""
+
+    def ad_map(q, i, t, j, *refs):
+        b0c = jnp.minimum(
+            refs[info_idx][q, 0] + i * (TILE // BLOCK), n_blocks
+        )
+        return (refs[woff_idx][b0c] // LANES, 0)
+
+    return ad_map
+
+
+def _packed_stream_op(
+    name, pk, start_idx, n_idx, woff_idx
+) -> "OperandContract":
+    """OperandContract of one packed-word probe stream: bounds in packed
+    words, ``intended_map`` in logical blocks via the descriptor table,
+    spare-tile per :func:`repro.core.index.packed_word_pad`."""
+    rows_w = pk.words.shape[0] // LANES
+    live_words = int(np.asarray(pk.blk_woff)[-1])
+    return OperandContract(
+        name,
+        (rows_w, LANES),
+        "int32",
+        (pk.chunk_rows, LANES),
+        _packed_flat_map(
+            start_idx, n_idx, woff_idx, pk.n_blocks, rows_w, pk.chunk_rows
+        ),
+        indexing_mode=UNBLOCKED,
+        intended_map=_packed_flat_intended(start_idx, woff_idx, pk.n_blocks),
+        consumed=_streamed_flat_consumed(n_idx),
+        padding_from=live_words,
+        spare_tile=True,
+    )
 
 
 def _attr_params(attr_filter: np.ndarray) -> np.ndarray:
@@ -1152,8 +1471,8 @@ def _contract_intersect_batched():
     )
 
 
-@kernel_contract("intersect_batched_streamed")
-def _contract_intersect_streamed():
+def _build_streamed_contract(use_packed: bool) -> KernelContract:
+    from repro.core.index import DESC_PAD, pack_flat_postings
     from repro.kernels.registry import synthetic_delta_arrays
 
     arrays, live = synthetic_flat_index(_CANON_LISTS)
@@ -1208,7 +1527,7 @@ def _contract_intersect_streamed():
     s_grid = max(s_grid, _clamp_s_max(None, s_tiles_d))
     n_d = np.minimum(np.asarray(n_d), s_grid) * active[:, :, None]
 
-    scalars = (
+    scalars = [
         np.asarray(b_tile),
         n_b,
         np.asarray(bounds_m),
@@ -1217,7 +1536,7 @@ def _contract_intersect_streamed():
         np.asarray(bounds_d),
         active,
         _attr_params(np.array([-1, -1], np.int32)),
-    )
+    ]
     blk_a = (1, TILE_ROWS, LANES)
     tile = (TILE_ROWS, LANES)
     a_shape = (q_n, num_a * TILE_ROWS, LANES)
@@ -1225,47 +1544,75 @@ def _contract_intersect_streamed():
         OperandContract(nm, a_shape, "int32", blk_a, _batched_a_map)
         for nm in ("a_docs", "a_attrs", "a_live", "a_flags")
     ]
-    ins.append(
-        OperandContract(
-            "postings",
-            (num_m * TILE_ROWS, LANES),
-            "int32",
-            tile,
-            _streamed_flat_map(0, 1, num_m),
-            intended_map=_streamed_flat_intended(0),
-            consumed=_streamed_flat_consumed(1),
-            padding_from=live,
+    if use_packed:
+        pk_m = pack_flat_postings(arrays["postings"])
+        pk_d = pack_flat_postings(
+            delta["d_postings"], span_blocks=max(DESC_PAD, cap // BLOCK)
         )
-    )
-    ins.append(
-        OperandContract(
-            "d_postings",
-            (num_d * TILE_ROWS, LANES),
-            "int32",
-            tile,
-            _streamed_flat_map(3, 4, num_d),
-            intended_map=_streamed_flat_intended(3),
-            consumed=_streamed_flat_consumed(4),
-            padding_from=int(cap * d_off.shape[0]),
+        woff_m, woff_d = 10, 13
+        for pk in (pk_m, pk_d):
+            scalars += [
+                np.asarray(pk.blk_base),
+                np.asarray(pk.blk_meta),
+                np.asarray(pk.blk_woff),
+            ]
+        ins.append(_packed_stream_op("packed_words(main)", pk_m, 0, 1, woff_m))
+        ins.append(_packed_stream_op("packed_words(delta)", pk_d, 3, 4, woff_d))
+    else:
+        ins.append(
+            OperandContract(
+                "postings",
+                (num_m * TILE_ROWS, LANES),
+                "int32",
+                tile,
+                _streamed_flat_map(0, 1, num_m),
+                intended_map=_streamed_flat_intended(0),
+                consumed=_streamed_flat_consumed(1),
+                padding_from=live,
+            )
         )
-    )
+        ins.append(
+            OperandContract(
+                "d_postings",
+                (num_d * TILE_ROWS, LANES),
+                "int32",
+                tile,
+                _streamed_flat_map(3, 4, num_d),
+                intended_map=_streamed_flat_intended(3),
+                consumed=_streamed_flat_consumed(4),
+                padding_from=int(cap * d_off.shape[0]),
+            )
+        )
+    suffix = "_packed" if use_packed else ""
     return KernelContract(
-        name="intersect_batched_streamed",
+        name="intersect_batched_streamed" + suffix,
         site=site_of(intersect_batched_streamed),
         grid=(q_n, num_a, t_slots, s_grid),
-        scalars=scalars,
+        scalars=tuple(scalars),
         inputs=tuple(ins),
         outputs=(
             OperandContract("mask", a_shape, "int32", blk_a, _batched_a_map),
         ),
         scratch=(((TILE_ROWS, LANES), "int32"), ((TILE_ROWS, LANES), "int32")),
         revisit_dims=(2, 3),
-        notes="merge-on-read configuration (main + delta streams)",
+        notes="merge-on-read configuration (main + delta streams)"
+        + (", block-codec probe streams" if use_packed else ""),
     )
 
 
-@kernel_contract("intersect_batched_driver_streamed")
-def _contract_driver_streamed():
+@kernel_contract("intersect_batched_streamed")
+def _contract_intersect_streamed():
+    return _build_streamed_contract(False)
+
+
+@kernel_contract("intersect_batched_streamed_packed")
+def _contract_intersect_streamed_packed():
+    return _build_streamed_contract(True)
+
+
+def _build_driver_streamed_contract(use_packed: bool) -> KernelContract:
+    from repro.core.index import pack_flat_postings
+
     arrays, live = synthetic_flat_index(_CANON_LISTS)
     offsets = arrays["offsets"]
     lengths = arrays["lengths"]
@@ -1300,14 +1647,14 @@ def _contract_driver_streamed():
     s_grid = _clamp_s_max(None, s_tiles_b)
     n_b = np.minimum(np.asarray(n_b), s_grid) * active[:, :, None]
     a_info = np.stack([d_off // LANES, d_neff], axis=-1).astype(np.int32)
-    scalars = (
+    scalars = [
         np.asarray(b_tile),
         n_b,
         np.asarray(bounds),
         active,
         _attr_params(np.array([-1, -1], np.int32)),
         a_info,
-    )
+    ]
 
     def ad_consumed(q, i, t, j, *refs):
         return bool(i * TILE < refs[5][q, 1])
@@ -1322,46 +1669,94 @@ def _contract_driver_streamed():
         padding_from=live,
         spare_tile=True,
     )
-    ins = (
-        OperandContract(
-            "postings(driver)",
-            flat_shape,
-            "int32",
-            tile,
-            _driver_window_map(rows_total, 5),
-            **stream_kw,
-        ),
-        OperandContract(
-            "attrs(driver)",
-            flat_shape,
-            "int32",
-            tile,
-            _driver_window_map(rows_total, 5),
-            **stream_kw,
-        ),
-        OperandContract(
-            "postings(probe)",
-            flat_shape,
-            "int32",
-            tile,
-            _streamed_flat_map(0, 1, num_m),
-            intended_map=_streamed_flat_intended(0),
-            consumed=_streamed_flat_consumed(1),
-            padding_from=live,
-        ),
-    )
+    if use_packed:
+        pk = pack_flat_postings(arrays["postings"])
+        scalars += [
+            np.asarray(pk.blk_base),
+            np.asarray(pk.blk_meta),
+            np.asarray(pk.blk_woff),
+        ]
+        rows_w = pk.words.shape[0] // LANES
+        live_words = int(np.asarray(pk.blk_woff)[-1])
+        ins = (
+            OperandContract(
+                "packed_words(driver)",
+                (rows_w, LANES),
+                "int32",
+                (pk.chunk_rows, LANES),
+                _packed_driver_map(5, 8, pk.n_blocks, rows_w, pk.chunk_rows),
+                indexing_mode=UNBLOCKED,
+                intended_map=_packed_driver_intended(5, 8, pk.n_blocks),
+                consumed=ad_consumed,
+                padding_from=live_words,
+                spare_tile=True,
+            ),
+            OperandContract(
+                "attrs(driver)",
+                flat_shape,
+                "int32",
+                tile,
+                _driver_window_map(rows_total, 5),
+                **stream_kw,
+            ),
+            _packed_stream_op("packed_words(probe)", pk, 0, 1, 8),
+        )
+    else:
+        ins = (
+            OperandContract(
+                "postings(driver)",
+                flat_shape,
+                "int32",
+                tile,
+                _driver_window_map(rows_total, 5),
+                **stream_kw,
+            ),
+            OperandContract(
+                "attrs(driver)",
+                flat_shape,
+                "int32",
+                tile,
+                _driver_window_map(rows_total, 5),
+                **stream_kw,
+            ),
+            OperandContract(
+                "postings(probe)",
+                flat_shape,
+                "int32",
+                tile,
+                _streamed_flat_map(0, 1, num_m),
+                intended_map=_streamed_flat_intended(0),
+                consumed=_streamed_flat_consumed(1),
+                padding_from=live,
+            ),
+        )
     blk_o = (1, TILE_ROWS, LANES)
+    scratch = [((TILE_ROWS, LANES), "int32")]
+    if use_packed:
+        scratch.append(((TILE_ROWS, LANES), "int32"))
+    suffix = "_packed" if use_packed else ""
     return KernelContract(
-        name="intersect_batched_driver_streamed",
+        name="intersect_batched_driver_streamed" + suffix,
         site=site_of(intersect_batched_driver_streamed),
         grid=(q_n, num_a, t_slots, s_grid),
-        scalars=scalars,
+        scalars=tuple(scalars),
         inputs=ins,
         outputs=(
             OperandContract("docs", out_shape, "int32", blk_o, _driver_out_map),
             OperandContract("mask", out_shape, "int32", blk_o, _driver_out_map),
         ),
-        scratch=(((TILE_ROWS, LANES), "int32"),),
+        scratch=tuple(scratch),
         revisit_dims=(2, 3),
-        notes="fully-streamed read path: unblocked driver window stream",
+        notes="fully-streamed read path: unblocked driver window stream"
+        + (", block-codec posting streams" if use_packed else ""),
     )
+
+
+@kernel_contract("intersect_batched_driver_streamed")
+def _contract_driver_streamed():
+    return _build_driver_streamed_contract(False)
+
+
+@kernel_contract("intersect_batched_driver_streamed_packed")
+def _contract_driver_streamed_packed():
+    return _build_driver_streamed_contract(True)

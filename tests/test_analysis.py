@@ -5,8 +5,13 @@ import pytest
 from repro.analysis import check_all, check_contract
 from repro.analysis.__main__ import main as analysis_main
 from repro.analysis.blockspec import vmem_bytes
-from repro.analysis.fixtures import broken_contracts
-from repro.analysis.lint import lint_file, lint_tree, default_root
+from repro.analysis.fixtures import broken_contracts, broken_lint_sources
+from repro.analysis.lint import (
+    lint_file,
+    lint_source,
+    lint_tree,
+    default_root,
+)
 from repro.core import index as core_index
 from repro.kernels import registry
 
@@ -16,9 +21,12 @@ EXPECTED_KERNELS = {
     "flash_attention_fwd",
     "intersect_batched_block_skip",
     "intersect_batched_driver_streamed",
+    "intersect_batched_driver_streamed_packed",
     "intersect_batched_streamed",
+    "intersect_batched_streamed_packed",
     "intersect_block_skip",
     "merge_delta_windows",
+    "merge_delta_windows_packed",
     "merge_topk_rows",
 }
 
@@ -167,6 +175,70 @@ def test_lint_flags_posting_gather_in_kernels_only(tmp_path):
         "    return jnp.take(offsets, idx)\n"
     )
     assert lint_file(str(p2), "repro/kernels/k2.py") == []
+
+
+def test_lint_flags_adhoc_posting_alloc():
+    bad = (
+        "import numpy as np\n"
+        "def build(n):\n"
+        "    postings = np.full(n * 1024, -1, dtype=np.int32)\n"
+    )
+    findings = lint_source(bad, "repro/indexing/bad.py")
+    assert [f.rule for f in findings] == ["posting-alloc"]
+    assert findings[0].line == 3
+    # the layout layer itself is the one place allowed to do this
+    assert lint_source(bad, "repro/core/index.py") == []
+
+
+def test_lint_posting_alloc_pad_derived_sizes_pass():
+    ok = (
+        "import numpy as np\n"
+        "from repro.core.index import flat_tile_pad, packed_word_pad\n"
+        "def build(n, w, cr):\n"
+        "    flat_len = flat_tile_pad(n)\n"
+        "    postings = np.full(flat_len, -1, dtype=np.int32)\n"
+        "    attrs = np.full(flat_tile_pad(n), -1, dtype=np.int32)\n"
+        "    rows = packed_word_pad(w, cr) // 128\n"
+        "    packed_postings = np.zeros((rows, 128), dtype=np.int32)\n"
+    )
+    assert lint_source(ok, "repro/indexing/ok.py") == []
+
+
+def test_lint_posting_alloc_keyword_form_and_pragma():
+    bad_kw = (
+        "import numpy as np\n"
+        "def build(shard, n):\n"
+        "    return shard._replace(attrs=np.zeros(n, dtype=np.int32))\n"
+    )
+    findings = lint_source(bad_kw, "repro/indexing/kw.py")
+    assert [f.rule for f in findings] == ["posting-alloc"]
+    pragma = (
+        "import numpy as np\n"
+        "def build(shard, n):\n"
+        "    # lint: allow(posting-alloc) — host mirror, different layout\n"
+        "    return shard._replace(attrs=np.zeros(n, dtype=np.int32))\n"
+    )
+    assert lint_source(pragma, "repro/indexing/kw.py") == []
+
+
+def test_lint_posting_alloc_ignores_scalar_attr_filters():
+    # a query batch's per-query attr filter is not posting payload
+    ok = (
+        "import numpy as np\n"
+        "def make_batch(q):\n"
+        "    attr = np.full(q, -1, dtype=np.int32)\n"
+    )
+    assert lint_source(ok, "repro/core/engine_like.py") == []
+
+
+@pytest.mark.parametrize(
+    "name,rel,source,expected",
+    broken_lint_sources(),
+    ids=[n for n, _, _, _ in broken_lint_sources()],
+)
+def test_lint_fixture_rejected(name, rel, source, expected):
+    findings = lint_source(source, rel)
+    assert [f.rule for f in findings] == [expected], name
 
 
 def test_lint_flags_hardcoded_interpret(tmp_path):

@@ -1,0 +1,324 @@
+"""Block-codec acceptance: per-BLOCK delta + bit-pack round-trip (host
+and device), TILE-edge and layout invariants (spare packed chunk), and
+packed-vs-raw engine bit-parity across fills, windows, backends, ns=2
+striping, and the compaction re-pack flow."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.engine import make_query_batch, query_topk
+from repro.core.index import (
+    BLOCK,
+    INVALID_DOC,
+    PACK_WIDTHS,
+    build_index,
+    flat_tile_pad,
+    pack_flat_postings,
+    pack_index,
+    packed_word_pad,
+    partition_corpus,
+    unpack_flat_postings,
+    unpack_flat_postings_jnp,
+)
+from repro.core.parallel import sequential_reference
+from repro.data.corpus import (
+    CorpusConfig,
+    MutationConfig,
+    apply_mutations,
+    generate_corpus,
+    generate_mutations,
+)
+from repro.indexing import DeltaWriter, compact
+from repro.kernels.registry import synthetic_flat_index
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # seeded fallback loop below covers the same space
+    HAVE_HYPOTHESIS = False
+
+WINDOWS = (128, 256, 512, 1000, 1024, 1536, 2048)
+FILLS = (0.0, 0.5, 1.0)
+
+QUERIES = [
+    ([3], None),
+    ([3, 9], None),
+    ([1, 4, 12], None),
+    ([2], 3),
+    ([5, 8], 1),
+    ([140], None),
+    ([0, 7], 5),
+]
+
+
+def _flat_from_docs(docs) -> np.ndarray:
+    """A valid single-list flat layout: docs as a BLOCK-prefix run from
+    offset 0, INVALID fill through flat_tile_pad."""
+    docs = np.asarray(docs, np.int32)
+    flat = np.full(flat_tile_pad(docs.size), INVALID_DOC, np.int32)
+    flat[: docs.size] = docs
+    return flat
+
+
+def _roundtrip(flat, **kw):
+    """pack -> unpack must be bit-exact on both decode paths."""
+    pk = pack_flat_postings(flat, **kw)
+    np.testing.assert_array_equal(unpack_flat_postings(pk), flat)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_flat_postings_jnp(pk)), flat
+    )
+    return pk
+
+
+def _assert_packed_invariants(pk):
+    # the packed-space spare-tile contract: a full chunk read from the
+    # last live word row stays inside the zero-filled padding
+    assert pk.padding().spare_tile_ok(pk.chunk_rows * BLOCK)
+    assert pk.words.shape[0] == packed_word_pad(
+        int(np.asarray(pk.blk_woff)[-1]), pk.chunk_rows
+    )
+    assert pk.chunk_rows % 8 == 0  # int32 sublane alignment
+    # padding blocks pack to zero words: woff constant past the live range
+    woff = np.asarray(pk.blk_woff)
+    assert woff[pk.n_blocks] == woff[-1]
+
+
+# ------------------------------------------------------------ round-trip --
+@pytest.mark.parametrize("width", PACK_WIDTHS)
+def test_width_selection_and_roundtrip(width):
+    """Each bit-width bucket is selected by its max gap and round-trips."""
+    gap = 0 if width == 0 else min((1 << width) - 1, 70_000)
+    docs = 7 + gap * np.arange(130, dtype=np.int64)  # spans 2 blocks
+    pk = _roundtrip(_flat_from_docs(docs.astype(np.int32)))
+    meta = np.asarray(pk.blk_meta)
+    assert meta[0] & 63 == width          # full block: the bucket itself
+    _assert_packed_invariants(pk)
+
+
+@pytest.mark.parametrize(
+    "n", [0, 1, 127, 128, 129, 1023, 1024, 1025, 2047, 2048]
+)
+def test_tile_edge_sizes_roundtrip(n):
+    """Sizes straddling BLOCK and TILE boundaries, including empty."""
+    rng = np.random.default_rng(n)
+    docs = np.cumsum(rng.integers(1, 9, size=n)).astype(np.int32)
+    pk = _roundtrip(_flat_from_docs(docs))
+    assert pk.n_blocks == flat_tile_pad(n) // BLOCK
+    _assert_packed_invariants(pk)
+
+
+def test_multi_list_roundtrip_and_span_blocks():
+    """CSR layout through the real builder; a wider span_blocks (delta
+    slab shape) only grows the chunk, never changes the decode."""
+    arrays, _live = synthetic_flat_index((150, 100, 90, 0, 5))
+    flat = arrays["postings"]
+    pk8 = _roundtrip(flat)
+    pk32 = _roundtrip(flat, span_blocks=32)
+    assert pk32.chunk_rows >= pk8.chunk_rows
+    _assert_packed_invariants(pk8)
+    _assert_packed_invariants(pk32)
+
+
+def test_pack_rejects_invalid_layouts():
+    with pytest.raises(ValueError):    # not TILE-padded
+        pack_flat_postings(np.zeros(100, np.int32))
+    hole = _flat_from_docs(np.arange(10, dtype=np.int32))
+    hole[4] = INVALID_DOC              # valid postings after an INVALID
+    with pytest.raises(ValueError):
+        pack_flat_postings(hole)
+    descending = _flat_from_docs(np.array([9, 5, 1], np.int32))
+    with pytest.raises(ValueError):
+        pack_flat_postings(descending)
+
+
+def _random_roundtrip_case(seed: int):
+    rng = np.random.default_rng(seed)
+    if rng.random() < 0.5:
+        # CSR multi-list through the real builder
+        lens = rng.integers(0, 260, size=rng.integers(1, 6))
+        flat = synthetic_flat_index(tuple(int(x) for x in lens))[0][
+            "postings"
+        ]
+    else:
+        # single list with gap magnitudes spanning every width bucket
+        n = int(rng.integers(0, 700))
+        mags = rng.choice([1, 3, 15, 255, 65_535, 1 << 20], size=n)
+        gaps = rng.integers(0, mags + 1)
+        flat = _flat_from_docs(np.cumsum(gaps).astype(np.int32))
+    _assert_packed_invariants(_roundtrip(flat))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_roundtrip_property(seed):
+        _random_roundtrip_case(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_roundtrip_property(seed):
+        _random_roundtrip_case(seed)
+
+
+# --------------------------------------------------------- engine parity --
+@pytest.fixture(scope="module")
+def setup():
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=400, vocab_size=150, mean_doc_len=25,
+                     n_sites=10, seed=13)
+    )
+    idx, meta = build_index(corpus, codec="packed")
+    assert idx.packed is not None
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    return corpus, meta, idx, qb
+
+
+def _writer_at_fill(corpus, meta, target, *, ns=1, seed=5):
+    """Packed writer whose hottest delta list sits at ``target`` fill,
+    with tombstones from both deletes and updates in the stream."""
+    rng = np.random.default_rng(seed)
+    w = DeltaWriter(corpus, meta, ns=ns, term_capacity=256,
+                    doc_headroom=1024, codec="packed")
+    w.delete_docs([int(d) for d in rng.choice(corpus.n_docs, 6,
+                                              replace=False)])
+    w.update_docs([
+        (int(d), np.unique(rng.integers(0, 40, size=10)),
+         int(rng.integers(10)))
+        for d in rng.choice(np.arange(200, 260), 6, replace=False)
+    ])
+    while w.posting_fill() < target:
+        terms = np.unique(rng.integers(0, 24, size=20))
+        w.insert_docs([(terms, int(rng.integers(10)))])
+    return w
+
+
+def _assert_equal(got, want, ctx):
+    np.testing.assert_array_equal(
+        np.asarray(got[0]), np.asarray(want[0]), err_msg=str(ctx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got[1]), np.asarray(want[1]), err_msg=str(ctx)
+    )
+
+
+def _parity_at(idx, delta, qb, *, window, backend):
+    """Packed result == raw result, same backend, same window."""
+    interpret = True if backend == "pallas" else None
+    want = query_topk(idx, qb, delta=delta, k=10, window=window,
+                      backend=backend, interpret=interpret, codec="raw")
+    got = query_topk(idx, qb, delta=delta, k=10, window=window,
+                     backend=backend, interpret=interpret, codec="packed")
+    _assert_equal(got, want, (backend, window))
+
+
+@pytest.mark.parametrize("window", WINDOWS)
+def test_packed_parity_jnp_window_sweep(setup, window):
+    """Full window sweep x all fills on the jnp backend (device decode):
+    the codec itself is bit-transparent to the engine."""
+    corpus, meta, idx, qb = setup
+    _parity_at(idx, None, qb, window=window, backend="jnp")
+    for fill in FILLS:
+        w = _writer_at_fill(corpus, meta, fill)
+        delta = w.shard_deltas()[0]
+        _parity_at(idx, delta, qb, window=window, backend="jnp")
+
+
+@pytest.mark.parametrize("window", WINDOWS)
+def test_packed_parity_pallas_window_sweep(setup, window):
+    """Full window sweep on the pallas backend at full delta fill — the
+    in-kernel VMEM decode path across main, delta, and driver streams."""
+    corpus, meta, idx, qb = setup
+    w = _writer_at_fill(corpus, meta, 1.0)
+    delta = w.shard_deltas()[0]
+    _parity_at(idx, delta, qb, window=window, backend="pallas")
+
+
+@pytest.mark.parametrize("fill", FILLS)
+def test_packed_parity_pallas_fills(setup, fill):
+    """All fill levels through the pallas in-kernel decode (tombstones
+    from deletes + updates included by construction)."""
+    corpus, meta, idx, qb = setup
+    w = _writer_at_fill(corpus, meta, fill)
+    delta = w.shard_deltas()[0]
+    _parity_at(idx, delta, qb, window=1024, backend="pallas")
+    _parity_at(idx, None, qb, window=1024, backend="pallas")
+
+
+@pytest.mark.parametrize("backend", ("jnp", "pallas"))
+def test_packed_multi_shard_striped_parity(setup, backend):
+    """ns=2 striping: per-shard packed merge-on-read + global merge ==
+    the raw pipeline over the same shards."""
+    corpus, meta, _, qb = setup
+    ns = 2
+    w = _writer_at_fill(corpus, meta, 0.5, ns=ns)
+    shards = [pack_index(build_index(p)[0])
+              for p in partition_corpus(corpus, ns)]
+    deltas = w.shard_deltas()
+    assert all(d.packed is not None for d in deltas)
+    interpret = True if backend == "pallas" else None
+    kw = dict(ns=ns, k=10, window=1024, deltas=deltas, backend=backend,
+              interpret=interpret)
+    got = sequential_reference(shards, qb, codec="packed", **kw)
+    want = sequential_reference(shards, qb, codec="raw", **kw)
+    _assert_equal(got, want, ("striped", backend))
+
+
+@pytest.mark.parametrize("backend", ("jnp", "pallas"))
+def test_packed_compaction_repack_parity(setup, backend):
+    """Fold + rebuild re-enters the codec through pack_index; the packed
+    compacted index answers like a raw from-scratch rebuild."""
+    corpus, meta, _, qb = setup
+    w = _writer_at_fill(corpus, meta, 1.0)
+    mutated = w.mutated_corpus()
+    new_sharded, _ = compact(w, verify=False)
+    from repro.core.index import InvertedIndex
+
+    compacted = pack_index(InvertedIndex(*(x[0] for x in new_sharded)))
+    assert compacted.packed is not None
+    rebuilt, _ = build_index(mutated)
+    interpret = True if backend == "pallas" else None
+    got = query_topk(compacted, qb, k=10, window=1024, backend=backend,
+                     interpret=interpret, codec="packed")
+    want = query_topk(rebuilt, qb, k=10, window=1024, backend="jnp")
+    _assert_equal(got, want, ("compaction", backend))
+
+
+def test_codec_argument_validation(setup):
+    corpus, meta, idx, qb = setup
+    with pytest.raises(ValueError):
+        query_topk(idx, qb, k=10, window=1024, codec="zstd")
+    raw_idx, _ = build_index(corpus)
+    with pytest.raises(ValueError):   # packed requested, no packed twin
+        query_topk(raw_idx, qb, k=10, window=1024, codec="packed")
+
+
+# ------------------------------------------------------------------- obs --
+def test_index_bytes_gauges_exported(setup):
+    """Snapshot paths export odys_index_bytes{layout, kind} when metrics
+    are enabled: raw+packed for the main build, raw+packed for the packed
+    delta snapshot."""
+    from repro.obs import MetricsRegistry, set_registry
+
+    corpus, meta, _, _ = setup
+    prev = set_registry(MetricsRegistry())
+    try:
+        idx, _ = build_index(corpus, codec="packed")
+        w = _writer_at_fill(corpus, meta, 0.0)
+        w.shard_deltas()
+        from repro.obs import get_registry
+
+        seen = {}
+        for name, _kind, _help, series in get_registry().collect():
+            if name != "odys_index_bytes":
+                continue
+            for labels, inst in series:
+                seen[(labels["layout"], labels["kind"])] = inst.value
+        assert seen[("raw", "main")] > seen[("packed", "main")] > 0
+        assert seen[("raw", "delta")] > 0
+        assert seen[("packed", "delta")] > 0
+    finally:
+        set_registry(prev)
