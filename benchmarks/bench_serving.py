@@ -164,6 +164,8 @@ def main(backend: str = "jnp", smoke: bool = False):
         online = monitor.update()
         tag = f"lam{frac:.2f}mu"
         print(f"serving,{tag}_measured,{measured*1e6:.1f},mean_response_us")
+        print(f"serving,{tag}_pad_fraction,{svc.stats()['pad_fraction']:.3f},"
+              f"mean_inert_share_per_batch")
         print(f"serving,{tag}_model,{projected*1e6:.1f},"
               f"err_formula18={err:.4f}")
         print(f"serving,{tag}_residual_online,{online['error']:.4f},"
@@ -190,7 +192,8 @@ def main(backend: str = "jnp", smoke: bool = False):
         )
         print(f"serving,{tag}_response,{_mean_response(tickets)*1e6:.1f},"
               f"mean_response_us hit_rate={hit_rate:.2f} "
-              f"batches={stats['n_batches']}")
+              f"batches={stats['n_batches']} "
+              f"pad_fraction={stats['pad_fraction']:.3f}")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,13 @@ Reports, as ``updates,<metric>,<value>,<note>`` CSV lines:
   ``scripts/check_bench.py`` gates CI on their ratio;
 - **compaction**: wall time of the fold + rebuild, and the post-compaction
   query latency (which should return to the baseline);
+- **work-list compaction** (pallas + raw only): the compacted work-list
+  grid (``backend="pallas_compact"``) vs the dense streamed grid at full
+  delta fill, on a *skewed* mix (Zipf-head terms, mixed term counts, a
+  half-inert batch) and on the *uniform* mix, as interleaved-rep median
+  ratios ``compact_over_dense_{skew,uniform}`` plus the builder's
+  ``kernel_grid_occupancy_skew`` gauge —
+  ``scripts/check_bench.py --require-compact`` gates on all three;
 - **index residency**: raw vs block-codec (packed) resident posting bytes
   and bytes/posting — always emitted.  With ``codec="packed"`` the query
   sweep itself runs the packed read path (in-kernel VMEM decode), and
@@ -46,6 +53,7 @@ from repro.data.corpus import (
 )
 from repro.indexing import DeltaWriter, compact
 from repro.indexing.delta import local_delta
+from repro.obs import MetricsRegistry, set_registry
 
 
 def _timed(fn, *args, reps=5, **kw):
@@ -111,6 +119,61 @@ def _query_latency_pair(idx, delta, qb, *, window, interpret, reps=9,
         second.append(time.perf_counter() - t0)
     ratio = float(np.median(np.asarray(first) / np.asarray(second)))
     return _stats(first), _stats(second), ratio
+
+
+def _compact_pair(idx, delta, qb, *, window, interpret, live_q=None, reps=9):
+    """Compacted work-list grid vs the dense streamed grid, interleaved
+    reps (same statistic discipline as :func:`_query_latency_pair`).
+
+    The dense side never sees ``live_q``: inert slots are exactly the
+    work the compacted grid elides and the dense grid cannot — that gap
+    IS the thing being measured, not a confound to control away.
+    """
+    def run(compacted):
+        if compacted:
+            return query_topk(
+                idx, qb, delta=delta, k=10, window=window,
+                backend="pallas_compact", interpret=interpret,
+                live_q=live_q,
+            )
+        return query_topk(
+            idx, qb, delta=delta, k=10, window=window,
+            backend="pallas", interpret=interpret,
+        )
+
+    for c in (True, False):                       # compile
+        jax.block_until_ready(run(c))
+    first, second = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(True))
+        first.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(False))
+        second.append(time.perf_counter() - t0)
+    ratio = float(np.median(np.asarray(first) / np.asarray(second)))
+    return _stats(first), _stats(second), ratio
+
+
+def _grid_occupancy(idx, delta, qb, *, window, interpret, live_q=None):
+    """Mean ``odys_kernel_grid_occupancy`` across the kernel family for
+    one compacted batch, captured through a scoped registry."""
+    reg = MetricsRegistry()
+    prev = set_registry(reg)
+    try:
+        jax.block_until_ready(query_topk(
+            idx, qb, delta=delta, k=10, window=window,
+            backend="pallas_compact", interpret=interpret, live_q=live_q,
+        ))
+    finally:
+        set_registry(prev)
+    vals = [
+        inst.value
+        for name, _kind, _help, rows in reg.collect()
+        if name == "odys_kernel_grid_occupancy"
+        for _labels, inst in rows
+    ]
+    return float(np.mean(vals)) if vals else 1.0
 
 
 def _report_index_bytes(idx):
@@ -244,6 +307,43 @@ def main(backend: str = "jnp", smoke: bool = False, codec: str = "raw"):
               f"fill100_over_fill0_{mode}")
         print(f"updates,streaming_speedup_fill100,"
               f"{lat_staged[1.0]/lat[1.0]:.2f},staged_over_streaming")
+
+    # --- work-list compaction: compacted vs dense grids --------------------
+    if backend == "pallas" and codec == "raw":
+        # writer2 sits at fill 1.0, so the compacted grid pays the full
+        # delta merge too.  Skewed mix = Zipf-head terms, mixed term
+        # counts, a half-inert batch (the partial bucket a scheduler
+        # deadline flushes, padded with clones) — the workload the
+        # work-list builder exists for.  Uniform mix = every slot live
+        # at the same term count: compaction's worst case, where the
+        # gate only requires staying within noise of the dense grid.
+        wl_delta = local_delta(writer2.device_delta())
+        skew_q = [
+            ([0], None), ([1, 3], None), ([0, 2, 5, 9], None),
+            ([4, 1, 7], None), ([2], None),
+        ]
+        skew_q = skew_q + [skew_q[-1]] * 3        # 5 live slots of 8
+        live_q = np.array([True] * 5 + [False] * 3)
+        skew_qb = make_query_batch(skew_q, t_max=4, meta=meta)
+        occ = _grid_occupancy(idx, wl_delta, skew_qb, window=window,
+                              interpret=interpret, live_q=live_q)
+        print(f"updates,kernel_grid_occupancy_skew,{occ:.3f},"
+              f"live_items_over_dense_steps")
+        cstats, dstats, ratio = _compact_pair(
+            idx, wl_delta, skew_qb, window=window, interpret=interpret,
+            live_q=live_q,
+        )
+        _report("query_skew_compact", cstats)
+        _report("query_skew_dense", dstats)
+        print(f"updates,compact_over_dense_skew,{ratio:.3f},"
+              f"median_interleaved_rep_ratio")
+        cstats, dstats, ratio = _compact_pair(
+            idx, wl_delta, qb, window=window, interpret=interpret,
+        )
+        _report("query_uniform_compact", cstats)
+        _report("query_uniform_dense", dstats)
+        print(f"updates,compact_over_dense_uniform,{ratio:.3f},"
+              f"median_interleaved_rep_ratio")
 
     # --- compaction --------------------------------------------------------
     t0 = time.perf_counter()

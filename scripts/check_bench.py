@@ -19,9 +19,19 @@ the same interpret-mode caveat applies), and ``posting_compression_ratio``
 must hold the ``--min-compression`` floor (default 2.5x): the codec must
 actually pay for itself in resident bytes.
 
+With ``--require-compact`` the gate checks the work-list compaction run
+(emitted by the same pallas+raw smoke): ``compact_over_dense_skew`` must
+hold ``--max-compact-skew`` (default 1.0x — on the skewed, half-inert mix
+the compacted grid must at least break even with the dense grid),
+``compact_over_dense_uniform`` must hold ``--max-compact-uniform``
+(default 1.1x — on the all-live uniform mix the builder overhead must
+stay within noise), and ``kernel_grid_occupancy_skew`` must be present
+(the occupancy gauge is exported, proving the builder path ran).
+
 Usage:
     python scripts/check_bench.py BENCH_DIR [--max-ratio 1.5]
     python scripts/check_bench.py PACKED_DIR --require-packed
+    python scripts/check_bench.py BENCH_DIR --require-compact
 """
 from __future__ import annotations
 
@@ -57,6 +67,16 @@ def main() -> int:
     ap.add_argument("--min-compression", type=float, default=2.5,
                     help="minimum raw/packed posting-bytes ratio with "
                          "--require-packed")
+    ap.add_argument("--require-compact", action="store_true",
+                    help="gate the work-list compaction metrics: "
+                         "compact_over_dense_{skew,uniform} must exist and "
+                         "hold their bounds, occupancy gauge must be present")
+    ap.add_argument("--max-compact-skew", type=float, default=1.0,
+                    help="max compact/dense ratio on the skewed mix with "
+                         "--require-compact")
+    ap.add_argument("--max-compact-uniform", type=float, default=1.1,
+                    help="max compact/dense ratio on the uniform mix with "
+                         "--require-compact")
     args = ap.parse_args()
 
     path = args.bench_dir / "BENCH_updates.json"
@@ -128,6 +148,50 @@ def main() -> int:
         print(f"check_bench: {checked} fill levels within {args.max_ratio}x "
               f"and compression >= {args.min_compression}x — packed read "
               f"path holds")
+        return 0
+    if args.require_compact:
+        # Work-list compaction gate: compacted vs dense grids, same
+        # median-of-interleaved-reps statistic as the other gates.  Skew
+        # must break even or win (the half-inert mix is the workload the
+        # builder exists for); uniform only has to stay within noise.
+        for key, bound, mix in (
+            ("compact_over_dense_skew", args.max_compact_skew, "skewed"),
+            ("compact_over_dense_uniform", args.max_compact_uniform,
+             "uniform"),
+        ):
+            direct = metrics.get(key)
+            if direct is None:
+                print(f"check_bench: --require-compact but no {key} metric "
+                      f"— was the suite run with --backend pallas (raw "
+                      f"codec)?", file=sys.stderr)
+                return 1
+            consumed.add(key)
+            ratio = direct["value"]
+            verdict = "ok" if ratio <= bound else "FAIL"
+            print(f"check_bench: {mix:<7} compact/dense ratio={ratio:.3f} "
+                  f"(median interleaved rep ratio; max {bound}) {verdict}")
+            if ratio > bound:
+                failures.append((mix, ratio))
+        occ = metrics.get("kernel_grid_occupancy_skew")
+        if occ is None:
+            print("check_bench: --require-compact but no "
+                  "kernel_grid_occupancy_skew metric — the builder's "
+                  "occupancy gauge was not exported", file=sys.stderr)
+            return 1
+        consumed.add("kernel_grid_occupancy_skew")
+        print(f"check_bench: skewed-mix grid occupancy={occ['value']:.3f} "
+              f"(live work items / dense grid steps)")
+        for prefix in ("query_skew_compact", "query_skew_dense",
+                       "query_uniform_compact", "query_uniform_dense"):
+            for suffix in ("", "_p95", "_min"):
+                if prefix + suffix in metrics:
+                    consumed.add(prefix + suffix)
+        _report_ignored(metrics, consumed)
+        if failures:
+            print(f"check_bench: compacted grid regressed beyond bounds at "
+                  f"{[m for m, _ in failures]}", file=sys.stderr)
+            return 1
+        print("check_bench: compacted work-list grid holds on both mixes")
         return 0
     for fill in FILLS:
         # Gate on the median of interleaved per-rep ratios when the bench

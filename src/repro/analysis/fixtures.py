@@ -213,6 +213,34 @@ def broken_contracts() -> list[tuple[KernelContract, str]]:
         )
     )
 
+    # Work-list descriptor table missing its spare entry: a table sized
+    # exactly to the item count has nowhere for the clone-the-last-item
+    # padding rule to live, so padding rows fall back to zero-filled
+    # descriptors — query 0, tile 0 — and the compacted grid's output
+    # walk jumps BACK to block 0 after having left it.  In work-list
+    # space that manifests as a non-contiguous revisit of the output
+    # block, which the alias scan rejects.
+    desc_missing_spare = np.zeros((4, 8), np.int32)  # lint: allow(worklist-pad)
+    desc_missing_spare[:3, 0] = (0, 1, 1)  # rows 3.. stay zeros: q jumps to 0
+
+    def _wl_out_map(n, desc_ref):
+        return (int(desc_ref[n, 0]), 0)
+
+    out.append(
+        (
+            KernelContract(
+                name="fx_worklist_missing_spare",
+                site=_line("fx_worklist_missing_spare"),
+                grid=(4,),
+                scalars=(desc_missing_spare,),
+                inputs=(_flat_op("x", 4, _id_map),),
+                outputs=(_flat_op("o", 2, _wl_out_map),),
+                revisit_dims=(0,),
+            ),
+            "alias",
+        )
+    )
+
     out.append(
         (
             KernelContract(
@@ -310,5 +338,14 @@ def broken_lint_sources() -> list[tuple[str, str, str, str]]:
             "def build(shard, n):\n"
             "    return shard._replace(attrs=np.zeros(n, dtype=np.int32))\n",
             "posting-alloc",
+        ),
+        (
+            "fx_lint_adhoc_worklist_alloc",
+            "repro/kernels/bad_worklist.py",
+            "import numpy as np\n"
+            "def build(n):\n"
+            "    desc = np.zeros((n + 1, 8), dtype=np.int32)\n"
+            "    return desc\n",
+            "worklist-pad",
         ),
     ]

@@ -27,6 +27,16 @@ Rules (suppress a line with ``# lint: allow(<rule>)``):
   an ad-hoc size is how an array misses the spare tile (or spare packed
   chunk) every streamed BlockSpec read relies on.  Host-side mirrors
   with deliberately different layouts carry the pragma.
+- ``worklist-pad`` — work-list descriptor tables (any array a work-item
+  grid dimension indexes) may only be sized through
+  :func:`repro.kernels.worklist.worklist_pad`.  Flags ``np.zeros`` /
+  ``np.full`` / ... bound to a descriptor-table name (``*worklist*``,
+  ``desc``, ``*_desc``, ``desc_*``) whose size expression neither calls
+  that helper nor references a name assigned from it: an exact-size
+  table has no spare entry for the clone-the-last-item padding rule, so
+  a pow2-boundary item count walks the grid off the table (the
+  ``fx_worklist_missing_spare`` contract fixture shows the failure as a
+  non-contiguous output revisit).
 """
 
 from __future__ import annotations
@@ -37,7 +47,13 @@ import os
 import re
 from typing import Iterable
 
-RULES = ("flat-pad", "posting-gather", "interpret-literal", "posting-alloc")
+RULES = (
+    "flat-pad",
+    "posting-gather",
+    "interpret-literal",
+    "posting-alloc",
+    "worklist-pad",
+)
 
 _ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([a-z-]+)\)")
 
@@ -56,6 +72,10 @@ _ALLOC_MODULES = ("np", "jnp", "numpy")
 #: expression calls one of these (or references a name assigned from
 #: one) carries the spare tile / spare packed chunk by construction.
 _PAD_FNS = ("flat_tile_pad", "packed_word_pad")
+
+#: The work-list layer's pad helper: descriptor tables sized through it
+#: carry the spare no-op entry the compacted kernels' padding rule needs.
+_WL_PAD_FNS = ("worklist_pad",)
 
 #: The layout layer itself — where the pad helpers live and the one
 #: place allowed to size posting arrays from first principles.
@@ -79,16 +99,28 @@ def _is_alloc_call(node: ast.AST) -> bool:
     )
 
 
-def _calls_pad_fn(node: ast.AST) -> bool:
+def _calls_pad_fn(node: ast.AST, fns: tuple[str, ...] = _PAD_FNS) -> bool:
     for sub in ast.walk(node):
         if isinstance(sub, ast.Call):
             fn = sub.func
             fname = fn.id if isinstance(fn, ast.Name) else (
                 fn.attr if isinstance(fn, ast.Attribute) else ""
             )
-            if fname in _PAD_FNS:
+            if fname in fns:
                 return True
     return False
+
+
+def _is_desc_name(name: str) -> bool:
+    """Work-list descriptor-table names: the arrays a work-item grid
+    dimension indexes."""
+    low = name.lower()
+    return (
+        "worklist" in low
+        or low == "desc"
+        or low.endswith("_desc")
+        or low.startswith("desc_")
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +185,8 @@ class _FileLinter(ast.NodeVisitor):
         # packed_word_pad (or from another tracked name) — sizes built
         # from these inherit the spare tile.
         self._pad_names: list[set[str]] = [set()]
+        # Same tracking for worklist_pad-derived sizes (worklist-pad rule).
+        self._wl_names: list[set[str]] = [set()]
 
     def _emit(self, rule: str, message: str, node: ast.AST):
         if rule in _allowed(self.lines, node):
@@ -165,7 +199,9 @@ class _FileLinter(ast.NodeVisitor):
     def visit_FunctionDef(self, node: ast.FunctionDef):
         self._func_stack.append(node.name)
         self._pad_names.append(set())
+        self._wl_names.append(set())
         self.generic_visit(node)
+        self._wl_names.pop()
         self._pad_names.pop()
         self._func_stack.pop()
 
@@ -204,19 +240,52 @@ class _FileLinter(ast.NodeVisitor):
                 node,
             )
 
+    # -- worklist-pad ------------------------------------------------------
+    def _wl_tracked(self, node: ast.AST) -> bool:
+        tracked = set().union(*self._wl_names)
+        return any(
+            isinstance(sub, ast.Name) and sub.id in tracked
+            for sub in ast.walk(node)
+        )
+
+    def _wl_derived(self, value: ast.AST) -> bool:
+        return _calls_pad_fn(value, _WL_PAD_FNS) or self._wl_tracked(value)
+
+    def _check_wl_alloc(self, name: str, value: ast.AST, node: ast.AST):
+        if not (_is_alloc_call(value) and _is_desc_name(name)):
+            return
+        size_ok = any(
+            self._wl_derived(arg)
+            for arg in list(value.args) + [kw.value for kw in value.keywords]  # type: ignore[attr-defined]
+        )
+        if not size_ok:
+            self._emit(
+                "worklist-pad",
+                f"work-list descriptor table {name!r} allocated with an "
+                "ad-hoc size — derive it from worklist_pad() so the spare "
+                "no-op entry the compacted grids rely on exists",
+                node,
+            )
+
     def visit_Assign(self, node: ast.Assign):
         for target in node.targets:
             if isinstance(target, ast.Name):
                 if self._pad_derived(node.value):
                     self._pad_names[-1].add(target.id)
+                if self._wl_derived(node.value):
+                    self._wl_names[-1].add(target.id)
                 self._check_alloc(target.id, node.value, node)
+                self._check_wl_alloc(target.id, node.value, node)
         self.generic_visit(node)
 
     def visit_AnnAssign(self, node: ast.AnnAssign):
         if isinstance(node.target, ast.Name) and node.value is not None:
             if self._pad_derived(node.value):
                 self._pad_names[-1].add(node.target.id)
+            if self._wl_derived(node.value):
+                self._wl_names[-1].add(node.target.id)
             self._check_alloc(node.target.id, node.value, node)
+            self._check_wl_alloc(node.target.id, node.value, node)
         self.generic_visit(node)
 
     def visit_BinOp(self, node: ast.BinOp):
@@ -265,6 +334,7 @@ class _FileLinter(ast.NodeVisitor):
         for kw in node.keywords:
             if kw.arg is not None and not _is_alloc_call(node):
                 self._check_alloc(kw.arg, kw.value, kw.value)
+                self._check_wl_alloc(kw.arg, kw.value, kw.value)
             if kw.arg == "interpret" and isinstance(kw.value, ast.Constant):
                 if isinstance(kw.value.value, bool):
                     self._emit(

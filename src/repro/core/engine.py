@@ -670,13 +670,122 @@ def _query_topk_batch_staged(
     return jax.vmap(partial(_first_k_by_rank, k=k))(docs, mask > 0)
 
 
+@partial(jax.jit, static_argnames=("window", "attr_strategy"))
+def _compact_prelude(index, batch, delta, *, window, attr_strategy):
+    """Jitted front half of the compacted path: driver pick + span +
+    kernel-side attr filter.  Everything up to the first host sync the
+    work-list builders need."""
+    t_max = batch.terms.shape[1]
+    source = make_posting_source(index, delta)
+
+    def pick(terms, n_terms):
+        driver_slot = source.driver_slot(terms, n_terms)
+        slots = jnp.arange(t_max)
+        active = ((slots < n_terms) & (slots != driver_slot)).astype(jnp.int32)
+        return terms[driver_slot], active
+
+    d_terms, active = jax.vmap(pick)(batch.terms, batch.n_terms)
+    span = source.driver_span(d_terms, window)
+    kernel_filter = (
+        batch.attr_filter
+        if attr_strategy == "embed"
+        else jnp.full_like(batch.attr_filter, NO_ATTR)
+    )
+    return d_terms, active, span.off, span.n_eff, kernel_filter
+
+
+@jax.jit
+def _compact_driver_state(index, delta, docs, msrc):
+    """Jitted middle stage: driver flags + liveness between the merge and
+    probe kernels of the compacted delta path."""
+    source = make_posting_source(index, delta)
+    a_flags = source.driver_flags(docs)
+    live = source.driver_live(docs, msrc, a_flags)
+    return a_flags, live
+
+
+@partial(jax.jit, static_argnames=("k", "attr_strategy"))
+def _compact_finish(index, delta, batch, docs, mask, *, k, attr_strategy):
+    """Jitted back half of the compacted path: host-strategy site mask +
+    rank-order top-k selection."""
+    if attr_strategy == "gather":
+        source = make_posting_source(index, delta)
+        site = jnp.take(source.doc_site, jnp.clip(docs, 0, None), mode="clip")
+        ok = site == batch.attr_filter[:, None]
+        mask = mask * jnp.where(batch.attr_filter[:, None] == NO_ATTR, True, ok)
+    return jax.vmap(partial(_first_k_by_rank, k=k))(docs, mask > 0)
+
+
+def _query_topk_batch_pallas_compact(
+    index: InvertedIndex,
+    batch: QueryBatch,
+    *,
+    k: int,
+    window: int,
+    attr_strategy: str,
+    interpret: bool,
+    delta: DeltaIndex | None = None,
+    use_packed: bool = False,
+    live_q=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Work-list compacted twin of :func:`_query_topk_batch_pallas`: the
+    same fully-streamed data path, but every kernel launches a 1-D grid
+    over a host-built dense work list (:mod:`repro.kernels.worklist`), so
+    inert padding queries (``live_q`` false), absent term slots, and empty
+    probe spans contribute zero grid steps.  The builders pull the probe
+    plans to the host, which is why this path cannot live inside the one
+    jitted dispatcher — instead it is a chain of jitted stages
+    (:func:`_compact_prelude` → kernel launches → :func:`_compact_finish`)
+    with only the descriptor construction between them running in Python
+    (the inner pallas calls are jitted per work-list shape, pow2-bucketed
+    by :func:`repro.kernels.worklist.worklist_pad`)."""
+    from repro.kernels import ops
+
+    if attr_strategy not in ("embed", "gather", "site_term"):
+        raise ValueError(attr_strategy)
+    d_terms, active, span_off, span_neff, kernel_filter = _compact_prelude(
+        index, batch, delta, window=window, attr_strategy=attr_strategy
+    )
+
+    packed = index.packed if use_packed else None
+    if delta is None:
+        docs, mask = ops.intersect_fullstream_compact(
+            span_off, span_neff, batch.terms, active, kernel_filter,
+            index.postings, index.attrs, index.offsets, index.lengths,
+            index.block_max, window=window, packed=packed,
+            interpret=interpret, live_q=live_q,
+        )
+    else:
+        d_packed = delta.packed if use_packed else None
+        docs, mattrs, msrc = ops.merge_windows_compact(
+            index.postings, index.attrs, span_off, span_neff,
+            delta.postings, delta.attrs, delta.offsets, delta.lengths,
+            delta.block_max, d_terms, window=window,
+            packed=packed, d_packed=d_packed, interpret=interpret,
+            live_q=live_q,
+        )
+        a_flags, live = _compact_driver_state(index, delta, docs, msrc)
+        mask = ops.intersect_streamed_compact(
+            docs, mattrs, live, batch.terms, active, kernel_filter,
+            index.postings, index.offsets, index.lengths, index.block_max,
+            delta.postings, delta.offsets, delta.lengths, delta.block_max,
+            a_flags,
+            packed=packed, d_packed=d_packed,
+            interpret=interpret, live_q=live_q,
+        )
+
+    return _compact_finish(
+        index, delta, batch, docs, mask, k=k, attr_strategy=attr_strategy
+    )
+
+
 @partial(
     jax.jit,
     static_argnames=(
         "k", "window", "attr_strategy", "backend", "interpret", "codec"
     ),
 )
-def query_topk(
+def _query_topk_jitted(
     index: InvertedIndex,
     batch: QueryBatch,
     *,
@@ -781,6 +890,68 @@ def query_topk(
             delta=delta,
         )
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def query_topk(
+    index: InvertedIndex,
+    batch: QueryBatch,
+    *,
+    delta: DeltaIndex | None = None,
+    k: int = 10,
+    window: int = 4096,
+    attr_strategy: str = "embed",
+    backend: str = "jnp",
+    interpret: bool | None = None,
+    codec: str = "raw",
+    live_q=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched local top-k — the public entry point.
+
+    ``backend="jnp"``, ``"pallas"``, and ``"pallas_staged"`` delegate to
+    the jitted engine (see :func:`_query_topk_jitted` for the full
+    semantics).  ``backend="pallas_compact"`` runs the same fully-streamed
+    Pallas data path through the work-list compaction layer
+    (:mod:`repro.kernels.worklist`): kernels launch 1-D grids over dense
+    host-built work lists, so grid steps are proportional to *live* work,
+    not bucket shape.  ``live_q`` (host bool[Q], compact backend only)
+    marks inert padding queries; their result rows come back as
+    (INVALID_DOC, 0) without costing a single grid step, and an all-inert
+    batch launches no kernel at all.  Bit-identical to ``"pallas"`` on
+    live rows.
+    """
+    if backend != "pallas_compact":
+        if live_q is not None:
+            raise ValueError(
+                "live_q needs backend='pallas_compact' (the dense grids "
+                "already mask inert queries in-kernel)"
+            )
+        return _query_topk_jitted(
+            index, batch, delta=delta, k=k, window=window,
+            attr_strategy=attr_strategy, backend=backend,
+            interpret=interpret, codec=codec,
+        )
+    if codec not in ("raw", "packed"):
+        raise ValueError(f"unknown codec {codec!r}")
+    if codec == "packed":
+        if index.packed is None:
+            raise ValueError(
+                "codec='packed' needs an index carrying its packed twin "
+                "(build_index(codec='packed') or pack_index)"
+            )
+        if delta is not None and delta.packed is None:
+            raise ValueError(
+                "codec='packed' needs a delta snapshot with a packed twin "
+                "(DeltaWriter(codec='packed'))"
+            )
+    from repro.kernels import ops
+
+    if interpret is None:
+        interpret = ops.default_interpret()
+    return _query_topk_batch_pallas_compact(
+        index, batch, k=k, window=window, attr_strategy=attr_strategy,
+        interpret=interpret, delta=delta, use_packed=codec == "packed",
+        live_q=live_q,
+    )
 
 
 @partial(jax.jit, static_argnames=("k",))

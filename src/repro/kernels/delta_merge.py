@@ -67,6 +67,10 @@ from repro.kernels.posting_intersect import (
     _packed_row0,
     _tile_positions,
 )
+from repro.kernels.worklist import (
+    FLAG_LAST,
+    build_merge_worklist,
+)
 
 # Slab addressing below (cap_rows = cap // LANES with BLOCK-aligned caps)
 # relies on one lane row being exactly one skip-table block.
@@ -408,6 +412,328 @@ def merge_delta_windows(
 
 
 # ---------------------------------------------------------------------------
+# Work-list compacted variant: a 1-D grid over live (query, window-tile)
+# items (repro.kernels.worklist) — zero grid steps for inert padding
+# queries; window tiles past a query's live main range are never swept.
+# ---------------------------------------------------------------------------
+
+
+def _wl_main_window_map(rows_total):
+    def m_map(n, desc_ref, minfo_ref, *_):
+        row = minfo_ref[desc_ref[n, 0], 0] + desc_ref[n, 1] * TILE_ROWS
+        return (jnp.minimum(row, rows_total - TILE_ROWS), 0)
+
+    return m_map
+
+
+def _wl_slab_map(n, desc_ref, minfo_ref, slab_ref, len_ref, occ_ref, *_):
+    q = desc_ref[n, 0]
+    return (jnp.where(occ_ref[q] == 0, 0, slab_ref[q]), 0)
+
+
+def _wl_merge_out_map(n, desc_ref, *_):
+    return (desc_ref[n, 0], 0, 0)
+
+
+def _wl_packed_window_map(woff_idx, n_blocks, rows_w, chunk_rows):
+    def m_map(n, *refs):
+        q = refs[0][n, 0]
+        b0c = jnp.minimum(refs[1][q, 0] + refs[0][n, 1] * TILE_ROWS, n_blocks)
+        return (_packed_row0(refs[woff_idx], b0c, rows_w, chunk_rows), 0)
+
+    return m_map
+
+
+def _wl_packed_slab_map(woff_idx, bpt, n_blocks, rows_w, chunk_rows):
+    def d_map(n, *refs):
+        q = refs[0][n, 0]
+        b0 = jnp.where(refs[4][q] == 0, 0, refs[2][q]) * bpt
+        b0c = jnp.minimum(b0, n_blocks)
+        return (_packed_row0(refs[woff_idx], b0c, rows_w, chunk_rows), 0)
+
+    return d_map
+
+
+def _merge_compact_kernel(
+    # Work-list twin of _merge_kernel.  Scalar order: wl (descriptor
+    # table), then the dense four [minfo, slab, d_len, d_occ], then (packed
+    # mode) the six codec descriptors.  One grid step per live window tile;
+    # FLAG_LAST replaces the dense (j == s_w - 1) edge.  Scratch rows this
+    # work list never wrote (tiles past the live range, skipped entirely)
+    # may hold a previous query's data, so the merge/copy-through applies a
+    # full-extent live mask at consume time — reproducing the dense
+    # kernel's all-tiles in_win writes bit-exactly.
+    *refs,
+    out_w: int,
+    cap: int,
+    n_pad: int,
+    packed_m=None,
+    packed_d=None,
+):
+    if packed_m is not None:
+        (
+            wl_ref, minfo_ref, slab_ref, len_ref, occ_ref,
+            mba_ref, mme_ref, mwo_ref, dba_ref, dme_ref, dwo_ref,
+            mp_ref, ma_ref, dp_ref, da_ref,
+            od_ref, oa_ref, os_ref, sd_ref, sa_ref,
+        ) = refs
+    else:
+        (
+            wl_ref, minfo_ref, slab_ref, len_ref, occ_ref,
+            mp_ref, ma_ref, dp_ref, da_ref,
+            od_ref, oa_ref, os_ref, sd_ref, sa_ref,
+        ) = refs
+
+    n = pl.program_id(0)
+    q = wl_ref[n, 0]
+    j = wl_ref[n, 1]
+    flags = wl_ref[n, 4]
+
+    in_win = _tile_positions(j) < minfo_ref[q, 1]
+    if packed_m is not None:
+        n_bm, rows_wm, cr_m = packed_m
+        b0c = jnp.minimum(minfo_ref[q, 0] + j * TILE_ROWS, n_bm)
+        row0 = _packed_row0(mwo_ref, b0c, rows_wm, cr_m)
+        m_tile = _decode_span(
+            mp_ref[...], mba_ref, mme_ref, mwo_ref, b0c, row0, TILE_ROWS
+        )
+    else:
+        m_tile = mp_ref[...]
+    sd_ref[pl.dslice(j * TILE_ROWS, TILE_ROWS), :] = jnp.where(
+        in_win, m_tile, INVALID_DOC
+    )
+    sa_ref[pl.dslice(j * TILE_ROWS, TILE_ROWS), :] = jnp.where(
+        in_win, ma_ref[...], INVALID_ATTR
+    )
+
+    def _live_full():
+        r = jax.lax.broadcasted_iota(jnp.int32, sd_ref.shape, 0)
+        c = jax.lax.broadcasted_iota(jnp.int32, sd_ref.shape, 1)
+        return (r * LANES + c) < minfo_ref[q, 1]
+
+    @pl.when(((flags & FLAG_LAST) != 0) & (occ_ref[q] == 0))
+    def _copy_through():
+        live = _live_full()
+        od_ref[0] = jnp.where(live, sd_ref[...], INVALID_DOC)
+        oa_ref[0] = jnp.where(live, sa_ref[...], INVALID_ATTR)
+        os_ref[0] = jnp.zeros_like(os_ref[0])
+
+    @pl.when(((flags & FLAG_LAST) != 0) & (occ_ref[q] != 0))
+    def _merge():
+        live = _live_full()
+        md = jnp.where(live, sd_ref[...], INVALID_DOC).reshape(-1)
+        ma = jnp.where(live, sa_ref[...], INVALID_ATTR).reshape(-1)
+        d_valid = jnp.arange(cap, dtype=jnp.int32) < len_ref[q]
+        if packed_d is not None:
+            n_bd, rows_wd, cr_d = packed_d
+            bpt = cap // BLOCK
+            b0d = jnp.minimum(
+                jnp.where(occ_ref[q] == 0, 0, slab_ref[q]) * bpt, n_bd
+            )
+            row0d = _packed_row0(dwo_ref, b0d, rows_wd, cr_d)
+            dd_raw = _decode_span(
+                dp_ref[...], dba_ref, dme_ref, dwo_ref, b0d, row0d, bpt
+            ).reshape(-1)
+        else:
+            dd_raw = dp_ref[...].reshape(-1)
+        dd = jnp.where(d_valid, dd_raw, INVALID_DOC)
+        da = jnp.where(d_valid, da_ref[...].reshape(-1), INVALID_ATTR)
+
+        pad = n_pad - out_w - cap
+        key = jnp.concatenate(
+            [md, jnp.full((pad,), INVALID_DOC, jnp.int32), dd[::-1]]
+        )
+        attr = jnp.concatenate(
+            [ma, jnp.full((pad,), INVALID_ATTR, jnp.int32), da[::-1]]
+        )
+        src = jnp.concatenate(
+            [
+                jnp.zeros((out_w,), jnp.int32),
+                jnp.ones((n_pad - out_w,), jnp.int32),
+            ]
+        )
+        key, src, (attr,) = _bitonic_merge_flat(key, src, (attr,))
+        od_ref[0] = key[:out_w].reshape(od_ref.shape[1:])
+        oa_ref[0] = attr[:out_w].reshape(oa_ref.shape[1:])
+        os_ref[0] = src[:out_w].reshape(os_ref.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _merge_compact_call(
+    desc,
+    postings, attrs, m_off, m_neff,
+    d_postings, d_attrs, d_offsets, d_lengths, d_block_max, terms,
+    live_q=None,
+    *,
+    window: int,
+    packed: PackedFlatArrays | None = None,
+    d_packed: PackedFlatArrays | None = None,
+    interpret: bool = False,
+):
+    q_n = terms.shape[0]
+    n_terms = d_offsets.shape[0]
+    cap = d_block_max.shape[0] * BLOCK // n_terms
+    bpt = cap // BLOCK
+    rows_total = postings.shape[0] // LANES
+    n_steps = desc.shape[0]
+
+    s_w = -(-window // TILE)
+    out_w = s_w * TILE
+    out_rows = s_w * TILE_ROWS
+
+    tt = jnp.clip(terms, 0, n_terms - 1)
+    slab = jnp.take(d_offsets, tt) // cap
+    d_len = jnp.where(terms < 0, 0, jnp.take(d_lengths, tt))
+    occ_per_term = jnp.sum(
+        d_block_max.reshape(n_terms, bpt) != INVALID_DOC, axis=1
+    ).astype(jnp.int32)
+    d_occ = jnp.where(terms < 0, 0, jnp.take(occ_per_term, tt))
+    minfo = jnp.stack(
+        [m_off.astype(jnp.int32) // LANES, m_neff.astype(jnp.int32)], axis=-1
+    )
+
+    n_pad = _next_pow2(out_w + cap)
+    cap_rows = cap // LANES
+    ma2 = attrs.reshape(rows_total, LANES)
+    da2 = d_attrs.reshape(-1, LANES)
+
+    m_map = _wl_main_window_map(rows_total)
+    scalars = [desc, minfo, slab, d_len, d_occ]
+    pk_m = pk_d = None
+    if packed is not None:
+        scalars += [
+            packed.blk_base, packed.blk_meta, packed.blk_woff,
+            d_packed.blk_base, d_packed.blk_meta, d_packed.blk_woff,
+        ]
+        words_m2 = packed.words.reshape(-1, LANES)
+        words_d2 = d_packed.words.reshape(-1, LANES)
+        pk_m = (packed.n_blocks, words_m2.shape[0], packed.chunk_rows)
+        pk_d = (d_packed.n_blocks, words_d2.shape[0], d_packed.chunk_rows)
+        in_specs = [
+            pl.BlockSpec(
+                (packed.chunk_rows, LANES),
+                _wl_packed_window_map(7, *pk_m),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec(
+                (d_packed.chunk_rows, LANES),
+                _wl_packed_slab_map(10, bpt, *pk_d),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((cap_rows, LANES), _wl_slab_map),
+        ]
+        operands = [words_m2, ma2, words_d2, da2]
+    else:
+        mp2 = postings.reshape(rows_total, LANES)
+        dp2 = d_postings.reshape(-1, LANES)
+        in_specs = [
+            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((TILE_ROWS, LANES), m_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((cap_rows, LANES), _wl_slab_map),
+            pl.BlockSpec((cap_rows, LANES), _wl_slab_map),
+        ]
+        operands = [mp2, ma2, dp2, da2]
+
+    blk_o = pl.BlockSpec((1, out_rows, LANES), _wl_merge_out_map)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
+        grid=(n_steps,),
+        in_specs=in_specs,
+        out_specs=[blk_o, blk_o, blk_o],
+        scratch_shapes=[
+            pltpu.VMEM((out_rows, LANES), jnp.int32),
+            pltpu.VMEM((out_rows, LANES), jnp.int32),
+        ],
+    )
+    shape = jax.ShapeDtypeStruct((q_n, out_rows, LANES), jnp.int32)
+    docs, oattrs, src = pl.pallas_call(
+        functools.partial(
+            _merge_compact_kernel,
+            out_w=out_w,
+            cap=cap,
+            n_pad=n_pad,
+            packed_m=pk_m,
+            packed_d=pk_d,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[shape, shape, shape],
+        interpret=interpret,
+    )(*scalars, *operands)
+
+    def unroll(x):
+        return x.reshape(q_n, -1)[:, :window]
+
+    docs, oattrs, src = unroll(docs), unroll(oattrs), unroll(src)
+    if live_q is not None:
+        lq = live_q[:, None]
+        docs = jnp.where(lq, docs, INVALID_DOC)
+        oattrs = jnp.where(lq, oattrs, INVALID_ATTR)
+        src = jnp.where(lq, src, 1)
+    return docs, oattrs, src
+
+
+def merge_delta_windows_compact(
+    postings: jnp.ndarray,
+    attrs: jnp.ndarray,
+    m_off: jnp.ndarray,
+    m_neff: jnp.ndarray,
+    d_postings: jnp.ndarray,
+    d_attrs: jnp.ndarray,
+    d_offsets: jnp.ndarray,
+    d_lengths: jnp.ndarray,
+    d_block_max: jnp.ndarray,
+    terms: jnp.ndarray,
+    *,
+    window: int,
+    packed: PackedFlatArrays | None = None,
+    d_packed: PackedFlatArrays | None = None,
+    interpret: bool = False,
+    live_q=None,
+):
+    """Work-list compacted :func:`merge_delta_windows`.
+
+    Same arguments and bit-identical ``(docs, attrs, src)``, plus
+    ``live_q`` (host bool[Q]; ``None`` = all live): inert queries
+    contribute zero grid steps and come back as the empty merged window
+    (INVALID_DOC, INVALID_ATTR, src=1).  An all-inert batch launches
+    nothing.
+    """
+    if (packed is None) != (d_packed is None):
+        raise ValueError(
+            "merge_delta_windows_compact: packed and d_packed go together"
+        )
+    q_n = terms.shape[0]
+    s_w = -(-window // TILE)
+    suffix = "_packed" if packed is not None else ""
+    wl = build_merge_worklist(
+        np.asarray(jax.device_get(m_neff)),
+        tile=TILE,
+        s_w=s_w,
+        live_q=live_q,
+        kernel="merge_delta_windows_compact" + suffix,
+        dense_steps=q_n * s_w,
+    )
+    if wl.n_items == 0:
+        # Result-shaped (Q, window) constants, not flat posting-layout
+        # arrays: the empty merged window the kernel itself would emit.
+        # lint: allow(posting-alloc)
+        docs = jnp.full((q_n, window), INVALID_DOC, jnp.int32)
+        # lint: allow(posting-alloc)
+        oattrs = jnp.full((q_n, window), INVALID_ATTR, jnp.int32)
+        src = jnp.ones((q_n, window), jnp.int32)
+        return docs, oattrs, src
+    lq = None if live_q is None else jnp.asarray(np.asarray(live_q))
+    return _merge_compact_call(
+        jnp.asarray(wl.desc),
+        postings, attrs, m_off, m_neff,
+        d_postings, d_attrs, d_offsets, d_lengths, d_block_max, terms,
+        lq,
+        window=window, packed=packed, d_packed=d_packed, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Contract registration (repro.kernels.registry -> repro.analysis)
 # ---------------------------------------------------------------------------
 
@@ -601,3 +927,196 @@ def _contract_merge_delta_windows():
 @kernel_contract("merge_delta_windows_packed")
 def _contract_merge_delta_windows_packed():
     return _build_merge_contract(True)
+
+
+# --- work-list compacted variant -------------------------------------------
+
+
+def _wl_main_window_intended(n, desc_ref, minfo_ref, *_):
+    return (
+        minfo_ref[desc_ref[n, 0], 0] + desc_ref[n, 1] * TILE_ROWS,
+        0,
+    )
+
+
+def _wl_main_consumed(n, desc_ref, minfo_ref, *_):
+    return bool(desc_ref[n, 1] * TILE < minfo_ref[desc_ref[n, 0], 1])
+
+
+def _wl_slab_intended(n, desc_ref, minfo_ref, slab_ref, *_):
+    return (slab_ref[desc_ref[n, 0]], 0)
+
+
+def _wl_slab_consumed(n, desc_ref, minfo_ref, slab_ref, len_ref, occ_ref, *_):
+    return bool(occ_ref[desc_ref[n, 0]] != 0)
+
+
+def _wl_packed_window_intended(woff_idx, n_blocks):
+    def intended(n, *refs):
+        q = refs[0][n, 0]
+        b0c = jnp.minimum(refs[1][q, 0] + refs[0][n, 1] * TILE_ROWS, n_blocks)
+        return (refs[woff_idx][b0c] // LANES, 0)
+
+    return intended
+
+
+def _wl_packed_slab_intended(woff_idx, bpt, n_blocks):
+    def intended(n, *refs):
+        q = refs[0][n, 0]
+        b0 = jnp.where(refs[4][q] == 0, 0, refs[2][q]) * bpt
+        b0c = jnp.minimum(b0, n_blocks)
+        return (refs[woff_idx][b0c] // LANES, 0)
+
+    return intended
+
+
+def _build_merge_compact_contract(use_packed):
+    # Same canonical instance as the dense merge contract, with query 1
+    # marked inert by live_q: the builder must drop it entirely (its rows
+    # never appear in the table) while query 2's occupied-zero slab keeps
+    # the slab-pin clamp + consumed=False escape path exercised in
+    # work-list space.
+    arrays, live = synthetic_flat_index((150, 100, 90))
+    delta = synthetic_delta_arrays(3, TILE, fills=(5, 0, 12))
+    n_terms, cap = 3, TILE
+    bpt = cap // BLOCK
+    rows_total = arrays["postings"].shape[0] // LANES
+
+    window = 2 * TILE
+    s_w = -(-window // TILE)
+    out_rows = s_w * TILE_ROWS
+    q_n = 3
+    terms = np.array([0, 2, -1], np.int32)
+    m_off = np.array([0, 384, 256], np.int32)
+    m_neff = np.array([150, 90, 100], np.int32)
+    live_q = np.array([True, False, True])
+
+    tt = np.clip(terms, 0, n_terms - 1)
+    slab = delta["d_offsets"][tt] // cap
+    d_len = np.where(terms < 0, 0, delta["d_lengths"][tt]).astype(np.int32)
+    occ_per_term = np.sum(
+        delta["d_block_max"].reshape(n_terms, bpt) != INVALID_DOC, axis=1
+    ).astype(np.int32)
+    d_occ = np.where(terms < 0, 0, occ_per_term[tt]).astype(np.int32)
+    minfo = np.stack([m_off // LANES, m_neff], axis=-1).astype(np.int32)
+
+    wl = build_merge_worklist(
+        m_neff, tile=TILE, s_w=s_w, live_q=live_q,
+        kernel="contract", dense_steps=q_n * s_w,
+    )
+    scalars = (wl.desc, minfo, slab.astype(np.int32), d_len, d_occ)
+
+    tile = (TILE_ROWS, LANES)
+    flat_main = (rows_total, LANES)
+    cap_rows = cap // LANES
+    flat_delta = (delta["d_postings"].shape[0] // LANES, LANES)
+    d_live = int(cap * n_terms)
+    main_kw = dict(
+        indexing_mode=UNBLOCKED,
+        intended_map=_wl_main_window_intended,
+        consumed=_wl_main_consumed,
+        padding_from=live,
+        spare_tile=True,
+    )
+    m_map = _wl_main_window_map(rows_total)
+    if use_packed:
+        pk_m = pack_flat_postings(arrays["postings"])
+        pk_d = pack_flat_postings(
+            delta["d_postings"], span_blocks=max(DESC_PAD, bpt)
+        )
+        scalars = scalars + tuple(
+            np.asarray(x)
+            for pk in (pk_m, pk_d)
+            for x in (pk.blk_base, pk.blk_meta, pk.blk_woff)
+        )
+        rows_wm = np.asarray(pk_m.words).shape[0] // LANES
+        rows_wd = np.asarray(pk_d.words).shape[0] // LANES
+        mp_op = OperandContract(
+            "packed_words(main)",
+            (rows_wm, LANES),
+            "int32",
+            (pk_m.chunk_rows, LANES),
+            _wl_packed_window_map(7, pk_m.n_blocks, rows_wm, pk_m.chunk_rows),
+            indexing_mode=UNBLOCKED,
+            intended_map=_wl_packed_window_intended(7, pk_m.n_blocks),
+            consumed=_wl_main_consumed,
+            padding_from=int(np.asarray(pk_m.blk_woff)[-1]),
+            spare_tile=True,
+        )
+        dp_op = OperandContract(
+            "packed_words(delta)",
+            (rows_wd, LANES),
+            "int32",
+            (pk_d.chunk_rows, LANES),
+            _wl_packed_slab_map(
+                10, bpt, pk_d.n_blocks, rows_wd, pk_d.chunk_rows
+            ),
+            indexing_mode=UNBLOCKED,
+            intended_map=_wl_packed_slab_intended(10, bpt, pk_d.n_blocks),
+            consumed=_wl_slab_consumed,
+            padding_from=int(np.asarray(pk_d.blk_woff)[-1]),
+            spare_tile=True,
+        )
+    else:
+        mp_op = OperandContract(
+            "main_postings", flat_main, "int32", tile, m_map, **main_kw
+        )
+        dp_op = OperandContract(
+            "delta_postings",
+            flat_delta,
+            "int32",
+            (cap_rows, LANES),
+            _wl_slab_map,
+            intended_map=_wl_slab_intended,
+            consumed=_wl_slab_consumed,
+            padding_from=d_live,
+        )
+    ins = (
+        mp_op,
+        OperandContract(
+            "main_attrs", flat_main, "int32", tile, m_map, **main_kw
+        ),
+        dp_op,
+        OperandContract(
+            "delta_attrs",
+            flat_delta,
+            "int32",
+            (cap_rows, LANES),
+            _wl_slab_map,
+            intended_map=_wl_slab_intended,
+            consumed=_wl_slab_consumed,
+            padding_from=d_live,
+        ),
+    )
+    blk_o = (1, out_rows, LANES)
+    out_shape = (q_n, out_rows, LANES)
+    outs = tuple(
+        OperandContract(nm, out_shape, "int32", blk_o, _wl_merge_out_map)
+        for nm in ("docs", "attrs", "src")
+    )
+    suffix = "_packed" if use_packed else ""
+    return KernelContract(
+        name="merge_delta_windows_compact" + suffix,
+        site=site_of(merge_delta_windows_compact),
+        grid=(wl.desc.shape[0],),
+        scalars=scalars,
+        inputs=ins,
+        outputs=outs,
+        scratch=(
+            ((out_rows, LANES), "int32"),
+            ((out_rows, LANES), "int32"),
+        ),
+        revisit_dims=(0,),
+        notes="work-list compacted bitonic merge"
+        + (" (block-codec decode in VMEM)" if use_packed else ""),
+    )
+
+
+@kernel_contract("merge_delta_windows_compact")
+def _contract_merge_compact():
+    return _build_merge_compact_contract(False)
+
+
+@kernel_contract("merge_delta_windows_compact_packed")
+def _contract_merge_compact_packed():
+    return _build_merge_compact_contract(True)

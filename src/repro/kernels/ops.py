@@ -9,13 +9,18 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
-from repro.kernels.delta_merge import merge_delta_windows
+from repro.kernels.delta_merge import (
+    merge_delta_windows,
+    merge_delta_windows_compact,
+)
 from repro.kernels.posting_intersect import (
     compute_skip_map,
     driver_tile_spans,
     intersect_batched_block_skip,
     intersect_batched_driver_streamed,
+    intersect_batched_driver_streamed_compact,
     intersect_batched_streamed,
+    intersect_batched_streamed_compact,
     intersect_block_skip,
     skip_fraction,
     window_tile_spans,
@@ -115,6 +120,63 @@ def merge_windows(postings, attrs, m_off, m_neff, d_postings, d_attrs,
     )
 
 
+def intersect_streamed_compact(a_docs, a_attrs, a_live, terms, active,
+                               attr_filter, postings, offsets, lengths,
+                               block_max, d_postings=None, d_offsets=None,
+                               d_lengths=None, d_block_max=None,
+                               a_flags=None, *, packed=None, d_packed=None,
+                               s_max=None, interpret: bool | None = None,
+                               live_q=None):
+    """Work-list compacted :func:`intersect_streamed`: the grid's single
+    dimension enumerates live probe work items only (inert padding queries,
+    absent term slots, and empty spans launch zero steps).  ``live_q`` is
+    the host-side bool[Q] liveness vector; an all-inert batch launches
+    nothing.  Bit-identical to the dense comparator."""
+    if interpret is None:
+        interpret = default_interpret()
+    return intersect_batched_streamed_compact(
+        a_docs, a_attrs, a_live, terms, active, attr_filter,
+        postings, offsets, lengths, block_max,
+        d_postings, d_offsets, d_lengths, d_block_max, a_flags,
+        packed=packed, d_packed=d_packed,
+        s_max=s_max, interpret=interpret, live_q=live_q,
+    )
+
+
+def intersect_fullstream_compact(d_off, d_neff, terms, active, attr_filter,
+                                 postings, attrs, offsets, lengths,
+                                 block_max, *, window, packed=None,
+                                 s_max=None, interpret: bool | None = None,
+                                 live_q=None):
+    """Work-list compacted :func:`intersect_fullstream` (driver window as
+    kernel output).  Inert queries come back as (INVALID_DOC, 0)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return intersect_batched_driver_streamed_compact(
+        d_off, d_neff, terms, active, attr_filter,
+        postings, attrs, offsets, lengths, block_max,
+        window=window, packed=packed, s_max=s_max, interpret=interpret,
+        live_q=live_q,
+    )
+
+
+def merge_windows_compact(postings, attrs, m_off, m_neff, d_postings,
+                          d_attrs, d_offsets, d_lengths, d_block_max, terms,
+                          *, window, packed=None, d_packed=None,
+                          interpret: bool | None = None, live_q=None):
+    """Work-list compacted :func:`merge_windows`: one grid step per window
+    tile overlapping a live query's main range.  Inert queries come back
+    as the empty merged window (INVALID_DOC, INVALID_ATTR, src=1)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return merge_delta_windows_compact(
+        postings, attrs, m_off, m_neff, d_postings, d_attrs,
+        d_offsets, d_lengths, d_block_max, terms,
+        window=window, packed=packed, d_packed=d_packed,
+        interpret=interpret, live_q=live_q,
+    )
+
+
 def sort(x, *, interpret: bool | None = None):
     if interpret is None:
         interpret = default_interpret()
@@ -138,8 +200,11 @@ __all__ = [
     "intersect",
     "intersect_batched",
     "intersect_streamed",
+    "intersect_streamed_compact",
     "intersect_fullstream",
+    "intersect_fullstream_compact",
     "merge_windows",
+    "merge_windows_compact",
     "window_tile_spans",
     "driver_tile_spans",
     "sort",

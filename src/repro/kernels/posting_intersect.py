@@ -42,6 +42,13 @@ from repro.core.index import (
     TILE,
     PackedFlatArrays,
 )
+from repro.kernels.worklist import (
+    FLAG_FIRST,
+    FLAG_LAST,
+    FLAG_TERM_END,
+    FLAG_TERM_START,
+    build_intersect_worklist,
+)
 
 TILE_ROWS = 8
 LANES = 128
@@ -1212,6 +1219,632 @@ def intersect_batched_driver_streamed(
     )
 
 
+# ---------------------------------------------------------------------------
+# Work-list compacted variants: 1-D grids over dense descriptor tables
+# ---------------------------------------------------------------------------
+#
+# The dense streamed grids above are shaped by the *worst* query in the
+# batch — (Q, num_a, t_slots, s_grid) — and burn full grid steps on inert
+# padding queries, absent term slots and short probe spans, which the
+# ``consumed``/``active`` masks then throw away.  The compacted variants
+# make kernel work proportional to live work: the host-side builder
+# (:mod:`repro.kernels.worklist`) enumerates live (query, driver-tile,
+# term, probe-step) items from the same probe plan, packs them into a
+# dense int32 descriptor table, and the grid's only dimension is the item
+# index.  BlockSpec index maps read (q, i, probe tile) from the
+# scalar-prefetched table; the per-item flags replace the dense grid's
+# positional edge tests ((t == 0) & (j == 0) etc.) for init / term-reset /
+# fold / finalize.  Semantics are bit-identical to the dense kernels —
+# the dense grid stays registered as the A/B comparator, like
+# ``pallas_staged`` before it.
+
+
+def _wl_block_map(n, desc_ref, *_):
+    """Output / driver-window block of work item ``n``: (q, i)."""
+    return (desc_ref[n, 0], desc_ref[n, 1], 0)
+
+
+def _wl_probe_map(field, num_tiles):
+    """Blocked probe-stream map from a descriptor column holding an
+    absolute tile index (``-1`` = no probe this item; remapped to tile 0,
+    which the kernel never consumes — the ``pl.when(tile >= 0)`` guard)."""
+
+    def b_map(n, desc_ref, *_):
+        return (jnp.clip(desc_ref[n, field], 0, num_tiles - 1), 0)
+
+    return b_map
+
+
+def _wl_packed_probe_map(field, woff_idx, n_blocks, rows_w, chunk_rows):
+    """Packed-word analogue of :func:`_wl_probe_map`: descriptor tile ->
+    first block -> word row through ``blk_woff``, clamped like
+    :func:`_packed_flat_map`."""
+
+    def b_map(n, *refs):
+        tile = jnp.maximum(refs[0][n, field], 0)
+        b0c = jnp.minimum(tile * (TILE // BLOCK), n_blocks)
+        return (_packed_row0(refs[woff_idx], b0c, rows_w, chunk_rows), 0)
+
+    return b_map
+
+
+def _wl_driver_window_map(rows_total, info_idx):
+    """Unblocked driver-window map in work-list space: row0 of window tile
+    ``desc[n, 1]`` of query ``desc[n, 0]``, edge-clamped like
+    :func:`_driver_window_map` (safe iff the spare tile exists and the
+    kernel's ``in_win`` mask discards the clamped slots)."""
+
+    def ad_map(n, *refs):
+        q = refs[0][n, 0]
+        row = refs[info_idx][q, 0] + refs[0][n, 1] * TILE_ROWS
+        return (jnp.minimum(row, rows_total - TILE_ROWS), 0)
+
+    return ad_map
+
+
+def _wl_packed_driver_map(info_idx, woff_idx, n_blocks, rows_w, chunk_rows):
+    """Packed-word analogue of :func:`_wl_driver_window_map`."""
+
+    def ad_map(n, *refs):
+        q = refs[0][n, 0]
+        b0c = jnp.minimum(
+            refs[info_idx][q, 0] + refs[0][n, 1] * (TILE // BLOCK), n_blocks
+        )
+        return (_packed_row0(refs[woff_idx], b0c, rows_w, chunk_rows), 0)
+
+    return ad_map
+
+
+def _streamed_compact_kernel(
+    *refs, has_delta: bool, packed_m=None, packed_d=None,
+):
+    # Work-list twin of _streamed_kernel: one grid step per live work item.
+    # Scalar-prefetch order — wl (the descriptor table), bounds_m,
+    # [bounds_d,] attr, [packed descriptors (main [, delta])]; operands and
+    # scratch as in the dense kernel minus the plan scalars the flags
+    # replace (b_tile/n_b live inside the table, ``active`` is implicit:
+    # items only exist for active terms).
+    packed = packed_m is not None
+    if has_delta:
+        if packed:
+            (wl_ref, mb_ref, db_ref, attr_ref,
+             mba_ref, mme_ref, mwo_ref, dba_ref, dme_ref, dwo_ref,
+             a_ref, aa_ref, al_ref, af_ref, pm_ref, pd_ref,
+             out_ref, mm_ref, md_ref) = refs
+        else:
+            (wl_ref, mb_ref, db_ref, attr_ref,
+             a_ref, aa_ref, al_ref, af_ref, pm_ref, pd_ref,
+             out_ref, mm_ref, md_ref) = refs
+    else:
+        if packed:
+            (wl_ref, mb_ref, attr_ref, mba_ref, mme_ref, mwo_ref,
+             a_ref, aa_ref, al_ref, pm_ref, out_ref, mm_ref) = refs
+        else:
+            (wl_ref, mb_ref, attr_ref,
+             a_ref, aa_ref, al_ref, pm_ref, out_ref, mm_ref) = refs
+    n = pl.program_id(0)
+    q = wl_ref[n, 0]
+    t = wl_ref[n, 2]
+    flags = wl_ref[n, 4]
+
+    @pl.when((flags & FLAG_FIRST) != 0)
+    def _init_out():
+        out_ref[...] = jnp.ones_like(out_ref)
+
+    @pl.when((flags & FLAG_TERM_START) != 0)
+    def _init_members():
+        mm_ref[...] = jnp.zeros_like(mm_ref)
+        if has_delta:
+            md_ref[...] = jnp.zeros_like(md_ref)
+
+    def _probe(field, bounds_ref, tile_arr_ref, member_ref, desc=None):
+        tile = wl_ref[n, field]
+
+        @pl.when(tile >= 0)
+        def _():
+            if desc is None:
+                b = tile_arr_ref[...]
+            else:
+                # Packed stream: recompute the index map's exact b0c/row0
+                # (tile >= 0 here, so the max() matches the map's remap).
+                base_ref, meta_ref, woff_ref, (nbk, rows_w, cr) = desc
+                b0c = jnp.minimum(
+                    jnp.maximum(tile, 0) * (TILE // BLOCK), nbk
+                )
+                row0 = _packed_row0(woff_ref, b0c, rows_w, cr)
+                b = _decode_span(
+                    tile_arr_ref[...], base_ref, meta_ref, woff_ref,
+                    b0c, row0, TILE_ROWS,
+                )
+            pos = _tile_positions(tile)
+            in_range = (pos >= bounds_ref[q, t, 0]) & (pos < bounds_ref[q, t, 1])
+            b = jnp.where(in_range, b, INVALID_DOC)
+            m = _tile_member(a_ref[0], b)
+            member_ref[...] = member_ref[...] | m.astype(jnp.int32)
+
+    _probe(3, mb_ref, pm_ref, mm_ref,
+           desc=(mba_ref, mme_ref, mwo_ref, packed_m) if packed else None)
+    if has_delta:
+        _probe(5, db_ref, pd_ref, md_ref,
+               desc=(dba_ref, dme_ref, dwo_ref, packed_d) if packed else None)
+
+    # Term fold — no ``active`` gate: the builder only emits TERM_END items
+    # for active terms (inert tiles carry FIRST|LAST only).
+    @pl.when((flags & FLAG_TERM_END) != 0)
+    def _fold_term():
+        if has_delta:
+            aflg = af_ref[0]
+            main_ok = (aflg & jnp.int32(DOC_DEAD | DOC_SUPERSEDED)) == 0
+            delta_ok = (aflg & jnp.int32(DOC_DEAD)) == 0
+            term_ok = (
+                ((mm_ref[...] != 0) & main_ok)
+                | ((md_ref[...] != 0) & delta_ok)
+            ).astype(jnp.int32)
+        else:
+            term_ok = mm_ref[...]
+        out_ref[0] = out_ref[0] * term_ok
+
+    @pl.when((flags & FLAG_LAST) != 0)
+    def _finalize():
+        keep = _fused_keep(
+            a_ref[0], aa_ref[0], attr_ref[q, 0], attr_ref[q, 1] != 0,
+            live=al_ref[0],
+        )
+        out_ref[0] = out_ref[0] * keep
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _streamed_compact_call(
+    desc, bounds_m, bounds_d, attr_filter,
+    a_docs, a_attrs, a_live, a_flags,
+    postings, d_postings, packed, d_packed, live_q,
+    *, interpret,
+):
+    # The whole post-builder half runs under one jit: operand padding,
+    # reshapes, and the pallas launch compile together, so a repeated
+    # work-list shape costs one cached dispatch (pow2 bucketing by
+    # worklist_pad keeps the shape cache small).
+    has_delta = bounds_d is not None
+    use_packed = packed is not None
+    q_n, n_a = a_docs.shape
+    a = _pad_to_tile(a_docs, INVALID_DOC)
+    aa = _pad_to_tile(a_attrs, -1)
+    al = _pad_to_tile(a_live.astype(jnp.int32), 0)
+    num_a = a.shape[1] // TILE
+    a2 = a.reshape(q_n, num_a * TILE_ROWS, LANES)
+    aa2 = aa.reshape(q_n, num_a * TILE_ROWS, LANES)
+    al2 = al.reshape(q_n, num_a * TILE_ROWS, LANES)
+    af2 = None
+    if has_delta:
+        af2 = _pad_to_tile(a_flags.astype(jnp.int32), 0).reshape(
+            q_n, num_a * TILE_ROWS, LANES
+        )
+    attr_params = jnp.stack(
+        [attr_filter.astype(jnp.int32), (attr_filter >= 0).astype(jnp.int32)],
+        axis=-1,
+    )
+    pdesc_m = pdesc_d = pk_m = pk_d = stream_d = None
+    if use_packed:
+        stream_m = packed.words.reshape(-1, LANES)
+        pk_m = (packed.n_blocks, stream_m.shape[0], packed.chunk_rows)
+        pdesc_m = (packed.blk_base, packed.blk_meta, packed.blk_woff)
+        if has_delta:
+            stream_d = d_packed.words.reshape(-1, LANES)
+            pk_d = (
+                d_packed.n_blocks, stream_d.shape[0], d_packed.chunk_rows
+            )
+            pdesc_d = (
+                d_packed.blk_base, d_packed.blk_meta, d_packed.blk_woff
+            )
+    else:
+        stream_m = postings.reshape(-1, LANES)
+        if has_delta:
+            stream_d = d_postings.reshape(-1, LANES)
+    n_steps = desc.shape[0]
+
+    scalars = [desc, bounds_m]
+    if has_delta:
+        scalars.append(bounds_d)
+    scalars.append(attr_params)
+    if use_packed:
+        woff_m_idx = len(scalars) + 2
+        scalars += list(pdesc_m)
+        if has_delta:
+            woff_d_idx = len(scalars) + 2
+            scalars += list(pdesc_d)
+
+    operands = [a2, aa2, al2]
+    if has_delta:
+        operands.append(af2)
+    blk_a = pl.BlockSpec((1, TILE_ROWS, LANES), _wl_block_map)
+    in_specs = [blk_a for _ in operands]
+    if use_packed:
+        in_specs.append(
+            pl.BlockSpec(
+                (pk_m[2], LANES),
+                _wl_packed_probe_map(3, woff_m_idx, *pk_m),
+                indexing_mode=pl.unblocked,
+            )
+        )
+    else:
+        num_m = stream_m.shape[0] // TILE_ROWS
+        in_specs.append(
+            pl.BlockSpec((TILE_ROWS, LANES), _wl_probe_map(3, num_m))
+        )
+    operands.append(stream_m)
+    scratch = [pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)]
+    if has_delta:
+        if use_packed:
+            in_specs.append(
+                pl.BlockSpec(
+                    (pk_d[2], LANES),
+                    _wl_packed_probe_map(5, woff_d_idx, *pk_d),
+                    indexing_mode=pl.unblocked,
+                )
+            )
+        else:
+            num_d = stream_d.shape[0] // TILE_ROWS
+            in_specs.append(
+                pl.BlockSpec((TILE_ROWS, LANES), _wl_probe_map(5, num_d))
+            )
+        operands.append(stream_d)
+        scratch.append(pltpu.VMEM((TILE_ROWS, LANES), jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
+        grid=(n_steps,),
+        in_specs=in_specs,
+        out_specs=blk_a,
+        scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _streamed_compact_kernel, has_delta=has_delta,
+            packed_m=pk_m, packed_d=pk_d,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (q_n, num_a * TILE_ROWS, LANES), jnp.int32
+        ),
+        interpret=interpret,
+    )(*scalars, *operands)
+    out = out.reshape(q_n, -1)[:, :n_a]
+    if live_q is not None:
+        out = jnp.where(live_q[:, None], out, 0)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("window", "s_tiles"))
+def _streamed_plan(a_docs, terms, offsets, lengths, block_max, *, window,
+                   s_tiles):
+    a = _pad_to_tile(a_docs, INVALID_DOC)
+    a_spans = _a_tile_spans(a)
+    b_tile, n_b, bounds = _probe_plan(
+        a_spans, terms, offsets, lengths, block_max,
+        window=window, s_tiles=s_tiles,
+    )
+    return a_spans[2], b_tile, n_b, bounds
+
+
+def intersect_batched_streamed_compact(
+    a_docs: jnp.ndarray,
+    a_attrs: jnp.ndarray,
+    a_live: jnp.ndarray,
+    terms: jnp.ndarray,
+    active: jnp.ndarray,
+    attr_filter: jnp.ndarray,
+    postings: jnp.ndarray,
+    offsets: jnp.ndarray, lengths: jnp.ndarray, block_max: jnp.ndarray,
+    d_postings: jnp.ndarray | None = None,
+    d_offsets: jnp.ndarray | None = None,
+    d_lengths: jnp.ndarray | None = None,
+    d_block_max: jnp.ndarray | None = None,
+    a_flags: jnp.ndarray | None = None,
+    *,
+    packed: PackedFlatArrays | None = None,
+    d_packed: PackedFlatArrays | None = None,
+    s_max: int | None = None,
+    interpret: bool = False,
+    live_q: np.ndarray | None = None,
+) -> jnp.ndarray:
+    """Work-list compacted :func:`intersect_batched_streamed`.
+
+    Same arguments and bit-identical results, plus ``live_q`` (host bool[Q];
+    ``None`` = all live): inert padding queries contribute zero grid steps
+    and their output rows are masked to 0 host-side.  The probe plan is
+    computed on device, pulled to the host, and compiled into a dense
+    descriptor table; the kernel launch is a 1-D grid over live work items
+    only.  An all-inert batch launches nothing.
+    """
+    has_delta = d_postings is not None
+    use_packed = packed is not None
+    if use_packed and has_delta and d_packed is None:
+        raise ValueError("packed codec needs d_packed when delta arrays are given")
+    q_n, n_a = a_docs.shape
+    window = n_a
+    t_slots = terms.shape[1]
+    num_a = -(-n_a // TILE)
+
+    s_tiles_m = -(-window // TILE) + 1
+    a_any, b_tile, n_b, bounds_m = _streamed_plan(
+        a_docs, terms, offsets, lengths, block_max,
+        window=window, s_tiles=s_tiles_m,
+    )
+    s_grid_m = _clamp_s_max(s_max, s_tiles_m)
+    s_grid = s_grid_m
+    bounds_d = n_d = d_tile = None
+    if has_delta:
+        cap = d_block_max.shape[0] * BLOCK // d_offsets.shape[0]
+        s_tiles_d = -(-cap // TILE) + 1
+        _, d_tile, n_d, bounds_d = _streamed_plan(
+            a_docs, terms, d_offsets, d_lengths, d_block_max,
+            window=cap, s_tiles=s_tiles_d,
+        )
+        s_grid = max(s_grid_m, _clamp_s_max(s_max, s_tiles_d))
+
+    # one batched host pull for everything the builder needs
+    n_d_h = d_tile_h = None
+    if has_delta:
+        active_h, n_b_h, b_tile_h, a_any_h, n_d_h, d_tile_h = jax.device_get(
+            (active, n_b, b_tile, a_any, n_d, d_tile)
+        )
+    else:
+        active_h, n_b_h, b_tile_h, a_any_h = jax.device_get(
+            (active, n_b, b_tile, a_any)
+        )
+    active_h = np.asarray(active_h).astype(np.int32)
+    n_b_h = np.minimum(np.asarray(n_b_h), s_grid_m) * active_h[:, :, None]
+    if has_delta:
+        n_d_h = np.minimum(np.asarray(n_d_h), s_grid) * active_h[:, :, None]
+        d_tile_h = np.asarray(d_tile_h)
+
+    suffix = "_packed" if use_packed else ""
+    wl = build_intersect_worklist(
+        n_b_h, np.asarray(b_tile_h), active_h, np.asarray(a_any_h),
+        n_d=n_d_h, d_tile=d_tile_h, live_q=live_q,
+        kernel="intersect_batched_streamed_compact" + suffix,
+        dense_steps=q_n * num_a * t_slots * s_grid,
+    )
+    if wl.n_items == 0:
+        return jnp.zeros((q_n, n_a), jnp.int32)
+
+    lq = None if live_q is None else jnp.asarray(np.asarray(live_q))
+    return _streamed_compact_call(
+        jnp.asarray(wl.desc), bounds_m, bounds_d, attr_filter,
+        a_docs, a_attrs, a_live, a_flags,
+        postings, d_postings, packed, d_packed, lq,
+        interpret=interpret,
+    )
+
+
+def _driver_compact_kernel(*refs, packed=None):
+    # Work-list twin of _driver_streamed_kernel.  Scalar-prefetch order:
+    # wl, bounds, attr, a_info, [packed descriptors]; the flags replace the
+    # (t, j) edge tests and ``active`` is implicit in item existence.
+    if packed is not None:
+        (wl_ref, mb_ref, attr_ref, ainfo_ref,
+         mba_ref, mme_ref, mwo_ref,
+         ad_ref, aa_ref, pm_ref, outd_ref, outm_ref,
+         mm_ref, adk_ref) = refs
+        nbk, rows_w, cr = packed
+    else:
+        (wl_ref, mb_ref, attr_ref, ainfo_ref,
+         ad_ref, aa_ref, pm_ref, outd_ref, outm_ref, mm_ref) = refs
+    n = pl.program_id(0)
+    q = wl_ref[n, 0]
+    i = wl_ref[n, 1]
+    t = wl_ref[n, 2]
+    flags = wl_ref[n, 4]
+
+    if packed is not None:
+        # Decode the driver tile on the group's first item; the scratch
+        # persists across the group's contiguous grid steps.
+        @pl.when((flags & FLAG_FIRST) != 0)
+        def _decode_driver():
+            b0c = jnp.minimum(ainfo_ref[q, 0] + i * (TILE // BLOCK), nbk)
+            row0 = _packed_row0(mwo_ref, b0c, rows_w, cr)
+            adk_ref[...] = _decode_span(
+                ad_ref[...], mba_ref, mme_ref, mwo_ref,
+                b0c, row0, TILE_ROWS,
+            )
+
+        a_src = adk_ref
+    else:
+        a_src = ad_ref
+
+    in_win = _tile_positions(i) < ainfo_ref[q, 1]
+    a = jnp.where(in_win, a_src[...], INVALID_DOC)
+
+    @pl.when((flags & FLAG_FIRST) != 0)
+    def _init_out():
+        outm_ref[...] = jnp.ones_like(outm_ref)
+        outd_ref[0] = a
+
+    @pl.when((flags & FLAG_TERM_START) != 0)
+    def _init_member():
+        mm_ref[...] = jnp.zeros_like(mm_ref)
+
+    tile = wl_ref[n, 3]
+
+    @pl.when(tile >= 0)
+    def _probe():
+        if packed is None:
+            b = pm_ref[...]
+        else:
+            b0c = jnp.minimum(jnp.maximum(tile, 0) * (TILE // BLOCK), nbk)
+            row0 = _packed_row0(mwo_ref, b0c, rows_w, cr)
+            b = _decode_span(
+                pm_ref[...], mba_ref, mme_ref, mwo_ref,
+                b0c, row0, TILE_ROWS,
+            )
+        pos = _tile_positions(tile)
+        in_range = (pos >= mb_ref[q, t, 0]) & (pos < mb_ref[q, t, 1])
+        b = jnp.where(in_range, b, INVALID_DOC)
+        m = _tile_member(a, b)
+        mm_ref[...] = mm_ref[...] | m.astype(jnp.int32)
+
+    @pl.when((flags & FLAG_TERM_END) != 0)
+    def _fold_term():
+        outm_ref[0] = outm_ref[0] * mm_ref[...]
+
+    @pl.when((flags & FLAG_LAST) != 0)
+    def _finalize():
+        aa = jnp.where(in_win, aa_ref[...], INVALID_ATTR)
+        keep = _fused_keep(a, aa, attr_ref[q, 0], attr_ref[q, 1] != 0)
+        outm_ref[0] = outm_ref[0] * keep
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _driver_compact_call(
+    desc, bounds, attr_filter, d_off, d_neff,
+    postings, attrs, packed, live_q,
+    *, window, interpret,
+):
+    # Post-builder half under one jit (see _streamed_compact_call).
+    q_n = attr_filter.shape[0]
+    num_a = -(-window // TILE)
+    rows_total = attrs.shape[0] // LANES
+    n_steps = desc.shape[0]
+    attr_params = jnp.stack(
+        [attr_filter.astype(jnp.int32), (attr_filter >= 0).astype(jnp.int32)],
+        axis=-1,
+    )
+    a_info = jnp.stack(
+        [d_off.astype(jnp.int32) // LANES, d_neff.astype(jnp.int32)], axis=-1
+    )
+    pa2 = attrs.reshape(rows_total, LANES)
+    if packed is not None:
+        words_m = packed.words.reshape(-1, LANES)
+        pk = (packed.n_blocks, words_m.shape[0], packed.chunk_rows)
+        stream_a = stream_b = words_m
+        pdesc = (packed.blk_base, packed.blk_meta, packed.blk_woff)
+    else:
+        pk = None
+        pdesc = None
+        stream_a = stream_b = postings.reshape(rows_total, LANES)
+
+    scalars = [desc, bounds, attr_params, a_info]
+    scratch = [pltpu.VMEM((TILE_ROWS, LANES), jnp.int32)]
+    ad_map = _wl_driver_window_map(rows_total, 3)
+    if pk is not None:
+        scalars += list(pdesc)
+        chunk = (pk[2], LANES)
+        in_specs = [
+            pl.BlockSpec(
+                chunk, _wl_packed_driver_map(3, 6, *pk),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec((TILE_ROWS, LANES), ad_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec(
+                chunk, _wl_packed_probe_map(3, 6, *pk),
+                indexing_mode=pl.unblocked,
+            ),
+        ]
+        scratch.append(pltpu.VMEM((TILE_ROWS, LANES), jnp.int32))
+    else:
+        num_m = stream_b.shape[0] // TILE_ROWS
+        in_specs = [
+            pl.BlockSpec((TILE_ROWS, LANES), ad_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((TILE_ROWS, LANES), ad_map, indexing_mode=pl.unblocked),
+            pl.BlockSpec((TILE_ROWS, LANES), _wl_probe_map(3, num_m)),
+        ]
+    operands = [stream_a, pa2, stream_b]
+
+    blk_o = pl.BlockSpec((1, TILE_ROWS, LANES), _wl_block_map)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
+        grid=(n_steps,),
+        in_specs=in_specs,
+        out_specs=[blk_o, blk_o],
+        scratch_shapes=scratch,
+    )
+    shape = jax.ShapeDtypeStruct((q_n, num_a * TILE_ROWS, LANES), jnp.int32)
+    docs, mask = pl.pallas_call(
+        functools.partial(_driver_compact_kernel, packed=pk),
+        grid_spec=grid_spec,
+        out_shape=[shape, shape],
+        interpret=interpret,
+    )(*scalars, *operands)
+    docs = docs.reshape(q_n, -1)[:, :window]
+    mask = mask.reshape(q_n, -1)[:, :window]
+    if live_q is not None:
+        lq = live_q[:, None]
+        docs = jnp.where(lq, docs, INVALID_DOC)
+        mask = jnp.where(lq, mask, 0)
+    return docs, mask
+
+
+@functools.partial(jax.jit, static_argnames=("window", "num_a", "s_tiles"))
+def _driver_plan(
+    d_off, d_neff, terms, offsets, lengths, block_max,
+    *, window, num_a, s_tiles,
+):
+    a_spans = jax.vmap(
+        functools.partial(driver_tile_spans, block_max, s_tiles=num_a)
+    )(d_off, d_neff)
+    b_tile, n_b, bounds = _probe_plan(
+        a_spans, terms, offsets, lengths, block_max,
+        window=window, s_tiles=s_tiles,
+    )
+    return a_spans[2], b_tile, n_b, bounds
+
+
+def intersect_batched_driver_streamed_compact(
+    d_off: jnp.ndarray,
+    d_neff: jnp.ndarray,
+    terms: jnp.ndarray,
+    active: jnp.ndarray,
+    attr_filter: jnp.ndarray,
+    postings: jnp.ndarray,
+    attrs: jnp.ndarray,
+    offsets: jnp.ndarray, lengths: jnp.ndarray, block_max: jnp.ndarray,
+    *,
+    window: int,
+    packed: PackedFlatArrays | None = None,
+    s_max: int | None = None,
+    interpret: bool = False,
+    live_q: np.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Work-list compacted :func:`intersect_batched_driver_streamed`.
+
+    Same arguments and bit-identical ``(docs, mask)``, plus ``live_q``:
+    inert queries contribute zero grid steps and their output rows come
+    back as (INVALID_DOC, 0).  An all-inert batch launches nothing.
+    """
+    q_n, t_slots = terms.shape
+    num_a = -(-window // TILE)
+    s_tiles_b = -(-window // TILE) + 1
+    a_any, b_tile, n_b, bounds = _driver_plan(
+        d_off, d_neff, terms, offsets, lengths, block_max,
+        window=window, num_a=num_a, s_tiles=s_tiles_b,
+    )
+    s_grid = _clamp_s_max(s_max, s_tiles_b)
+    active_h, n_b_h, b_tile_h, a_any_h = jax.device_get(
+        (active, n_b, b_tile, a_any)
+    )
+    active_h = np.asarray(active_h).astype(np.int32)
+    n_b_h = np.minimum(np.asarray(n_b_h), s_grid) * active_h[:, :, None]
+    suffix = "_packed" if packed is not None else ""
+    wl = build_intersect_worklist(
+        n_b_h, np.asarray(b_tile_h), active_h, np.asarray(a_any_h),
+        live_q=live_q,
+        kernel="intersect_batched_driver_streamed_compact" + suffix,
+        dense_steps=q_n * num_a * t_slots * s_grid,
+    )
+    if wl.n_items == 0:
+        return (
+            jnp.full((q_n, window), INVALID_DOC, jnp.int32),
+            jnp.zeros((q_n, window), jnp.int32),
+        )
+
+    lq = None if live_q is None else jnp.asarray(np.asarray(live_q))
+    return _driver_compact_call(
+        jnp.asarray(wl.desc), bounds, attr_filter, d_off, d_neff,
+        postings, attrs, packed, lq,
+        window=window, interpret=interpret,
+    )
+
+
 def skip_fraction(a_docs: jnp.ndarray, b_docs: jnp.ndarray) -> jnp.ndarray:
     """Diagnostic: fraction of B-tile DMAs avoided by posting skipping."""
     a = _pad_to_tile(a_docs, INVALID_DOC)
@@ -1760,3 +2393,380 @@ def _contract_driver_streamed():
 @kernel_contract("intersect_batched_driver_streamed_packed")
 def _contract_driver_streamed_packed():
     return _build_driver_streamed_contract(True)
+
+
+# --- work-list compacted variants ------------------------------------------
+#
+# The compacted contracts run in *work-list space*: the grid is the 1-D
+# item index, the descriptor table is scalars[0], and every index map
+# depends on prefetched descriptor columns.  ``revisit_dims=(0,)`` makes
+# the alias check degenerate to the contiguity scan — exactly the builder
+# invariant (items grouped by (q, i), padding clones the last real item)
+# the negative fixture ``fx_worklist_missing_spare`` violates.  The
+# clamp-escape check covers the descriptor no-probe sentinel: a ``-1``
+# probe field remaps to tile 0, which the kernel must not consume.
+
+
+def _wl_probe_intended(field):
+    """Pre-remap address of :func:`_wl_probe_map` — contract only."""
+
+    def b_map(n, *refs):
+        return (refs[0][n, field], 0)
+
+    return b_map
+
+
+def _wl_field_consumed(field):
+    def consumed(n, *refs):
+        return bool(refs[0][n, field] >= 0)
+
+    return consumed
+
+
+def _wl_packed_probe_intended(field, woff_idx, n_blocks):
+    """Pre-rows-clamp address of :func:`_wl_packed_probe_map` (descriptor
+    clamps stay, as in :func:`_packed_flat_intended`)."""
+
+    def b_map(n, *refs):
+        tile = jnp.maximum(refs[0][n, field], 0)
+        b0c = jnp.minimum(tile * (TILE // BLOCK), n_blocks)
+        return (refs[woff_idx][b0c] // LANES, 0)
+
+    return b_map
+
+
+def _wl_driver_window_intended(info_idx):
+    def ad_map(n, *refs):
+        q = refs[0][n, 0]
+        return (refs[info_idx][q, 0] + refs[0][n, 1] * TILE_ROWS, 0)
+
+    return ad_map
+
+
+def _wl_driver_consumed(info_idx):
+    def consumed(n, *refs):
+        q = refs[0][n, 0]
+        return bool(refs[0][n, 1] * TILE < refs[info_idx][q, 1])
+
+    return consumed
+
+
+def _wl_packed_driver_intended(info_idx, woff_idx, n_blocks):
+    def ad_map(n, *refs):
+        q = refs[0][n, 0]
+        b0c = jnp.minimum(
+            refs[info_idx][q, 0] + refs[0][n, 1] * (TILE // BLOCK), n_blocks
+        )
+        return (refs[woff_idx][b0c] // LANES, 0)
+
+    return ad_map
+
+
+def _wl_packed_stream_op(name, pk, field, woff_idx) -> "OperandContract":
+    rows_w = pk.words.shape[0] // LANES
+    live_words = int(np.asarray(pk.blk_woff)[-1])
+    return OperandContract(
+        name,
+        (rows_w, LANES),
+        "int32",
+        (pk.chunk_rows, LANES),
+        _wl_packed_probe_map(
+            field, woff_idx, pk.n_blocks, rows_w, pk.chunk_rows
+        ),
+        indexing_mode=UNBLOCKED,
+        intended_map=_wl_packed_probe_intended(field, woff_idx, pk.n_blocks),
+        consumed=_wl_field_consumed(field),
+        padding_from=live_words,
+        spare_tile=True,
+    )
+
+
+def _build_streamed_compact_contract(use_packed: bool) -> KernelContract:
+    from repro.core.index import DESC_PAD, pack_flat_postings
+    from repro.kernels.registry import synthetic_delta_arrays
+
+    arrays, live = synthetic_flat_index(_CANON_LISTS)
+    postings = arrays["postings"]
+    offsets = arrays["offsets"]
+    lengths = arrays["lengths"]
+    block_max = arrays["block_max"]
+    delta = synthetic_delta_arrays(3, TILE, fills=(5, 0, 12))
+
+    q_n, t_slots, window = 2, 2, TILE
+    terms = np.array([[1, 2], [0, -1]], np.int32)
+    active = np.array([[1, 1], [1, 0]], np.int32)
+    a = np.stack(
+        [
+            _host_window(postings, 0, 150, window, INVALID_DOC),
+            _host_window(postings, 384, 90, window, INVALID_DOC),
+        ]
+    )
+    num_a = 1
+    num_m = postings.shape[0] // TILE
+    s_tiles_m = -(-window // TILE) + 1
+    a_spans = _a_tile_spans(jnp.asarray(a))
+    b_tile, n_b, bounds_m = _probe_plan(
+        a_spans,
+        jnp.asarray(terms),
+        jnp.asarray(offsets),
+        jnp.asarray(lengths),
+        jnp.asarray(block_max),
+        window=window,
+        s_tiles=s_tiles_m,
+    )
+    s_grid = _clamp_s_max(None, s_tiles_m)
+    n_b = np.minimum(np.asarray(n_b), s_grid) * active[:, :, None]
+
+    d_off, d_len, d_bm = (
+        delta["d_offsets"],
+        delta["d_lengths"],
+        delta["d_block_max"],
+    )
+    cap = d_bm.shape[0] * BLOCK // d_off.shape[0]
+    num_d = delta["d_postings"].shape[0] // TILE
+    s_tiles_d = -(-cap // TILE) + 1
+    d_tile, n_d, bounds_d = _probe_plan(
+        a_spans,
+        jnp.asarray(terms),
+        jnp.asarray(d_off),
+        jnp.asarray(d_len),
+        jnp.asarray(d_bm),
+        window=cap,
+        s_tiles=s_tiles_d,
+    )
+    s_grid = max(s_grid, _clamp_s_max(None, s_tiles_d))
+    n_d = np.minimum(np.asarray(n_d), s_grid) * active[:, :, None]
+
+    wl = build_intersect_worklist(
+        n_b, np.asarray(b_tile), active, np.asarray(a_spans[2]),
+        n_d=n_d, d_tile=np.asarray(d_tile),
+        kernel="contract", dense_steps=q_n * num_a * t_slots * s_grid,
+    )
+    scalars = [
+        wl.desc,
+        np.asarray(bounds_m),
+        np.asarray(bounds_d),
+        _attr_params(np.array([-1, -1], np.int32)),
+    ]
+    blk_a = (1, TILE_ROWS, LANES)
+    tile = (TILE_ROWS, LANES)
+    a_shape = (q_n, num_a * TILE_ROWS, LANES)
+    ins = [
+        OperandContract(nm, a_shape, "int32", blk_a, _wl_block_map)
+        for nm in ("a_docs", "a_attrs", "a_live", "a_flags")
+    ]
+    if use_packed:
+        pk_m = pack_flat_postings(arrays["postings"])
+        pk_d = pack_flat_postings(
+            delta["d_postings"], span_blocks=max(DESC_PAD, cap // BLOCK)
+        )
+        woff_m, woff_d = 6, 9
+        for pk in (pk_m, pk_d):
+            scalars += [
+                np.asarray(pk.blk_base),
+                np.asarray(pk.blk_meta),
+                np.asarray(pk.blk_woff),
+            ]
+        ins.append(_wl_packed_stream_op("packed_words(main)", pk_m, 3, woff_m))
+        ins.append(_wl_packed_stream_op("packed_words(delta)", pk_d, 5, woff_d))
+    else:
+        ins.append(
+            OperandContract(
+                "postings",
+                (num_m * TILE_ROWS, LANES),
+                "int32",
+                tile,
+                _wl_probe_map(3, num_m),
+                intended_map=_wl_probe_intended(3),
+                consumed=_wl_field_consumed(3),
+                padding_from=live,
+            )
+        )
+        ins.append(
+            OperandContract(
+                "d_postings",
+                (num_d * TILE_ROWS, LANES),
+                "int32",
+                tile,
+                _wl_probe_map(5, num_d),
+                intended_map=_wl_probe_intended(5),
+                consumed=_wl_field_consumed(5),
+                padding_from=int(cap * d_off.shape[0]),
+            )
+        )
+    suffix = "_packed" if use_packed else ""
+    return KernelContract(
+        name="intersect_batched_streamed_compact" + suffix,
+        site=site_of(intersect_batched_streamed_compact),
+        grid=(wl.desc.shape[0],),
+        scalars=tuple(scalars),
+        inputs=tuple(ins),
+        outputs=(
+            OperandContract("mask", a_shape, "int32", blk_a, _wl_block_map),
+        ),
+        scratch=(((TILE_ROWS, LANES), "int32"), ((TILE_ROWS, LANES), "int32")),
+        revisit_dims=(0,),
+        notes="work-list compacted merge-on-read configuration"
+        + (", block-codec probe streams" if use_packed else ""),
+    )
+
+
+@kernel_contract("intersect_batched_streamed_compact")
+def _contract_intersect_streamed_compact():
+    return _build_streamed_compact_contract(False)
+
+
+@kernel_contract("intersect_batched_streamed_compact_packed")
+def _contract_intersect_streamed_compact_packed():
+    return _build_streamed_compact_contract(True)
+
+
+def _build_driver_compact_contract(use_packed: bool) -> KernelContract:
+    from repro.core.index import pack_flat_postings
+
+    arrays, live = synthetic_flat_index(_CANON_LISTS)
+    offsets = arrays["offsets"]
+    lengths = arrays["lengths"]
+    block_max = arrays["block_max"]
+    num_m = arrays["postings"].shape[0] // TILE
+    rows_total = num_m * TILE_ROWS
+
+    # Same canonical instance as the dense driver-streamed contract: the
+    # edge list's second window tile still forces the clamp path.
+    q_n, t_slots, window = 2, 2, 2 * TILE
+    d_off = np.array([0, 384], np.int32)
+    d_neff = np.array([150, 90], np.int32)
+    terms = np.array([[1, 2], [0, -1]], np.int32)
+    active = np.array([[1, 1], [1, 0]], np.int32)
+
+    num_a = -(-window // TILE)
+    a_spans = jax.vmap(
+        functools.partial(
+            driver_tile_spans, jnp.asarray(block_max), s_tiles=num_a
+        )
+    )(jnp.asarray(d_off), jnp.asarray(d_neff))
+    s_tiles_b = -(-window // TILE) + 1
+    b_tile, n_b, bounds = _probe_plan(
+        a_spans,
+        jnp.asarray(terms),
+        jnp.asarray(offsets),
+        jnp.asarray(lengths),
+        jnp.asarray(block_max),
+        window=window,
+        s_tiles=s_tiles_b,
+    )
+    s_grid = _clamp_s_max(None, s_tiles_b)
+    n_b = np.minimum(np.asarray(n_b), s_grid) * active[:, :, None]
+    wl = build_intersect_worklist(
+        n_b, np.asarray(b_tile), active, np.asarray(a_spans[2]),
+        kernel="contract", dense_steps=q_n * num_a * t_slots * s_grid,
+    )
+    a_info = np.stack([d_off // LANES, d_neff], axis=-1).astype(np.int32)
+    scalars = [
+        wl.desc,
+        np.asarray(bounds),
+        _attr_params(np.array([-1, -1], np.int32)),
+        a_info,
+    ]
+
+    tile = (TILE_ROWS, LANES)
+    flat_shape = (rows_total, LANES)
+    out_shape = (q_n, num_a * TILE_ROWS, LANES)
+    stream_kw = dict(
+        indexing_mode=UNBLOCKED,
+        intended_map=_wl_driver_window_intended(3),
+        consumed=_wl_driver_consumed(3),
+        padding_from=live,
+        spare_tile=True,
+    )
+    if use_packed:
+        pk = pack_flat_postings(arrays["postings"])
+        scalars += [
+            np.asarray(pk.blk_base),
+            np.asarray(pk.blk_meta),
+            np.asarray(pk.blk_woff),
+        ]
+        rows_w = pk.words.shape[0] // LANES
+        live_words = int(np.asarray(pk.blk_woff)[-1])
+        ins = (
+            OperandContract(
+                "packed_words(driver)",
+                (rows_w, LANES),
+                "int32",
+                (pk.chunk_rows, LANES),
+                _wl_packed_driver_map(3, 6, pk.n_blocks, rows_w, pk.chunk_rows),
+                indexing_mode=UNBLOCKED,
+                intended_map=_wl_packed_driver_intended(3, 6, pk.n_blocks),
+                consumed=_wl_driver_consumed(3),
+                padding_from=live_words,
+                spare_tile=True,
+            ),
+            OperandContract(
+                "attrs(driver)",
+                flat_shape,
+                "int32",
+                tile,
+                _wl_driver_window_map(rows_total, 3),
+                **stream_kw,
+            ),
+            _wl_packed_stream_op("packed_words(probe)", pk, 3, 6),
+        )
+    else:
+        ins = (
+            OperandContract(
+                "postings(driver)",
+                flat_shape,
+                "int32",
+                tile,
+                _wl_driver_window_map(rows_total, 3),
+                **stream_kw,
+            ),
+            OperandContract(
+                "attrs(driver)",
+                flat_shape,
+                "int32",
+                tile,
+                _wl_driver_window_map(rows_total, 3),
+                **stream_kw,
+            ),
+            OperandContract(
+                "postings(probe)",
+                flat_shape,
+                "int32",
+                tile,
+                _wl_probe_map(3, num_m),
+                intended_map=_wl_probe_intended(3),
+                consumed=_wl_field_consumed(3),
+                padding_from=live,
+            ),
+        )
+    blk_o = (1, TILE_ROWS, LANES)
+    scratch = [((TILE_ROWS, LANES), "int32")]
+    if use_packed:
+        scratch.append(((TILE_ROWS, LANES), "int32"))
+    suffix = "_packed" if use_packed else ""
+    return KernelContract(
+        name="intersect_batched_driver_streamed_compact" + suffix,
+        site=site_of(intersect_batched_driver_streamed_compact),
+        grid=(wl.desc.shape[0],),
+        scalars=tuple(scalars),
+        inputs=ins,
+        outputs=(
+            OperandContract("docs", out_shape, "int32", blk_o, _wl_block_map),
+            OperandContract("mask", out_shape, "int32", blk_o, _wl_block_map),
+        ),
+        scratch=tuple(scratch),
+        revisit_dims=(0,),
+        notes="work-list compacted fully-streamed read path"
+        + (", block-codec posting streams" if use_packed else ""),
+    )
+
+
+@kernel_contract("intersect_batched_driver_streamed_compact")
+def _contract_driver_compact():
+    return _build_driver_compact_contract(False)
+
+
+@kernel_contract("intersect_batched_driver_streamed_compact_packed")
+def _contract_driver_compact_packed():
+    return _build_driver_compact_contract(True)

@@ -1,0 +1,244 @@
+"""Query-adaptive work compaction: dense work-list grids (host-side builder).
+
+The streamed kernel family (posting_intersect / delta_merge) launches dense
+grids shaped by the *worst* query in the batch: ``(Q, num_driver_tiles,
+T_MAX, s_max)``.  Inert padding queries (the zero-recompile batching trick),
+queries with fewer than ``T_MAX`` terms, and short posting windows all burn
+full grid steps that the kernels' ``consumed``/``active`` masks then throw
+away — exactly the load-skew waste the paper's slave cost model (§4-§5,
+Formula (17)) assumes away.  This module makes kernel work proportional to
+*live* work: it enumerates the live ``(query, driver_tile)`` and ``(query,
+term, probe_tile)`` work items from the skip-table spans the engine already
+computes, packs them into a dense int32 descriptor table, and the compacted
+kernels run a 1-D grid over the table — zero grid steps for anything inert.
+
+Descriptor row layout (``desc[n]``, int32[8]):
+
+==  =======================================================================
+ 0  query index ``q``
+ 1  driver/window tile index ``i`` (the output block row)
+ 2  term slot ``t`` (bounds lookup; 0 when no term is probed)
+ 3  absolute main-stream probe tile, ``-1`` = no main probe this step
+ 4  step flags (see below)
+ 5  absolute delta-stream probe tile, ``-1`` = no delta probe this step
+ 6  reserved (0)
+ 7  reserved (0)
+==  =======================================================================
+
+Flags mark the per-(q, i) state-machine edges the dense grid encoded in its
+trailing dimensions: ``FLAG_FIRST`` (first item of the output block — init
+accumulators), ``FLAG_TERM_START`` (reset the per-term membership scratch),
+``FLAG_TERM_END`` (AND-fold the term into the mask), ``FLAG_LAST`` (last
+item of the block — finalize / merge / write output).  One item may carry
+all four.
+
+Builder invariants the compacted kernels (and their registered contracts)
+rely on:
+
+- items are emitted **grouped by (q, i) in ascending order** — every output
+  block is revisited contiguously, so Pallas accumulates in-place and the
+  checker's alias scan passes;
+- the table is padded to :func:`worklist_pad` rows (next power of two with
+  at least one spare entry, bounding jit recompiles); padding rows **clone
+  the last real item** with both probe fields set to ``-1`` and flags 0 —
+  pure no-ops that keep revisiting the last real block instead of jumping
+  back to block 0 (the zero-fill bug the negative contract fixture
+  ``fx_worklist_missing_spare`` demonstrates);
+- an all-inert batch yields ``n_items == 0`` and the caller must **not**
+  launch a kernel (the orchestrators short-circuit to host constants).
+
+The builder is also where grid occupancy becomes observable: every build
+emits the ``odys_kernel_grid_occupancy`` gauge (live items / dense-grid
+steps) and the ``odys_kernel_steps_saved_total`` counter.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.obs import get_registry
+
+__all__ = [
+    "DESC_COLS",
+    "FLAG_FIRST",
+    "FLAG_LAST",
+    "FLAG_TERM_END",
+    "FLAG_TERM_START",
+    "WorkList",
+    "build_intersect_worklist",
+    "build_merge_worklist",
+    "worklist_pad",
+]
+
+DESC_COLS = 8
+
+FLAG_FIRST = 1       # first item of (q, i): init output accumulators
+FLAG_TERM_START = 2  # reset the per-term membership scratch
+FLAG_TERM_END = 4    # AND-fold the term's membership into the mask
+FLAG_LAST = 8        # last item of (q, i): finalize / merge / emit output
+
+
+def worklist_pad(n_items: int) -> int:
+    """Padded descriptor-table length: next power of two holding at least
+    one spare entry past the live items.
+
+    The pow2 bucketing bounds jit recompiles (the compacted calls key on
+    the table shape); the spare entry guarantees the padding region exists
+    even for exact-pow2 item counts, so the clone-the-last-item padding
+    rule always has somewhere to live.  The ``worklist-pad`` lint rule
+    requires every descriptor-table allocation to size itself through this
+    helper.
+    """
+    return 1 << int(n_items).bit_length()
+
+
+@dataclass(frozen=True)
+class WorkList:
+    """A built descriptor table plus its occupancy accounting."""
+
+    desc: np.ndarray      # int32[worklist_pad(n_items), DESC_COLS]
+    n_items: int          # live rows (rows past this are no-op padding)
+    dense_steps: int      # grid steps the dense comparator would launch
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_items / self.dense_steps if self.dense_steps else 0.0
+
+
+def _finish(rows: list[list[int]], *, kernel: str, dense_steps: int) -> WorkList:
+    n_items = len(rows)
+    cap = worklist_pad(n_items)
+    desc = np.zeros((cap, DESC_COLS), dtype=np.int32)
+    if rows:
+        desc[:n_items] = rows
+        # Padding clones the last real item as a no-op: same (q, i) so the
+        # output-block walk stays contiguous, probe fields -1 and flags 0
+        # so the step does nothing.
+        pad = desc[n_items - 1].copy()
+        pad[3] = -1
+        pad[4] = 0
+        pad[5] = -1
+        desc[n_items:] = pad
+    else:
+        desc[:, 3] = -1
+        desc[:, 5] = -1
+
+    reg = get_registry()
+    reg.gauge(
+        "odys_kernel_grid_occupancy",
+        help="live work items / dense-grid steps of the last built work list",
+        kernel=kernel,
+    ).set(n_items / dense_steps if dense_steps else 0.0)
+    reg.counter(
+        "odys_kernel_steps_saved_total",
+        help="dense-grid steps elided by work-list compaction",
+        kernel=kernel,
+    ).inc(max(dense_steps - n_items, 0))
+    return WorkList(desc=desc, n_items=n_items, dense_steps=dense_steps)
+
+
+def build_intersect_worklist(
+    n_b: np.ndarray,        # int32[Q, T, num_a]  main probe tiles per item
+    b_tile: np.ndarray,     # int32[Q, T, num_a]  first main probe tile
+    active: np.ndarray,     # int32[Q, T]         1 iff slot t joins query q
+    a_any: np.ndarray,      # bool[Q, num_a]      driver tile holds live postings
+    *,
+    n_d: np.ndarray | None = None,     # delta probe plan (merge-on-read)
+    d_tile: np.ndarray | None = None,
+    live_q: np.ndarray | None = None,  # bool[Q]; None = every query live
+    kernel: str,
+    dense_steps: int,
+) -> WorkList:
+    """Work list of a streamed intersect kernel (driver-materialized or
+    driver-streamed; raw or packed — the plan arrays are codec-agnostic).
+
+    Enumerates, per live query and driver tile, one item per probe step of
+    each active term (main and delta spans advance in lockstep, exactly as
+    the dense grid's ``j`` dimension paired them).  The dense grid's
+    masked-off steps produce no items at all:
+
+    - inert queries (``live_q`` false) contribute **zero** items — the
+      caller masks their output rows host-side;
+    - a driver tile with no live postings collapses to a single
+      init+finalize no-op (its mask is all-zero via the fused validity
+      predicate either way);
+    - an active term with an empty probe range forces the tile's mask to
+      zero, so the whole tile collapses to a single reset+fold no-op;
+    - term slots beyond a query's ``n_terms`` never existed here, where the
+      dense grid swept ``s_max`` dead steps through each.
+    """
+    n_b = np.asarray(n_b)
+    b_tile = np.asarray(b_tile)
+    active = np.asarray(active)
+    a_any = np.asarray(a_any)
+    q_n, t_slots, num_a = n_b.shape
+    has_delta = n_d is not None
+    if has_delta:
+        n_d = np.asarray(n_d)
+        d_tile = np.asarray(d_tile)
+
+    rows: list[list[int]] = []
+    for q in range(q_n):
+        if live_q is not None and not live_q[q]:
+            continue
+        act = [t for t in range(t_slots) if active[q, t]]
+        for i in range(num_a):
+            if not a_any[q, i] or not act:
+                rows.append([q, i, 0, -1, FLAG_FIRST | FLAG_LAST, -1, 0, 0])
+                continue
+            spans = []
+            dead_term = -1
+            for t in act:
+                nm = int(n_b[q, t, i])
+                nd = int(n_d[q, t, i]) if has_delta else 0
+                if nm == 0 and nd == 0:
+                    dead_term = t
+                    break
+                spans.append((t, nm, nd))
+            if dead_term >= 0:
+                # One zero-probe reset+fold ANDs an all-zero membership in:
+                # the tile's mask is exactly 0, like the dense fold chain.
+                flags = FLAG_FIRST | FLAG_TERM_START | FLAG_TERM_END | FLAG_LAST
+                rows.append([q, i, dead_term, -1, flags, -1, 0, 0])
+                continue
+            first = len(rows)
+            for t, nm, nd in spans:
+                steps = max(nm, nd)
+                for s in range(steps):
+                    flags = (FLAG_TERM_START if s == 0 else 0) | (
+                        FLAG_TERM_END if s == steps - 1 else 0
+                    )
+                    mt = int(b_tile[q, t, i]) + s if s < nm else -1
+                    dt = int(d_tile[q, t, i]) + s if s < nd else -1
+                    rows.append([q, i, t, mt, flags, dt, 0, 0])
+            rows[first][4] |= FLAG_FIRST
+            rows[-1][4] |= FLAG_LAST
+    return _finish(rows, kernel=kernel, dense_steps=dense_steps)
+
+
+def build_merge_worklist(
+    m_neff: np.ndarray,     # int32[Q]  live main postings per driver window
+    *,
+    tile: int,              # postings per window tile (posting_intersect.TILE)
+    s_w: int,               # window tiles the dense grid sweeps per query
+    live_q: np.ndarray | None = None,
+    kernel: str,
+    dense_steps: int,
+) -> WorkList:
+    """Work list of the delta-merge kernel: one item per window tile that
+    overlaps the query's live main range (at least one item per live query
+    — an empty main window still merges the delta slab), ``FLAG_LAST`` on
+    the item that runs the bitonic merge / copy-through."""
+    m_neff = np.asarray(m_neff)
+    rows: list[list[int]] = []
+    for q in range(m_neff.shape[0]):
+        if live_q is not None and not live_q[q]:
+            continue
+        n_tiles = min(max(-(-int(m_neff[q]) // tile), 1), s_w)
+        for j in range(n_tiles):
+            flags = (FLAG_FIRST if j == 0 else 0) | (
+                FLAG_LAST if j == n_tiles - 1 else 0
+            )
+            rows.append([q, j, 0, -1, flags, -1, 0, 0])
+    return _finish(rows, kernel=kernel, dense_steps=dense_steps)

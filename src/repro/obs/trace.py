@@ -66,7 +66,11 @@ class QuerySpan:
     ``submit_time``/``finish_time`` are in the scheduler's clock domain;
     ``phases`` mixes domains as documented above (:data:`WALL_PHASES`).
     ``batch_queries`` is the number of real queries the span's batch
-    served — the batch-membership attribution factor.
+    served — the batch-membership attribution factor.  ``pad_fraction``
+    is the share of the batch that was inert padding clones (0.0 for a
+    full bucket): the denominator context for the kernel-side
+    ``odys_kernel_grid_occupancy`` gauge and the Formula (17) residual —
+    a padded batch *should* show low dense-grid occupancy.
     """
 
     qid: int
@@ -76,6 +80,7 @@ class QuerySpan:
     set_id: int | None = None
     batch_id: int | None = None
     batch_queries: int = 1
+    pad_fraction: float = 0.0
     finish_time: float | None = None
 
     def add(self, phase: str, dt: float) -> None:

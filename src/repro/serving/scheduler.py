@@ -430,6 +430,7 @@ class MasterScheduler:
         self._next_qid = 0
         self.n_batches = 0
         self.n_padded = 0
+        self._pad_fraction_sum = 0.0  # per-batch pad fractions, for stats()
         self._arrivals: deque[float] = deque(maxlen=32)   # aggregate (rho)
         self._key_arrivals: dict[tuple, deque] = {}       # per bucket (fill)
         self._warm_keys: set[tuple] = set()   # buckets past their XLA compile
@@ -441,6 +442,10 @@ class MasterScheduler:
         self._m_padded = reg.counter(
             "odys_padded_queries_total",
             help="inert padding clones dispatched in partial batches")
+        self._m_pad_fraction = reg.gauge(
+            "odys_batch_pad_fraction",
+            help="inert padding share of the last dispatched micro-batch "
+                 "(interprets odys_kernel_grid_occupancy under padding)")
         self._m_queue_depth = reg.gauge(
             "odys_queue_depth", help="queries waiting for batch formation")
         self._m_response = reg.histogram(
@@ -648,6 +653,7 @@ class MasterScheduler:
         self.router.complete(sref, len(real))
         self._m_service.observe(wall)
         batch_id = self.n_batches
+        pad_fraction = (len(batch) - len(real)) / len(batch)
         for ticket, res in zip(batch, results):
             if ticket.qid < 0:
                 continue
@@ -661,6 +667,7 @@ class MasterScheduler:
                 span.set_id = sref.sid
                 span.batch_id = batch_id
                 span.batch_queries = len(real)
+                span.pad_fraction = pad_fraction
                 span.add("admission_wait", t_form - span.submit_time)
                 span.add("formation_wait", start - t_form)
                 span.add("route", route_wall)
@@ -687,8 +694,10 @@ class MasterScheduler:
                 )
         self.n_batches += 1
         self.n_padded += len(batch) - len(real)
+        self._pad_fraction_sum += pad_fraction
         self._m_batches.inc()
         self._m_padded.inc(len(batch) - len(real))
+        self._m_pad_fraction.set(pad_fraction)
         self._m_queue_depth.set(self.pending())
         return real
 
@@ -769,6 +778,10 @@ class MasterScheduler:
         out = {
             "n_batches": self.n_batches,
             "n_padded": self.n_padded,
+            "pad_fraction": (
+                self._pad_fraction_sum / self.n_batches
+                if self.n_batches else 0.0
+            ),
             "pending": self.pending(),
             "sets": self.router.snapshot(),
         }

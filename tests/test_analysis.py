@@ -21,11 +21,17 @@ EXPECTED_KERNELS = {
     "flash_attention_fwd",
     "intersect_batched_block_skip",
     "intersect_batched_driver_streamed",
+    "intersect_batched_driver_streamed_compact",
+    "intersect_batched_driver_streamed_compact_packed",
     "intersect_batched_driver_streamed_packed",
     "intersect_batched_streamed",
+    "intersect_batched_streamed_compact",
+    "intersect_batched_streamed_compact_packed",
     "intersect_batched_streamed_packed",
     "intersect_block_skip",
     "merge_delta_windows",
+    "merge_delta_windows_compact",
+    "merge_delta_windows_compact_packed",
     "merge_delta_windows_packed",
     "merge_topk_rows",
 }

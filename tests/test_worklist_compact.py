@@ -1,0 +1,315 @@
+"""Work-list compaction (backend="pallas_compact"): builder invariants,
+compacted-vs-dense bit-parity across the delta-fill / striping / skew
+matrix (tombstones included), inert-padded partial batches, the degenerate
+all-inert batch (no kernel may launch), the occupancy observability, and
+the scheduler's pad_fraction accounting that contextualizes it."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import make_query_batch, query_topk
+from repro.core.index import INVALID_DOC, build_index, partition_corpus
+from repro.core.parallel import sequential_reference
+from repro.data.corpus import CorpusConfig, generate_corpus
+from repro.indexing import DeltaWriter
+from repro.indexing.delta import local_delta
+from repro.kernels.worklist import (
+    DESC_COLS,
+    FLAG_FIRST,
+    FLAG_LAST,
+    FLAG_TERM_END,
+    FLAG_TERM_START,
+    build_intersect_worklist,
+    build_merge_worklist,
+    worklist_pad,
+)
+from repro.obs.registry import MetricsRegistry, set_registry
+
+WINDOW = 1024
+INVALID_ATTR = np.int32(2**31 - 1)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=400, vocab_size=150, mean_doc_len=25,
+                     n_sites=10, seed=13)
+    )
+    idx, meta = build_index(corpus)
+    return corpus, idx, meta
+
+
+def _writer_at_fill(corpus, meta, target, *, ns=1, seed=5, codec="raw"):
+    """Delta stream with tombstones from both deletes and updates."""
+    rng = np.random.default_rng(seed)
+    w = DeltaWriter(corpus, meta, ns=ns, term_capacity=256,
+                    doc_headroom=1024, codec=codec)
+    w.delete_docs([int(d) for d in rng.choice(corpus.n_docs, 6, replace=False)])
+    w.update_docs([
+        (int(d), np.unique(rng.integers(0, 40, size=10)), int(rng.integers(10)))
+        for d in rng.choice(np.arange(200, 260), 6, replace=False)
+    ])
+    while w.posting_fill() < target:
+        terms = np.unique(rng.integers(0, 24, size=20))
+        w.insert_docs([(terms, int(rng.integers(10)))])
+    return w
+
+
+# Mixed n_terms 1..t_max (the load-skew compaction targets) plus limited
+# searches and a rare term.
+QUERIES = [
+    ([3], None),
+    ([3, 9], None),
+    ([1, 4, 12], None),
+    ([1, 4, 12, 23], None),
+    ([2], 3),
+    ([5, 8], 1),
+    ([140], None),
+    ([0, 7], 5),
+]
+
+
+# ---------------------------------------------------------------- builder
+
+
+def test_worklist_pad_pow2_with_spare():
+    assert worklist_pad(0) == 1
+    assert worklist_pad(1) == 2
+    assert worklist_pad(2) == 4
+    assert worklist_pad(3) == 4
+    assert worklist_pad(4) == 8      # exact pow2 still gets a spare entry
+    assert worklist_pad(7) == 8
+    assert worklist_pad(8) == 16
+    for n in range(200):
+        cap = worklist_pad(n)
+        assert cap > n and cap & (cap - 1) == 0, n
+
+
+def test_intersect_builder_grouping_flags_and_padding():
+    # 2 queries x 2 driver tiles x 2 term slots; query 1 has one term.
+    n_b = np.array([[[2, 1], [1, 0]],
+                    [[3, 0], [0, 0]]], np.int32)
+    b_tile = np.zeros_like(n_b)
+    active = np.array([[1, 1], [1, 0]], np.int32)
+    a_any = np.array([[True, True], [True, False]])
+    wl = build_intersect_worklist(
+        n_b, b_tile, active, a_any, kernel="t", dense_steps=2 * 2 * 2 * 3
+    )
+    desc = wl.desc
+    assert desc.shape[1] == DESC_COLS
+    assert desc.shape[0] == worklist_pad(wl.n_items)
+    live = desc[: wl.n_items]
+    # grouped by (q, i), ascending
+    keys = [tuple(r[:2]) for r in live]
+    assert keys == sorted(keys)
+    # every (q, i) group opens with FLAG_FIRST and closes with FLAG_LAST
+    for q, i in sorted(set(keys)):
+        grp = [r for r in live if (r[0], r[1]) == (q, i)]
+        assert grp[0][4] & FLAG_FIRST
+        assert grp[-1][4] & FLAG_LAST
+        # term segments open/close with TERM_START/TERM_END, unless the
+        # whole group is a no-op (no flags beyond FIRST|LAST)
+        if grp[0][4] & FLAG_TERM_START or len(grp) > 1:
+            seen_t = []
+            for r in grp:
+                if r[4] & FLAG_TERM_START:
+                    seen_t.append(r[2])
+            ends = [r[2] for r in grp if r[4] & FLAG_TERM_END]
+            assert seen_t == ends
+    # q0/i0: term 0 probes tiles 0,1 then term 1 probes tile 0
+    g = [r for r in live if (r[0], r[1]) == (0, 0)]
+    assert [(r[2], r[3]) for r in g] == [(0, 0), (0, 1), (1, 0)]
+    # q0/i1: term 1's span is empty -> single dead-term no-op item
+    g = [r for r in live if (r[0], r[1]) == (0, 1)]
+    assert len(g) == 1 and g[0][3] == -1 and (
+        g[0][4] == FLAG_FIRST | FLAG_TERM_START | FLAG_TERM_END | FLAG_LAST
+    )
+    # q1/i1: dead driver tile -> single init+finalize no-op
+    g = [r for r in live if (r[0], r[1]) == (1, 1)]
+    assert len(g) == 1 and g[0][4] == FLAG_FIRST | FLAG_LAST
+    # padding clones the last real item with probes -1 and flags 0
+    for r in desc[wl.n_items:]:
+        assert (r[0], r[1]) == tuple(desc[wl.n_items - 1][:2])
+        assert r[3] == -1 and r[5] == -1 and r[4] == 0
+
+
+def test_intersect_builder_live_q_and_occupancy_metrics():
+    reg = MetricsRegistry()
+    prev = set_registry(reg)
+    try:
+        n_b = np.ones((3, 2, 1), np.int32)
+        wl = build_intersect_worklist(
+            n_b, np.zeros_like(n_b), np.ones((3, 2), np.int32),
+            np.ones((3, 1), bool), live_q=np.array([True, False, True]),
+            kernel="t", dense_steps=12,
+        )
+        assert {int(q) for q in wl.desc[: wl.n_items, 0]} == {0, 2}
+        assert wl.n_items == 4 and wl.dense_steps == 12
+        assert wl.occupancy == pytest.approx(4 / 12)
+        g = reg.gauge("odys_kernel_grid_occupancy", kernel="t")
+        c = reg.counter("odys_kernel_steps_saved_total", kernel="t")
+        assert g.value == pytest.approx(4 / 12)
+        assert c.value == 8
+    finally:
+        set_registry(prev)
+
+
+def test_merge_builder_tiles_and_empty():
+    m_neff = np.array([2500, 0, 900], np.int32)
+    wl = build_merge_worklist(
+        m_neff, tile=1024, s_w=2, kernel="t", dense_steps=6
+    )
+    live = wl.desc[: wl.n_items]
+    # q0 clamps to s_w tiles; q1 still gets its one mandatory item (the
+    # delta slab must merge into an empty main window); q2 needs one
+    assert [(r[0], r[1]) for r in live] == [(0, 0), (0, 1), (1, 0), (2, 0)]
+    assert live[0][4] == FLAG_FIRST and live[1][4] == FLAG_LAST
+    assert live[2][4] == FLAG_FIRST | FLAG_LAST
+    # all-inert: zero items
+    wl0 = build_merge_worklist(
+        m_neff, tile=1024, s_w=2, live_q=np.zeros(3, bool),
+        kernel="t", dense_steps=6,
+    )
+    assert wl0.n_items == 0 and wl0.occupancy == 0.0
+
+
+# ------------------------------------------------------- engine bit-parity
+
+
+@pytest.mark.parametrize("fill", [0.0, 0.5, 1.0])
+@pytest.mark.parametrize("codec", ["raw", "packed"])
+def test_compact_parity_across_fill(setup, fill, codec):
+    """pallas_compact == pallas bit-for-bit at every delta fill level,
+    with delete+update tombstones, on both codecs."""
+    corpus, _, meta = setup
+    w = _writer_at_fill(corpus, meta, fill, codec=codec)
+    idx, _ = build_index(corpus, codec=codec)
+    delta = w.shard_deltas()[0]
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    dp = query_topk(idx, qb, delta=delta, k=10, window=WINDOW,
+                    backend="pallas", interpret=True, codec=codec)
+    dc = query_topk(idx, qb, delta=delta, k=10, window=WINDOW,
+                    backend="pallas_compact", interpret=True, codec=codec)
+    np.testing.assert_array_equal(np.asarray(dp[0]), np.asarray(dc[0]))
+    np.testing.assert_array_equal(np.asarray(dp[1]), np.asarray(dc[1]))
+
+
+def test_compact_parity_no_delta(setup):
+    corpus, idx, meta = setup
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    dp = query_topk(idx, qb, k=10, window=WINDOW,
+                    backend="pallas", interpret=True)
+    dc = query_topk(idx, qb, k=10, window=WINDOW,
+                    backend="pallas_compact", interpret=True)
+    np.testing.assert_array_equal(np.asarray(dp[0]), np.asarray(dc[0]))
+    np.testing.assert_array_equal(np.asarray(dp[1]), np.asarray(dc[1]))
+
+
+def test_striped_parity_ns2(setup):
+    """ns=2 striping: per-shard compacted merge-on-read + global merge
+    equals the from-scratch rebuild."""
+    corpus, _, meta = setup
+    w = _writer_at_fill(corpus, meta, 0.5, ns=2)
+    base_shards = [build_index(p)[0] for p in partition_corpus(corpus, 2)]
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+    got = sequential_reference(
+        base_shards, qb, ns=2, k=10, window=WINDOW,
+        deltas=w.shard_deltas(), backend="pallas_compact", interpret=True,
+    )
+    rebuilt = [
+        build_index(p)[0] for p in partition_corpus(w.mutated_corpus(), 2)
+    ]
+    want = sequential_reference(rebuilt, qb, ns=2, k=10, window=WINDOW)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_inert_padded_partial_batch(setup):
+    """live_q marks the padding clones of a partial batch: live rows are
+    bit-identical to the dense backend, inert rows cost zero grid steps
+    and come back empty."""
+    corpus, _, meta = setup
+    w = _writer_at_fill(corpus, meta, 0.5)
+    idx, _ = build_index(corpus)
+    delta = local_delta(w.device_delta())
+    # a partial bucket: 3 real queries padded to 8 with clones of the first
+    real = QUERIES[:3]
+    padded = real + [real[0]] * 5
+    live_q = np.array([True] * 3 + [False] * 5)
+    qb = make_query_batch(padded, t_max=4, meta=meta)
+    dp = query_topk(idx, qb, delta=delta, k=10, window=WINDOW,
+                    backend="pallas", interpret=True)
+    dc = query_topk(idx, qb, delta=delta, k=10, window=WINDOW,
+                    backend="pallas_compact", interpret=True, live_q=live_q)
+    np.testing.assert_array_equal(np.asarray(dp[0])[:3], np.asarray(dc[0])[:3])
+    np.testing.assert_array_equal(np.asarray(dp[1])[:3], np.asarray(dc[1])[:3])
+    assert np.all(np.asarray(dc[0])[3:] == INVALID_DOC)
+    assert np.all(np.asarray(dc[1])[3:] == 0)
+
+
+def test_all_inert_batch_launches_nothing(setup, monkeypatch):
+    """The degenerate all-inert batch short-circuits to host constants
+    without launching a zero-size grid (or any grid at all)."""
+    import repro.kernels.delta_merge as dm
+    import repro.kernels.posting_intersect as pi
+
+    corpus, _, meta = setup
+    w = _writer_at_fill(corpus, meta, 0.5)
+    idx, _ = build_index(corpus)
+    delta = local_delta(w.device_delta())
+    qb = make_query_batch(QUERIES, t_max=4, meta=meta)
+
+    def boom(*a, **kw):
+        raise AssertionError("compact kernel launched for all-inert batch")
+
+    monkeypatch.setattr(pi, "_streamed_compact_call", boom)
+    monkeypatch.setattr(pi, "_driver_compact_call", boom)
+    monkeypatch.setattr(dm, "_merge_compact_call", boom)
+
+    live_q = np.zeros(len(QUERIES), bool)
+    for dl in (None, delta):
+        docs, hits = query_topk(
+            idx, qb, delta=dl, k=10, window=WINDOW,
+            backend="pallas_compact", interpret=True, live_q=live_q,
+        )
+        assert np.all(np.asarray(docs) == INVALID_DOC)
+        assert np.all(np.asarray(hits) == 0)
+
+
+def test_live_q_rejected_on_dense_backends(setup):
+    corpus, idx, meta = setup
+    qb = make_query_batch(QUERIES[:2], t_max=4, meta=meta)
+    with pytest.raises(ValueError, match="pallas_compact"):
+        query_topk(idx, qb, k=10, window=WINDOW, backend="pallas",
+                   live_q=np.array([True, False]))
+
+
+# ------------------------------------------------- scheduler pad_fraction
+
+
+def test_scheduler_pad_fraction_partial_and_full():
+    from repro.serving.scheduler import MasterScheduler
+
+    def executor(queries, t_max, k, set_id):
+        return [i for i in range(len(queries))]
+
+    reg = MetricsRegistry()
+    sch = MasterScheduler(executor, batch_size=4, cache_size=0,
+                          registry=reg, trace=True)
+    # partial bucket: 3 real + 1 pad
+    tickets = [sch.submit([3], None) for _ in range(3)]
+    sch.step()
+    assert all(t.done for t in tickets)
+    for t in tickets:
+        assert t.span.pad_fraction == pytest.approx(0.25)
+    assert sch.stats()["pad_fraction"] == pytest.approx(0.25)
+    assert reg.gauge("odys_batch_pad_fraction").value == pytest.approx(0.25)
+    # full bucket: no padding; stats() reports the running mean
+    tickets = [sch.submit([3], None) for _ in range(4)]
+    sch.step()
+    for t in tickets:
+        assert t.span.pad_fraction == 0.0
+    assert reg.gauge("odys_batch_pad_fraction").value == 0.0
+    assert sch.stats()["pad_fraction"] == pytest.approx(0.125)
+    assert sch.stats()["n_padded"] == 1
