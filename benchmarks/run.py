@@ -33,12 +33,41 @@ import contextlib
 import inspect
 import io
 import json
+import os
 import sys
 import time
 import traceback
 from pathlib import Path
 
-from benchmarks import (
+
+def _early_devices_flag() -> None:
+    """Apply ``--devices N`` before anything imports jax.
+
+    The host-platform device count is an XLA init-time flag: it must be in
+    ``XLA_FLAGS`` before the first jax import, and the suite imports below
+    pull jax in transitively — so this scans raw ``sys.argv`` rather than
+    waiting for argparse.  An explicit count already present in the
+    environment wins.
+    """
+    n = None
+    for i, a in enumerate(sys.argv):
+        if a == "--devices" and i + 1 < len(sys.argv):
+            n = sys.argv[i + 1]
+        elif a.startswith("--devices="):
+            n = a.split("=", 1)[1]
+    if n is None:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={int(n)}".strip()
+    )
+
+
+_early_devices_flag()
+
+from benchmarks import (  # noqa: E402  (jax env flags must be set first)
     bench_backends,
     bench_engine,
     bench_fig11,
@@ -119,11 +148,27 @@ def main() -> None:
              "gate ratios",
     )
     ap.add_argument(
+        "--devices", type=int, default=None, metavar="N",
+        help="host-platform device count (sets XLA_FLAGS "
+             "--xla_force_host_platform_device_count before jax init; "
+             "needed for the serving suite's multi-set slice sweep)",
+    )
+    ap.add_argument(
+        "--sets", default=None, metavar="N[,N...]",
+        help="set counts for the serving suite's disjoint-slice scale-out "
+             "sweep (default 1,2,4; counts exceeding the device pool are "
+             "skipped with a sets<N>_skipped record)",
+    )
+    ap.add_argument(
         "--json-dir", default=None, metavar="DIR",
         help="also write one BENCH_<suite>.json per suite (CI artifacts; "
              "consumed by scripts/check_bench.py)",
     )
     args = ap.parse_args()
+    sets = (
+        [int(s) for s in args.sets.split(",") if s.strip()]
+        if args.sets else None
+    )
     names = [args.suite] if args.suite else list(SUITES)
     json_dir = Path(args.json_dir) if args.json_dir else None
     if json_dir:
@@ -139,6 +184,8 @@ def main() -> None:
             kw["smoke"] = True
         if args.codec is not None and "codec" in params:
             kw["codec"] = args.codec
+        if sets is not None and "sets" in params:
+            kw["sets"] = sets
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         tee = _Tee(sys.stdout)

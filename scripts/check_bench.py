@@ -28,10 +28,28 @@ the compacted grid must at least break even with the dense grid),
 stay within noise), and ``kernel_grid_occupancy_skew`` must be present
 (the occupancy gauge is exported, proving the builder path ran).
 
+With ``--require-sets`` the gate checks the serving suite's multi-set
+scale-out sweep (``BENCH_serving.json``): ``sets2_throughput_x`` (two
+disjoint mesh slices vs one) must hold ``--min-sets-speedup`` (default
+1.6x) at a matched response time (``sets2_response_ratio`` within
+``--max-sets-response-ratio``, default 1.5x), and the per-set-count
+Formula (18) errors are echoed.  A run that *skipped* the 2-set point
+(too few devices) fails — the CI lane exists to exercise it.
+
+With ``--baseline DIR`` the script instead runs a **warn-only trend
+comparison**: every ``BENCH_*.json`` in BENCH_DIR is compared against the
+same-named file under DIR (the previous successful run's artifact), and
+shared metric keys whose value drifted beyond ``--baseline-warn-ratio``
+(default 1.5x, either direction) are printed.  Always exits 0: a missing
+baseline (first run, expired artifact) and unknown/new keys are notes,
+not failures — the gate surfaces trends without blocking on CI noise.
+
 Usage:
     python scripts/check_bench.py BENCH_DIR [--max-ratio 1.5]
     python scripts/check_bench.py PACKED_DIR --require-packed
     python scripts/check_bench.py BENCH_DIR --require-compact
+    python scripts/check_bench.py BENCH_DIR --require-sets
+    python scripts/check_bench.py BENCH_DIR --baseline PREV_DIR
 """
 from __future__ import annotations
 
@@ -51,6 +69,47 @@ def _report_ignored(metrics: dict, consumed: set) -> None:
         shown = ", ".join(extra[:8]) + ("..." if len(extra) > 8 else "")
         print(f"check_bench: ignoring {len(extra)} unrecognized metric "
               f"key(s): {shown}")
+
+
+def _baseline_trend(bench_dir: Path, baseline_dir: Path,
+                    warn_ratio: float) -> int:
+    """Warn-only drift report of BENCH_*.json vs a previous run's copies."""
+    if not baseline_dir.is_dir():
+        print(f"check_bench: baseline {baseline_dir} not found — skipping "
+              f"trend comparison (first run or expired artifact)")
+        return 0
+    files = sorted(bench_dir.glob("BENCH_*.json"))
+    if not files:
+        print(f"check_bench: no BENCH_*.json under {bench_dir} — nothing "
+              f"to compare")
+        return 0
+    compared = drifted = 0
+    for path in files:
+        base_path = baseline_dir / path.name
+        if not base_path.is_file():
+            print(f"check_bench: no baseline for {path.name} — skipped")
+            continue
+        cur = json.loads(path.read_text()).get("metrics", {})
+        base = json.loads(base_path.read_text()).get("metrics", {})
+        new_keys = sorted(set(cur) - set(base))
+        if new_keys:
+            shown = ", ".join(new_keys[:6]) + (
+                "..." if len(new_keys) > 6 else "")
+            print(f"check_bench: {path.name}: {len(new_keys)} key(s) with "
+                  f"no baseline (new emitters): {shown}")
+        for key in sorted(set(cur) & set(base)):
+            b, c = base[key]["value"], cur[key]["value"]
+            compared += 1
+            if b <= 0 or c <= 0:
+                continue  # ratio undefined (zero counters, error gauges)
+            r = c / b
+            if r > warn_ratio or r < 1.0 / warn_ratio:
+                drifted += 1
+                print(f"check_bench: TREND {path.name}:{key} "
+                      f"{b:.5g} -> {c:.5g} ({r:.2f}x)")
+    print(f"check_bench: trend compared {compared} shared key(s), "
+          f"{drifted} drifted beyond {warn_ratio}x (warn-only)")
+    return 0
 
 
 def main() -> int:
@@ -77,7 +136,76 @@ def main() -> int:
     ap.add_argument("--max-compact-uniform", type=float, default=1.1,
                     help="max compact/dense ratio on the uniform mix with "
                          "--require-compact")
+    ap.add_argument("--require-sets", action="store_true",
+                    help="gate the serving suite's multi-set scale-out "
+                         "sweep (BENCH_serving.json): 2 disjoint slices "
+                         "must hold --min-sets-speedup at matched response")
+    ap.add_argument("--min-sets-speedup", type=float, default=1.6,
+                    help="minimum sets2_throughput_x with --require-sets")
+    ap.add_argument("--max-sets-response-ratio", type=float, default=1.5,
+                    help="maximum sets2_response_ratio with --require-sets")
+    ap.add_argument("--baseline", type=Path, default=None, metavar="DIR",
+                    help="previous run's bench dir: warn-only trend "
+                         "comparison of shared metric keys (always exit 0)")
+    ap.add_argument("--baseline-warn-ratio", type=float, default=1.5,
+                    help="drift factor (either direction) that triggers a "
+                         "TREND warning with --baseline")
     args = ap.parse_args()
+
+    if args.baseline is not None:
+        return _baseline_trend(args.bench_dir, args.baseline,
+                               args.baseline_warn_ratio)
+
+    if args.require_sets:
+        path = args.bench_dir / "BENCH_serving.json"
+        if not path.is_file():
+            print(f"check_bench: missing {path} — did the serving smoke "
+                  f"run with --json-dir?", file=sys.stderr)
+            return 1
+        metrics = json.loads(path.read_text()).get("metrics", {})
+        consumed: set[str] = set()
+        if "sets2_skipped" in metrics:
+            print("check_bench: --require-sets but the 2-set point was "
+                  "skipped (too few devices) — run the serving suite with "
+                  "--devices 2 (or more)", file=sys.stderr)
+            return 1
+        for key in sorted(metrics):
+            if key.startswith("sets") and key.endswith("_model_err"):
+                consumed.add(key)
+                print(f"check_bench: {key}={metrics[key]['value']:.4f} "
+                      f"(Formula (18) per set count)")
+        x = metrics.get("sets2_throughput_x")
+        rr = metrics.get("sets2_response_ratio")
+        if x is None or rr is None:
+            print("check_bench: --require-sets but sets2_throughput_x / "
+                  "sets2_response_ratio missing — was the serving suite "
+                  "run with --sets 1,2?", file=sys.stderr)
+            return 1
+        consumed.update({"sets2_throughput_x", "sets2_response_ratio"})
+        consumed.update(
+            k for k in metrics
+            if k.startswith("sets") and (
+                k.endswith("_throughput") or k.endswith("_response_us")
+                or k.endswith("_skipped") or k.endswith("_throughput_x")
+                or k.endswith("_response_ratio")
+            )
+        )
+        xv, rv = x["value"], rr["value"]
+        xok = xv >= args.min_sets_speedup
+        rok = rv <= args.max_sets_response_ratio
+        print(f"check_bench: sets2 throughput x{xv:.3f} "
+              f"(floor {args.min_sets_speedup}) {'ok' if xok else 'FAIL'}")
+        print(f"check_bench: sets2 response ratio {rv:.3f} "
+              f"(max {args.max_sets_response_ratio}) "
+              f"{'ok' if rok else 'FAIL'}")
+        _report_ignored(metrics, consumed)
+        if not (xok and rok):
+            print("check_bench: disjoint-slice scale-out does not hold "
+                  "(throughput floor or matched-response bound violated)",
+                  file=sys.stderr)
+            return 1
+        print("check_bench: multi-set scale-out holds on disjoint slices")
+        return 0
 
     path = args.bench_dir / "BENCH_updates.json"
     if not path.is_file():

@@ -93,6 +93,13 @@ class Calibration:
     t_base: float
     n_sets: int = 1       # replicated sets the arrival stream spreads over
 
+    def with_sets(self, n_sets: int) -> "Calibration":
+        """Same fitted parameters projected at ``n_sets`` replicated sets:
+        Formula (17) spreads the arrival stream as ``lam / n_sets`` (§5.2).
+        The multi-set bench sweep uses this to project each slice count
+        from one calibration."""
+        return dataclasses.replace(self, n_sets=int(n_sets))
+
     def slave_max_time(self, sct: str, k: int, lam: float, ns: int) -> float:
         """The hybrid's experimental half for Formula (17), load-aware.
 

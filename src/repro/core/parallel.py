@@ -330,6 +330,38 @@ def _stack_for_pods(index: ShardedIndex) -> ShardedIndex:
     return ShardedIndex(*(x[None] for x in index))
 
 
+def set_mesh_slices(
+    n_sets: int, ns: int, devices=None
+) -> "list[Mesh]":
+    """Carve ``n_sets`` disjoint ``(1, ns)`` ``("pod", "data")`` meshes out
+    of the device pool — one independent ODYS set per slice.
+
+    This is the paper's §5.2 scale-out as *device topology* rather than
+    time-sharing: each set serves its batches on its own device subset
+    (through :func:`replicated_query_topk` with the slice as the mesh), so
+    adding a set adds real concurrent capacity, and a set-granular fault
+    (core/faults.py) quarantines exactly one slice.  Slices are contiguous
+    runs of ``devices`` (default: ``jax.devices()``); a pool smaller than
+    ``n_sets * ns`` raises rather than silently overlapping sets.
+    """
+    if n_sets < 1 or ns < 1:
+        raise ValueError(f"need n_sets >= 1 and ns >= 1, got {n_sets}x{ns}")
+    devs = list(jax.devices()) if devices is None else list(devices)
+    need = n_sets * ns
+    if len(devs) < need:
+        raise ValueError(
+            f"{n_sets} sets x {ns} shards need {need} devices, "
+            f"have {len(devs)} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} for host runs)"
+        )
+    return [
+        jax.make_mesh(
+            (1, ns), ("pod", "data"), devices=devs[i * ns:(i + 1) * ns]
+        )
+        for i in range(n_sets)
+    ]
+
+
 # ---------------------------------------------------------------------------
 # Reference oracle for the distributed path
 # ---------------------------------------------------------------------------

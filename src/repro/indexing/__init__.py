@@ -6,8 +6,11 @@ DB-IR-integrated engine owns natively:
 
 - :mod:`repro.indexing.delta` — per-shard fixed-capacity **DeltaIndex**
   (same CSR + skip-table layout as the main index), the **tombstone
-  bitmap** covering main + delta, and the host-side :class:`DeltaWriter`
-  with ``insert_docs`` / ``delete_docs`` / ``update_docs``;
+  bitmap** covering main + delta, the host-side :class:`DeltaWriter`
+  with ``insert_docs`` / ``delete_docs`` / ``update_docs``, and the
+  multi-master :class:`ShardedDeltaWriter` — concurrent ingest streams
+  striped to per-shard queues, publishes stamped with a
+  :class:`VectorVersion` ``(writer_epoch, per-shard seqs)``;
 - :mod:`repro.indexing.compaction` — fold a full (or threshold-crossed)
   delta back into a fresh main ShardedIndex, verified against a
   from-scratch rebuild.
@@ -31,6 +34,8 @@ from repro.indexing.delta import (
     DeltaIndex,
     DeltaWriter,
     ShardedDelta,
+    ShardedDeltaWriter,
+    VectorVersion,
     local_delta,
 )
 
@@ -42,6 +47,8 @@ __all__ = [
     "DeltaIndex",
     "DeltaWriter",
     "ShardedDelta",
+    "ShardedDeltaWriter",
+    "VectorVersion",
     "compact",
     "fold_corpus",
     "local_delta",

@@ -25,6 +25,8 @@ Typical serving loop::
 """
 from __future__ import annotations
 
+import contextlib
+
 import numpy as np
 
 from repro.core.index import (
@@ -105,26 +107,35 @@ def compact(
     boundary (:meth:`DeltaWriter.rebase`): the main index recompiles here
     anyway, so handing the writer larger delta shapes is free — this is
     how a growing corpus escapes the otherwise lifetime-fixed headroom.
+
+    A multi-master :class:`~repro.indexing.delta.ShardedDeltaWriter` is
+    frozen (every shard quiesced) for the whole fold -> verify -> rebase
+    sequence, so compaction can race active ingest streams: applied state
+    folds consistently, while ops still queued (or blocked on the freeze)
+    apply afterwards onto the fresh generation.
     """
-    folded = fold_corpus(writer)
-    new_index, new_meta = build_sharded_index(
-        folded, writer.ns, include_site_terms=writer.include_site_terms
-    )
-    if verify:
-        ref = writer.mutated_corpus()
-        ref_index, ref_meta = build_sharded_index(
-            ref, writer.ns, include_site_terms=writer.include_site_terms
+    freeze = getattr(writer, "frozen", None)
+    ctx = freeze() if callable(freeze) else contextlib.nullcontext()
+    with ctx:
+        folded = fold_corpus(writer)
+        new_index, new_meta = build_sharded_index(
+            folded, writer.ns, include_site_terms=writer.include_site_terms
         )
-        if new_meta != ref_meta:
-            raise CompactionMismatch(f"meta: {new_meta} != {ref_meta}")
-        for name, got, want in zip(
-            ShardedIndex._fields, new_index, ref_index
-        ):
-            if not np.array_equal(np.asarray(got), np.asarray(want)):
-                raise CompactionMismatch(f"field {name!r} diverged")
-    writer.rebase(
-        folded, term_capacity=term_capacity, doc_headroom=doc_headroom
-    )
+        if verify:
+            ref = writer.mutated_corpus()
+            ref_index, ref_meta = build_sharded_index(
+                ref, writer.ns, include_site_terms=writer.include_site_terms
+            )
+            if new_meta != ref_meta:
+                raise CompactionMismatch(f"meta: {new_meta} != {ref_meta}")
+            for name, got, want in zip(
+                ShardedIndex._fields, new_index, ref_index
+            ):
+                if not np.array_equal(np.asarray(got), np.asarray(want)):
+                    raise CompactionMismatch(f"field {name!r} diverged")
+        writer.rebase(
+            folded, term_capacity=term_capacity, doc_headroom=doc_headroom
+        )
     return new_index, new_meta
 
 

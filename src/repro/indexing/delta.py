@@ -46,10 +46,20 @@ query window covers the merged list (the same bounded-window assumption
 the read-only engine already makes); deleted docs continue to occupy
 driver-window slots until compaction folds them out
 (:mod:`repro.indexing.compaction`).
+
+**ShardedDeltaWriter** (multi-master ingest, PR 10) extends the writer to
+concurrent insert/delete/update streams: per-shard locks on the posting
+path, per-shard write queues for striped submission, and publishes
+stamped with a :class:`VectorVersion` ``(writer_epoch, per-shard seqs)``
+so version-stamped caches stay correct without a global write lock.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import itertools
+import threading
+from collections import deque
 from typing import NamedTuple, Sequence
 
 import numpy as np
@@ -70,6 +80,7 @@ from repro.core.index import (
     pack_flat_postings,
 )
 from repro.data.corpus import Corpus, corpus_from_docs
+from repro.obs.registry import MetricsRegistry, get_registry
 
 
 class DeltaFullError(RuntimeError):
@@ -332,7 +343,11 @@ class DeltaWriter:
     def _shard_of(self, gid: int) -> tuple[_ShardState, int]:
         return self._shards[gid % self.ns], gid // self.ns
 
-    def _bump(self):
+    def _bump(self, shard: int | None = None):
+        # ``shard`` tells the multi-writer subclass which per-shard
+        # sequence advanced (None = a structural bump: rebase/compaction).
+        # The single-writer base keeps one monotone counter either way.
+        del shard
         self._version += 1
 
     # ------------------------------------------------------------------
@@ -353,55 +368,61 @@ class DeltaWriter:
         the earlier documents applied AND visible — resume the batch from
         the exception's ``applied`` offset after compacting.
         """
-        gids = []
+        gids: list[int] = []
         for terms, site in docs:
-            terms_u = np.unique(np.asarray(terms, dtype=np.int64)).astype(
-                np.int32
-            )
-            self._check_terms(terms_u, site)
-            gid = self.n_docs
-            st, local = self._shard_of(gid)
-            if local >= self._doc_limit_local:
-                raise DeltaFullError(
-                    "document headroom exhausted", applied=len(gids)
-                )
-            plist = [int(t) for t in terms_u]
-            if self.include_site_terms:
-                plist.append(self.vocab_size + site)
-            for t in plist:
-                if st.lengths[t] >= self.term_capacity:
-                    raise DeltaFullError(
-                        f"delta list full for term {t}", applied=len(gids)
-                    )
-            for t in plist:
-                self._insert_posting(st, t, local, site)
-            st.doc_site[local] = site
-            self._docs.append(terms_u)
-            self._sites.append(int(site))
-            self._delta_docs.add(gid)
-            self.n_docs += 1
-            gids.append(gid)
-            self._bump()
+            try:
+                gids.append(self._insert_one(terms, site))
+            except DeltaFullError as e:
+                raise DeltaFullError(str(e), applied=len(gids)) from None
         return gids
+
+    def _insert_one(self, terms: Sequence[int], site: int) -> int:
+        """Admit ONE document (the per-doc primitive the batch loop and the
+        multi-writer subclass share); returns its global docID."""
+        terms_u = np.unique(np.asarray(terms, dtype=np.int64)).astype(
+            np.int32
+        )
+        self._check_terms(terms_u, site)
+        gid = self.n_docs
+        st, local = self._shard_of(gid)
+        if local >= self._doc_limit_local:
+            raise DeltaFullError("document headroom exhausted")
+        plist = [int(t) for t in terms_u]
+        if self.include_site_terms:
+            plist.append(self.vocab_size + site)
+        for t in plist:
+            if st.lengths[t] >= self.term_capacity:
+                raise DeltaFullError(f"delta list full for term {t}")
+        for t in plist:
+            self._insert_posting(st, t, local, site)
+        st.doc_site[local] = site
+        self._docs.append(terms_u)
+        self._sites.append(int(site))
+        self._delta_docs.add(gid)
+        self.n_docs += 1
+        self._bump(gid % self.ns)
+        return gid
 
     def delete_docs(self, docids: Sequence[int]) -> None:
         """Tombstone documents.  Postings already in the delta are removed
         physically (reclaiming capacity); main postings are masked by the
         DOC_DEAD bit until compaction folds them out."""
         for gid in docids:
-            gid = int(gid)
-            if not (0 <= gid < self.n_docs):
-                raise KeyError(f"unknown docID {gid}")
-            st, local = self._shard_of(gid)
-            if st.doc_flags[local] & DOC_DEAD:
-                continue
-            if gid in self._delta_docs:
-                for t in self._posting_terms(gid):
-                    self._remove_posting(st, t, local)
-                self._delta_docs.discard(gid)
-            st.doc_flags[local] |= DOC_DEAD
-            self._docs[gid] = np.zeros(0, dtype=np.int32)
-            self._bump()
+            self._delete_one(int(gid))
+
+    def _delete_one(self, gid: int) -> None:
+        if not (0 <= gid < self.n_docs):
+            raise KeyError(f"unknown docID {gid}")
+        st, local = self._shard_of(gid)
+        if st.doc_flags[local] & DOC_DEAD:
+            return
+        if gid in self._delta_docs:
+            for t in self._posting_terms(gid):
+                self._remove_posting(st, t, local)
+            self._delta_docs.discard(gid)
+        st.doc_flags[local] |= DOC_DEAD
+        self._docs[gid] = np.zeros(0, dtype=np.int32)
+        self._bump(gid % self.ns)
 
     def update_docs(
         self, updates: Sequence[tuple[int, Sequence[int], int | None]]
@@ -417,41 +438,46 @@ class DeltaWriter:
         """
         applied = 0
         for gid, terms, site in updates:
-            gid = int(gid)
-            if not (0 <= gid < self.n_docs):
-                raise KeyError(f"unknown docID {gid}")
-            st, local = self._shard_of(gid)
-            if st.doc_flags[local] & DOC_DEAD:
-                raise KeyError(f"docID {gid} is deleted")
-            new_site = self._sites[gid] if site is None else int(site)
-            terms_u = np.unique(np.asarray(terms, dtype=np.int64)).astype(
-                np.int32
-            )
-            self._check_terms(terms_u, new_site)
-            in_delta = gid in self._delta_docs
-            old_plist = set(self._posting_terms(gid)) if in_delta else set()
-            new_plist = [int(t) for t in terms_u]
-            if self.include_site_terms:
-                new_plist.append(self.vocab_size + new_site)
-            for t in new_plist:
-                drop = 1 if t in old_plist else 0
-                if st.lengths[t] - drop >= self.term_capacity:
-                    raise DeltaFullError(
-                        f"delta list full for term {t}", applied=applied
-                    )
-            if in_delta:
-                for t in old_plist:
-                    self._remove_posting(st, t, local)
-            else:
-                st.doc_flags[local] |= DOC_SUPERSEDED
-            for t in new_plist:
-                self._insert_posting(st, t, local, new_site)
-            st.doc_site[local] = new_site
-            self._docs[gid] = terms_u
-            self._sites[gid] = new_site
-            self._delta_docs.add(gid)
+            try:
+                self._update_one(int(gid), terms, site)
+            except DeltaFullError as e:
+                raise DeltaFullError(str(e), applied=applied) from None
             applied += 1
-            self._bump()
+
+    def _update_one(
+        self, gid: int, terms: Sequence[int], site: int | None
+    ) -> None:
+        if not (0 <= gid < self.n_docs):
+            raise KeyError(f"unknown docID {gid}")
+        st, local = self._shard_of(gid)
+        if st.doc_flags[local] & DOC_DEAD:
+            raise KeyError(f"docID {gid} is deleted")
+        new_site = self._sites[gid] if site is None else int(site)
+        terms_u = np.unique(np.asarray(terms, dtype=np.int64)).astype(
+            np.int32
+        )
+        self._check_terms(terms_u, new_site)
+        in_delta = gid in self._delta_docs
+        old_plist = set(self._posting_terms(gid)) if in_delta else set()
+        new_plist = [int(t) for t in terms_u]
+        if self.include_site_terms:
+            new_plist.append(self.vocab_size + new_site)
+        for t in new_plist:
+            drop = 1 if t in old_plist else 0
+            if st.lengths[t] - drop >= self.term_capacity:
+                raise DeltaFullError(f"delta list full for term {t}")
+        if in_delta:
+            for t in old_plist:
+                self._remove_posting(st, t, local)
+        else:
+            st.doc_flags[local] |= DOC_SUPERSEDED
+        for t in new_plist:
+            self._insert_posting(st, t, local, new_site)
+        st.doc_site[local] = new_site
+        self._docs[gid] = terms_u
+        self._sites[gid] = new_site
+        self._delta_docs.add(gid)
+        self._bump(gid % self.ns)
 
     def apply(self, mutations) -> None:
         """Apply a :func:`repro.data.corpus.generate_mutations` stream."""
@@ -615,3 +641,364 @@ class DeltaWriter:
         compacted corpus.
         """
         return self.posting_fill() >= threshold
+
+
+# ---------------------------------------------------------------------------
+# Multi-master ingest (PR 10): concurrent streams, vector-versioned publish
+# ---------------------------------------------------------------------------
+
+
+class VectorVersion(NamedTuple):
+    """Snapshot stamp of a :class:`ShardedDeltaWriter` publish.
+
+    ``epoch`` counts structural transitions (rebase/compaction); ``seqs``
+    is the per-shard mutation sequence at publish time.  Hashable and
+    compared by value, so the version-stamped
+    :class:`~repro.serving.scheduler.ResultCache` and the snapshot caches
+    keyed on ``writer.version`` work unchanged: ANY shard's publish (or an
+    epoch bump) makes the stamp unequal and lazily invalidates — a stale
+    result is never served across any shard's mutations, without a global
+    write lock imposing a total order first.
+    """
+
+    epoch: int
+    seqs: tuple[int, ...]
+
+
+class ShardedDeltaWriter(DeltaWriter):
+    """Multi-master ingest over the per-shard delta: the ODYS deployment
+    shape (§6) where several masters feed one engine's write path.
+
+    Concurrency model
+    -----------------
+    - ``insert_docs`` / ``delete_docs`` / ``update_docs`` are **thread
+      safe** and may be called from concurrent ingest streams.  Global
+      docID allocation is a tiny serial section (an O(1) counter + doc
+      table append under ``_alloc_lock``); every posting mutation runs
+      under the *owning shard's* lock only, so streams touching different
+      shards proceed in parallel — there is no global lock on the posting
+      path.
+    - ``submit_insert`` / ``submit_delete`` / ``submit_update`` stripe
+      operations to **per-shard write queues** (deletes/updates by their
+      docID's ``gid % ns`` home shard; inserts round-robin, since their
+      shard is fixed only when the docID is allocated at apply time).
+      :meth:`drain` applies queued ops FIFO per shard and may itself run
+      from one worker per shard concurrently.  A queued op that loses a
+      cross-stream conflict race (e.g. update of a doc another master
+      deleted, or a capacity-exhausted insert) is dropped and counted on
+      ``odys_ingest_conflicts_total`` instead of poisoning the queue.
+    - :meth:`device_delta` publishes under :meth:`frozen` (all shard locks,
+      re-entrant) and stamps the snapshot with the
+      :class:`VectorVersion` ``(epoch, per-shard seqs)``; per-shard rows
+      are cached by their ``(epoch, seq)`` so a publish recomputes the
+      skip table only for shards that actually moved.
+
+    Divergence from the single-writer base: a concurrent insert reserves
+    its docID *before* the capacity check (the shard is a function of the
+    docID), so a capacity-failed insert leaves a dead, empty placeholder
+    doc instead of consuming nothing — global docIDs stay dense either
+    way.
+    """
+
+    def __init__(
+        self,
+        corpus: Corpus,
+        meta: IndexMeta,
+        ns: int,
+        *,
+        term_capacity: int = 2 * BLOCK,
+        doc_headroom: int = 1024,
+        codec: str = "raw",
+        registry: MetricsRegistry | None = None,
+    ):
+        super().__init__(
+            corpus, meta, ns,
+            term_capacity=term_capacity, doc_headroom=doc_headroom,
+            codec=codec,
+        )
+        # Lock order is always alloc -> shard (frozen() follows it too);
+        # no path acquires the alloc lock while holding a shard lock.
+        self._alloc_lock = threading.RLock()
+        self._shard_locks = [threading.RLock() for _ in range(ns)]
+        self._count_lock = threading.Lock()   # O(1) version-counter bumps
+        self._epoch = 0
+        self._seqs = [0] * ns
+        self._queues: list[deque] = [deque() for _ in range(ns)]
+        self._rr = itertools.count()          # insert striping cursor
+        # per-shard publish cache: (epoch, seq) -> flattened device rows
+        self._shard_rows: list[tuple | None] = [None] * ns
+        reg = registry if registry is not None else get_registry()
+        self._m_ops = {
+            op: reg.counter(
+                "odys_ingest_ops_total",
+                help="ingest operations applied to the delta",
+                op=op,
+            )
+            for op in ("insert", "delete", "update")
+        }
+        self._m_conflicts = reg.counter(
+            "odys_ingest_conflicts_total",
+            help="queued ops dropped at apply time (cross-stream conflict "
+                 "or capacity exhaustion)",
+        )
+        self._m_depth = {
+            s: reg.gauge(
+                "odys_ingest_queue_depth",
+                help="ops enqueued and not yet drained",
+                shard=str(s),
+            )
+            for s in range(ns)
+        }
+        self._m_publish = {
+            s: reg.gauge(
+                "odys_ingest_publish_seq",
+                help="per-shard mutation sequence at the last published "
+                     "snapshot",
+                shard=str(s),
+            )
+            for s in range(ns)
+        }
+
+    # ------------------------------------------------------------------
+    # vector version
+    # ------------------------------------------------------------------
+
+    @property
+    def version(self) -> VectorVersion:
+        return VectorVersion(self._epoch, tuple(self._seqs))
+
+    def _bump(self, shard: int | None = None):
+        with self._count_lock:
+            self._version += 1    # total op count (packed-cache key)
+            if shard is None:
+                self._epoch += 1  # structural: rebase/compaction boundary
+            else:
+                self._seqs[shard] += 1
+
+    @contextlib.contextmanager
+    def frozen(self):
+        """Exclusive section: allocation + every shard quiesced.
+
+        Publish (:meth:`device_delta`) and compaction
+        (:func:`repro.indexing.compaction.compact`) run under this so they
+        observe a cross-shard-consistent state.  Locks are re-entrant, so
+        compaction's fold -> publish -> rebase nesting is fine.  Queued
+        submissions still *enqueue* during a freeze — they just cannot
+        drain until it lifts.
+        """
+        self._alloc_lock.acquire()
+        for lock in self._shard_locks:
+            lock.acquire()
+        try:
+            yield
+        finally:
+            for lock in reversed(self._shard_locks):
+                lock.release()
+            self._alloc_lock.release()
+
+    # ------------------------------------------------------------------
+    # thread-safe per-doc primitives
+    # ------------------------------------------------------------------
+
+    def _insert_one(self, terms: Sequence[int], site: int) -> int:
+        terms_u = np.unique(np.asarray(terms, dtype=np.int64)).astype(
+            np.int32
+        )
+        self._check_terms(terms_u, site)
+        with self._alloc_lock:
+            gid = self.n_docs
+            _, local = self._shard_of(gid)
+            if local >= self._doc_limit_local:
+                raise DeltaFullError("document headroom exhausted")
+            shard = gid % self.ns
+            lock = self._shard_locks[shard]
+            # Take the shard lock before publishing the allocation: a
+            # rebase (frozen) can then never observe an allocated-but-
+            # unapplied doc, which would fold it into the main index AND
+            # apply its delta postings afterwards.
+            lock.acquire()
+            self.n_docs += 1
+            self._docs.append(terms_u)
+            self._sites.append(int(site))
+        try:
+            st = self._shards[shard]
+            plist = [int(t) for t in terms_u]
+            if self.include_site_terms:
+                plist.append(self.vocab_size + site)
+            for t in plist:
+                if st.lengths[t] >= self.term_capacity:
+                    # docID already allocated: leave a dead, empty
+                    # placeholder so global docIDs stay dense
+                    st.doc_flags[local] |= DOC_DEAD
+                    self._docs[gid] = np.zeros(0, dtype=np.int32)
+                    self._bump(shard)
+                    raise DeltaFullError(f"delta list full for term {t}")
+            for t in plist:
+                self._insert_posting(st, t, local, site)
+            st.doc_site[local] = site
+            self._delta_docs.add(gid)
+            self._bump(shard)
+        finally:
+            lock.release()
+        self._m_ops["insert"].inc()
+        return gid
+
+    def _delete_one(self, gid: int) -> None:
+        with self._shard_locks[gid % self.ns]:
+            super()._delete_one(gid)
+        self._m_ops["delete"].inc()
+
+    def _update_one(
+        self, gid: int, terms: Sequence[int], site: int | None
+    ) -> None:
+        with self._shard_locks[gid % self.ns]:
+            super()._update_one(gid, terms, site)
+        self._m_ops["update"].inc()
+
+    # ------------------------------------------------------------------
+    # per-shard write queues (the multi-master staging lanes)
+    # ------------------------------------------------------------------
+
+    def submit_insert(self, terms: Sequence[int], site: int) -> None:
+        """Enqueue an insert (applied at the next :meth:`drain`)."""
+        self._enqueue(
+            next(self._rr) % self.ns,
+            ("insert", tuple(int(t) for t in terms), int(site)),
+        )
+
+    def submit_delete(self, docid: int) -> None:
+        self._enqueue(int(docid) % self.ns, ("delete", int(docid)))
+
+    def submit_update(
+        self, docid: int, terms: Sequence[int], site: int | None = None
+    ) -> None:
+        self._enqueue(
+            int(docid) % self.ns,
+            ("update", int(docid), tuple(int(t) for t in terms), site),
+        )
+
+    def _enqueue(self, shard: int, op: tuple) -> None:
+        self._queues[shard].append(op)   # deque.append is GIL-atomic
+        self._m_depth[shard].set(float(len(self._queues[shard])))
+
+    def queue_depth(self, shard: int | None = None) -> int:
+        qs = self._queues if shard is None else [self._queues[shard]]
+        return sum(len(q) for q in qs)
+
+    def drain(self, shard: int | None = None) -> int:
+        """Apply queued ops FIFO per shard; returns how many applied.
+
+        Safe to call concurrently (e.g. one drain worker per shard):
+        ops pop atomically and apply under their shard's lock.  Conflicted
+        ops (see class docstring) are dropped and counted.
+        """
+        shards = range(self.ns) if shard is None else (int(shard),)
+        applied = 0
+        for s in shards:
+            q = self._queues[s]
+            while True:
+                try:
+                    op = q.popleft()
+                except IndexError:
+                    break
+                try:
+                    self._apply_queued(op)
+                    applied += 1
+                except (KeyError, DeltaFullError):
+                    self._m_conflicts.inc()
+                self._m_depth[s].set(float(len(q)))
+        return applied
+
+    def _apply_queued(self, op: tuple) -> None:
+        kind = op[0]
+        if kind == "insert":
+            self._insert_one(list(op[1]), op[2])
+        elif kind == "delete":
+            self._delete_one(op[1])
+        elif kind == "update":
+            self._update_one(op[1], list(op[2]), op[3])
+        else:
+            raise ValueError(f"unknown queued op {kind!r}")
+
+    # ------------------------------------------------------------------
+    # vector-versioned publish
+    # ------------------------------------------------------------------
+
+    def rebase(self, folded, **kw) -> None:
+        with self.frozen():
+            super().rebase(folded, **kw)
+            self._shard_rows = [None] * self.ns
+
+    def device_delta(self) -> ShardedDelta:
+        """Publish: snapshot the shard mirrors, stamped with the
+        :class:`VectorVersion`.  Shards whose ``(epoch, seq)`` did not move
+        since the last publish reuse their cached flattened rows (the skip
+        table is the expensive part of a publish)."""
+        with self.frozen():
+            ver = self.version
+            if (
+                self._snapshot is not None
+                and self._snapshot_version == ver
+            ):
+                return self._snapshot
+            ns, cap = self.ns, self.term_capacity
+            bpt = cap // BLOCK
+            flat = self.n_terms * cap
+            flat_pad = flat_tile_pad(flat)
+            # lint: allow(posting-alloc)
+            postings = np.full((ns, flat_pad), INVALID_DOC, np.int32)
+            # lint: allow(posting-alloc)
+            attrs = np.full((ns, flat_pad), INVALID_ATTR, np.int32)
+            block_max = np.full(
+                (ns, self.n_terms * bpt), INVALID_DOC, np.int32
+            )
+            flags = np.zeros((ns, self.nd_cap), np.int32)
+            sites = np.zeros((ns, self.nd_cap), np.int32)
+            for s, st in enumerate(self._shards):
+                key = (self._epoch, self._seqs[s])
+                cached = self._shard_rows[s]
+                if cached is None or cached[0] != key:
+                    # lint: allow(posting-alloc)
+                    row_p = np.full(flat_pad, INVALID_DOC, np.int32)
+                    # lint: allow(posting-alloc)
+                    row_a = np.full(flat_pad, INVALID_ATTR, np.int32)
+                    row_p[:flat] = st.postings.reshape(-1)
+                    row_a[:flat] = st.attrs.reshape(-1)
+                    row_b = np.full(self.n_terms * bpt, INVALID_DOC, np.int32)
+                    for t in np.flatnonzero(st.lengths):
+                        ln = int(st.lengths[t])
+                        row = np.where(
+                            np.arange(cap) < ln, st.postings[t], np.int32(-1)
+                        ).reshape(bpt, BLOCK).max(axis=1)
+                        row_b[t * bpt : (t + 1) * bpt] = np.where(
+                            row >= 0, row.astype(np.int32), INVALID_DOC
+                        )
+                    cached = (
+                        key, row_p, row_a, row_b,
+                        st.doc_flags.copy(), st.doc_site.copy(),
+                    )
+                    self._shard_rows[s] = cached
+                postings[s] = cached[1]
+                attrs[s] = cached[2]
+                block_max[s] = cached[3]
+                flags[s] = cached[4]
+                sites[s] = cached[5]
+                self._m_publish[s].set(float(self._seqs[s]))
+            offsets = np.broadcast_to(
+                (np.arange(self.n_terms, dtype=np.int32) * cap)[None],
+                (ns, self.n_terms),
+            )
+            self._snapshot = ShardedDelta(
+                offsets=jnp.asarray(np.ascontiguousarray(offsets)),
+                lengths=jnp.asarray(
+                    np.stack([s.lengths for s in self._shards])
+                ),
+                postings=jnp.asarray(postings),
+                attrs=jnp.asarray(attrs),
+                block_max=jnp.asarray(block_max),
+                doc_flags=jnp.asarray(flags),
+                doc_site=jnp.asarray(sites),
+            )
+            self._snapshot_version = ver
+            export_index_bytes(int(postings.nbytes), None, kind="delta")
+            return self._snapshot

@@ -6,12 +6,23 @@ front-ends:
 - :mod:`repro.serving.search` — `SearchService`, a thin façade binding the
   scheduler to the distributed DB-IR query engine: admission queue ->
   ``(t_max, k)``-bucketed micro-batches (padded, never recompiling; the
-  formation deadline can be *adaptive* — ``max_wait`` shrinks as the
-  arrival rate approaches fitted capacity and drops to zero when a bucket
-  cannot fill in time anyway) -> version-stamped LRU result cache ->
-  multi-set router (optionally health-aware: a dead ODYS set is skipped
-  and re-admitted on recovery, `HealthAwareRouter` +
+  formation deadline can be *adaptive* — ``max_wait`` is fitted to the
+  M/D/1 sojourn target of :func:`repro.core.perfmodel.sojourn`, so the
+  deadline keeps formation delay proportional to the load-dependent
+  service slack and drops to zero when a bucket cannot fill in time
+  anyway) -> version-stamped LRU result cache (the stamp is the writer's
+  snapshot version — with the multi-master `ShardedDeltaWriter` a
+  ``VectorVersion`` of ``(writer_epoch, per-shard seqs)``, so any shard's
+  publish invalidates without a global write lock; a batch whose every
+  query is cache-satisfied at dispatch short-circuits the engine launch
+  entirely) -> multi-set router (optionally health-aware: a dead ODYS set
+  is skipped and re-admitted on recovery, `HealthAwareRouter` +
   :mod:`repro.core.faults`) -> slave broadcast + master merge on the mesh.
+  With ``set_meshes=`` (see :func:`repro.core.parallel.set_mesh_slices`)
+  each ODYS set serves its batches on its **own disjoint device slice**
+  through `replicated_query_topk` — §5.2 scale-out as device topology
+  rather than time-sharing, with per-slice delta placement keyed on the
+  vector version.
 - :mod:`repro.serving.engine` — `ServingEngine`, the LM decode loop, which
   reuses the scheduler's micro-batch formation for its request queue.
 

@@ -56,6 +56,7 @@ import time
 from collections import OrderedDict, deque
 from typing import Any, Callable, Sequence
 
+from repro.core.perfmodel import sojourn
 from repro.obs.registry import MetricsRegistry, get_registry
 from repro.obs.trace import PHASES, QuerySpan
 
@@ -172,10 +173,19 @@ class ResultCache:
         self._c_misses.inc()
         self._g_hit_rate.set(self.stats.hit_rate())
 
-    def get(self, key: tuple, version: int, now: float = math.inf):
+    def get(self, key: tuple, version: int, now: float = math.inf,
+            *, count_miss: bool = True):
+        """Version- and maturity-checked lookup.
+
+        ``count_miss=False`` makes a *no-hit* outcome silent in the
+        hit/miss stats — the scheduler's dispatch-time recheck uses it so
+        a query is not double-counted as a miss (its admission-time lookup
+        already was).  Stale evictions and hits always count.
+        """
         entry = self._entries.get(key)
         if entry is None:
-            self._miss()
+            if count_miss:
+                self._miss()
             return None
         stored_version, available_at, result = entry
         if stored_version != version:
@@ -183,14 +193,16 @@ class ResultCache:
             self.stats.stale += 1
             self._c_stale.inc()
             self._g_entries.set(len(self._entries))
-            self._miss()
+            if count_miss:
+                self._miss()
             return None
         if available_at > now:
             # The producing batch has not finished yet at ``now`` (this
             # happens in virtual-time replay): the result exists on the
             # host but the modeled system could not have served it — treat
             # as a miss, leave the entry for when it matures.
-            self._miss()
+            if count_miss:
+                self._miss()
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
@@ -222,6 +234,7 @@ class SetState:
     busy_until: float = 0.0  # when the set's current batch finishes
     n_batches: int = 0
     n_queries: int = 0
+    first_start: float | None = None  # first dispatch start (throughput base)
 
 
 class MultiSetRouter:
@@ -329,10 +342,14 @@ class MasterScheduler:
           remainder within ``max_wait`` anyway (the low-load case: waiting
           buys no batching, so don't — this is the formation wait
           bench_serving measures);
-        - ``max_wait * (1 - lambda/mu)`` otherwise, shrinking toward zero
-          as the arrival rate ``lambda`` approaches the fitted capacity
-          ``mu`` (near saturation queueing dominates and full batches form
-          by count; any deadline slack only adds sojourn).
+        - ``max_wait * st / sojourn(lambda, st)`` otherwise, where
+          ``st = 1/mu`` — the deadline is fitted to the M/D/1 sojourn
+          target (Formula (13)): the allowance shrinks exactly as queueing
+          inflates the expected sojourn over the bare service time, so the
+          formation slack stays a constant *fraction of the sojourn
+          budget* rather than a linear guess, and collapses to zero at
+          saturation (``sojourn -> inf`` as ``rho -> 1``, where full
+          batches form by count anyway).
 
         ``lambda`` is estimated from recent arrival timestamps (virtual
         time under replay); ``mu`` is ``capacity_qps`` when given (e.g.
@@ -430,6 +447,7 @@ class MasterScheduler:
         self._next_qid = 0
         self.n_batches = 0
         self.n_padded = 0
+        self.n_short_circuited = 0    # formed batches that launched nothing
         self._pad_fraction_sum = 0.0  # per-batch pad fractions, for stats()
         self._arrivals: deque[float] = deque(maxlen=32)   # aggregate (rho)
         self._key_arrivals: dict[tuple, deque] = {}       # per bucket (fill)
@@ -448,6 +466,20 @@ class MasterScheduler:
                  "(interprets odys_kernel_grid_occupancy under padding)")
         self._m_queue_depth = reg.gauge(
             "odys_queue_depth", help="queries waiting for batch formation")
+        self._m_short_circuited = reg.counter(
+            "odys_batches_short_circuited_total",
+            help="formed batches whose every real query hit the cache at "
+                 "dispatch time — nothing launched (the scheduler-level "
+                 "analogue of the kernels' all-inert no-launch path)")
+        self._g_set_qps = {
+            s.sid: reg.gauge(
+                "odys_set_throughput_qps",
+                help="per-set sustained throughput: completed queries over "
+                     "the set's active span (scheduler clock domain)",
+                set=str(s.sid),
+            )
+            for s in self.router.sets
+        }
         self._m_response = reg.histogram(
             "odys_response_seconds",
             help="submit-to-finish response time (scheduler clock domain; "
@@ -576,7 +608,13 @@ class MasterScheduler:
         mu = self._capacity()
         if lam is None or mu is None or mu <= 0:
             return self.max_wait
-        return self.max_wait * max(0.0, 1.0 - lam / mu)
+        # M/D/1 sojourn-target fit (Formula (13)): grant the ceiling scaled
+        # by how little queueing has inflated the sojourn over the bare
+        # service time.  sojourn -> st as rho -> 0 (full ceiling) and
+        # -> inf as rho -> 1 (deadline collapses to zero: near saturation
+        # full batches form by count and slack only adds sojourn).
+        st = 1.0 / mu
+        return self.max_wait * st / sojourn(lam, st)
 
     # ------------------------------------------------------------------
     # dispatch
@@ -622,6 +660,65 @@ class MasterScheduler:
         version = self._version_fn()
         queries = [(list(t.terms), t.site) for t in batch]
         start = max(self._now(), sref.busy_until)
+        # Dispatch-time cache recheck: a result produced by an *earlier*
+        # batch may have matured between this query's admission (where the
+        # submit-path lookup legitimately missed) and its dispatch instant
+        # ``start``.  Tickets satisfied here are served from cache at
+        # ``start``; a batch whose every real query is satisfied launches
+        # nothing at all — the scheduler-level all-inert no-launch path,
+        # accounted below so occupancy stats match the kernels'
+        # ``odys_kernel_steps_saved_total`` story.
+        live = real
+        if self.cache is not None:
+            live = []
+            for ticket in real:
+                hit = self.cache.get(
+                    (ticket.terms, ticket.site, ticket.k), version, start,
+                    count_miss=False,
+                )
+                if hit is None:
+                    live.append(ticket)
+                    continue
+                ticket.result = hit
+                ticket.done = True
+                ticket.from_cache = True
+                ticket.finish_time = start
+                ticket.set_id = sref.sid
+                self._m_response.observe(start - ticket.submit_time)
+                span = ticket.span
+                if span is not None:
+                    span.from_cache = True
+                    span.set_id = sref.sid
+                    span.add("admission_wait", t_form - span.submit_time)
+                    span.add("formation_wait", start - t_form)
+                    span.add("route", route_wall)
+                    span.finish_time = start
+                    for phase, dt in span.phases.items():
+                        hist = self._m_phase.get(phase)
+                        if hist is not None:
+                            hist.observe(dt)
+                    if self.span_sink is not None:
+                        self.span_sink(span)
+        if not live:
+            # Everything in the formed batch is inert (padding clones plus
+            # recheck-satisfied tickets): nothing launches, the set stays
+            # idle, but the batch still counts toward occupancy accounting
+            # with pad_fraction 1.0.
+            self.router.complete(sref, len(real))
+            if sref.first_start is not None:
+                # the set's cache served these queries without new work:
+                # throughput over the unchanged active span goes up
+                self._g_set_qps[sref.sid].set(
+                    sref.n_queries / max(start - sref.first_start, 1e-9)
+                )
+            self.n_batches += 1
+            self.n_short_circuited += 1
+            self._pad_fraction_sum += 1.0
+            self._m_batches.inc()
+            self._m_short_circuited.inc()
+            self._m_pad_fraction.set(1.0)
+            self._m_queue_depth.set(self.pending())
+            return real
         # Measured service stays on the real monotonic wall clock — never
         # the (possibly virtual) scheduler clock; the span labels it so.
         wall0 = self._wall_clock()
@@ -649,13 +746,21 @@ class MasterScheduler:
             # self-fitted capacity (and with it the adaptive deadline)
             self._warm_keys.add(key)
         finish = start + wall if self._vclock is not None else self._clock()
+        if sref.first_start is None:
+            sref.first_start = start
         sref.busy_until = finish
         self.router.complete(sref, len(real))
         self._m_service.observe(wall)
+        self._g_set_qps[sref.sid].set(
+            sref.n_queries / max(finish - sref.first_start, 1e-9)
+        )
         batch_id = self.n_batches
-        pad_fraction = (len(batch) - len(real)) / len(batch)
+        # Inert share of the launch: padding clones plus any tickets the
+        # dispatch-time recheck already served from cache (their kernel
+        # slots run but the results are discarded).
+        pad_fraction = (len(batch) - len(live)) / len(batch)
         for ticket, res in zip(batch, results):
-            if ticket.qid < 0:
+            if ticket.qid < 0 or ticket.done:
                 continue
             ticket.result = res
             ticket.done = True
@@ -742,6 +847,7 @@ class MasterScheduler:
         assert not self.pending(), "replay needs an empty admission queue"
         for s in self.router.sets:  # live wall-clock must not leak into
             s.busy_until = 0.0      # the virtual timeline
+            s.first_start = None
         self._arrivals.clear()      # ...nor into the arrival-rate estimates
         self._key_arrivals.clear()
         self._vclock = 0.0
@@ -778,6 +884,7 @@ class MasterScheduler:
         out = {
             "n_batches": self.n_batches,
             "n_padded": self.n_padded,
+            "n_short_circuited": self.n_short_circuited,
             "pad_fraction": (
                 self._pad_fraction_sum / self.n_batches
                 if self.n_batches else 0.0

@@ -40,9 +40,15 @@ import numpy as np
 
 import jax
 
+from jax.sharding import NamedSharding, PartitionSpec as P
+
 from repro.core.engine import make_query_batch
 from repro.core.index import INVALID_DOC, IndexMeta, ShardedIndex
-from repro.core.parallel import SearchResult, distributed_query_topk
+from repro.core.parallel import (
+    SearchResult,
+    distributed_query_topk,
+    replicated_query_topk,
+)
 from repro.data.corpus import Corpus
 from repro.indexing.compaction import compact as _compact
 from repro.indexing.delta import DeltaWriter
@@ -80,7 +86,17 @@ class SearchService:
       :class:`~repro.serving.scheduler.MasterScheduler`);
     - ``set_health`` — a :class:`~repro.core.faults.SetHealth` mask: dead
       sets are skipped by the router and re-admitted on recovery
-      (:class:`~repro.serving.router.HealthAwareRouter`).
+      (:class:`~repro.serving.router.HealthAwareRouter`);
+    - ``set_meshes`` — disjoint per-set device slices (build them with
+      :func:`repro.core.parallel.set_mesh_slices`): when given, a batch
+      routed to ``set_id`` executes on that set's own ``(1, ns)``
+      ``("pod", "data")`` mesh through
+      :func:`~repro.core.parallel.replicated_query_topk` instead of
+      time-sharing the service ``mesh`` — the paper's §5.2 scale-out as
+      real concurrent device capacity.  The index is pre-placed on every
+      slice (and re-placed at each compaction); delta snapshots are placed
+      lazily per (set, writer version).  ``set_health`` composes: a dead
+      set quarantines exactly its slice.
 
     Online updates: pass ``updatable=True`` together with the ``corpus``
     the index was built from (a :class:`DeltaWriter` is created), or pass
@@ -121,6 +137,7 @@ class SearchService:
         adaptive_wait: bool = False,
         capacity_qps: float | None = None,
         set_health: "SetHealth | None" = None,
+        set_meshes: "list[jax.sharding.Mesh] | None" = None,
         registry: MetricsRegistry | None = None,
         span_sink=None,
     ):
@@ -158,6 +175,21 @@ class SearchService:
         buckets = t_max_buckets if t_max_buckets is not None else (t_max,)
         if max(buckets) > t_max:
             raise ValueError(f"t_max_buckets {buckets} exceed t_max={t_max}")
+        self.set_meshes = list(set_meshes) if set_meshes is not None else None
+        self._set_index: list[ShardedIndex] | None = None
+        self._set_delta: dict[int, tuple[object, object]] = {}
+        if self.set_meshes is not None:
+            if len(self.set_meshes) != n_sets:
+                raise ValueError(
+                    f"{len(self.set_meshes)} set_meshes for n_sets={n_sets}"
+                )
+            for m in self.set_meshes:
+                shape = dict(zip(m.axis_names, m.devices.shape))
+                if shape.get("data") != ns or shape.get("pod") != 1:
+                    raise ValueError(
+                        f"set mesh must be (pod=1, data={ns}), got {shape}"
+                    )
+            self._place_set_indexes()
         router = None
         if set_health is not None:
             from repro.serving.router import HealthAwareRouter
@@ -223,6 +255,11 @@ class SearchService:
             writer, verify=verify,
             term_capacity=term_capacity, doc_headroom=doc_headroom,
         )
+        if self.set_meshes is not None:
+            # the main index changed identity: every slice re-places it
+            # (the per-set delta cache is cleared there too — the rebase
+            # bumped the writer epoch, so no stale snapshot survives)
+            self._place_set_indexes()
 
     def _maybe_compact(self) -> None:
         w = self.writer
@@ -247,11 +284,60 @@ class SearchService:
         extra = 1 if (site is not None and self.strategy == "site_term") else 0
         return len(terms) + extra
 
-    def _run_engine(self, queries, *, t_max: int, k: int) -> SearchResult:
-        """One batch end-to-end on the mesh at the given padded shapes."""
+    def _place_set_indexes(self) -> None:
+        """(Re)place the main index on every set's mesh slice.
+
+        Each slice holds its own copy, sharded over its ``data`` axis —
+        the replication that makes sets independent failure/capacity
+        domains (§3.1/§5.2).  Also drops the per-set delta placements:
+        callers re-place lazily at the next dispatch."""
+        self._set_index = [
+            jax.device_put(self.index, NamedSharding(m, P("data")))
+            for m in self.set_meshes
+        ]
+        self._set_delta.clear()
+
+    def _set_delta_snapshot(self, set_id: int):
+        """Current delta snapshot placed on ``set_id``'s slice, cached per
+        (set, writer version) — a new publish on any shard re-places."""
+        if self.writer is None:
+            return None
+        snap = self.writer.device_delta()
+        ver = self.writer.version
+        cached = self._set_delta.get(set_id)
+        if cached is not None and cached[0] == ver:
+            return cached[1]
+        placed = jax.device_put(
+            snap, NamedSharding(self.set_meshes[set_id], P("data"))
+        )
+        self._set_delta[set_id] = (ver, placed)
+        return placed
+
+    def _run_engine(
+        self, queries, *, t_max: int, k: int, set_id: int | None = None
+    ) -> SearchResult:
+        """One batch end-to-end on the mesh at the given padded shapes.
+
+        With ``set_meshes`` configured and a ``set_id``, the batch runs on
+        that set's disjoint slice via :func:`replicated_query_topk`;
+        otherwise on the shared service mesh."""
         batch = make_query_batch(
             queries, t_max=t_max, meta=self.meta, strategy=self.strategy
         )
+        if set_id is not None and self.set_meshes is not None:
+            return replicated_query_topk(
+                self._set_index[set_id],
+                batch,
+                self._set_delta_snapshot(set_id),
+                mesh=self.set_meshes[set_id],
+                ns=self.ns,
+                k=k,
+                window=self.window,
+                attr_strategy=self.strategy,
+                merge=self.merge,
+                backend=self.backend,
+                interpret=self.interpret,
+            )
         delta = None if self.writer is None else self.writer.device_delta()
         return distributed_query_topk(
             self.index,
@@ -279,9 +365,11 @@ class SearchService:
     def _execute(self, queries, t_max: int, k: int, set_id: int) -> list[SearchHit]:
         """Scheduler executor: run one formed micro-batch.
 
-        ``set_id`` identifies the replicated set the router picked; the
-        in-process deployment time-shares one mesh across sets (a multi-pod
-        deployment would dispatch to pod ``set_id`` here).
+        ``set_id`` identifies the replicated set the router picked.  With
+        ``set_meshes`` configured the batch executes on that set's own
+        disjoint device slice (the paper's multi-set deployment shape);
+        otherwise the in-process deployment time-shares one mesh across
+        sets.
 
         When the registry is live, the batch's service is decomposed at
         the batch boundary only — dispatch of the jitted program, the
@@ -289,10 +377,9 @@ class SearchService:
         fused slave top-k + master merge completes under it), and the
         host-side result extraction.  No host syncs are added inside the
         device program."""
-        del set_id
         timed = self.registry.enabled
         w0 = time.perf_counter() if timed else 0.0
-        res = self._run_engine(queries, t_max=t_max, k=k)
+        res = self._run_engine(queries, t_max=t_max, k=k, set_id=set_id)
         w1 = time.perf_counter() if timed else 0.0
         docs = np.asarray(res.docids)
         hits = np.asarray(res.n_hits)

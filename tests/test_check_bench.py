@@ -1,0 +1,165 @@
+"""CLI tests for scripts/check_bench.py's PR-10 modes.
+
+Covers the warn-only ``--baseline`` trend comparison (missing baseline,
+per-file miss, new-key notes, drift warnings, sign guards — all exit 0)
+and the ``--require-sets`` scale-out gate (pass/fail on the speedup floor
+and matched-response bound, skipped-point and missing-metric failures).
+The older streamed/staged, packed and compact gates are covered in
+test_obs.py.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parent.parent / "scripts" / "check_bench.py"
+
+
+def run_check(*argv):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), *map(str, argv)],
+        capture_output=True, text=True,
+    )
+
+
+def write_bench(dirpath: Path, name: str, metrics: dict) -> None:
+    dirpath.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "suite": name.removeprefix("BENCH_").removesuffix(".json"),
+        "metrics": {k: {"value": v, "note": ""} for k, v in metrics.items()},
+    }
+    (dirpath / name).write_text(json.dumps(payload))
+
+
+def sets_metrics(x=2.1, rr=0.9):
+    return {
+        "sets1_throughput": 1000.0,
+        "sets2_throughput": 1000.0 * x,
+        "sets1_response_us": 500.0,
+        "sets2_response_us": 500.0 * rr,
+        "sets1_model_err": 0.08,
+        "sets2_model_err": 0.11,
+        "sets2_throughput_x": x,
+        "sets2_response_ratio": rr,
+    }
+
+
+# ----------------------------------------------------------- baseline trend
+
+
+def test_baseline_missing_dir_is_a_note_not_a_failure(tmp_path):
+    write_bench(tmp_path / "cur", "BENCH_updates.json", {"query_fill0": 10.0})
+    out = run_check(tmp_path / "cur", "--baseline", tmp_path / "nope")
+    assert out.returncode == 0
+    assert "skipping trend" in out.stdout
+
+
+def test_baseline_missing_file_is_skipped(tmp_path):
+    write_bench(tmp_path / "cur", "BENCH_serving.json", {"p50_us": 10.0})
+    (tmp_path / "base").mkdir()
+    out = run_check(tmp_path / "cur", "--baseline", tmp_path / "base")
+    assert out.returncode == 0
+    assert "no baseline for BENCH_serving.json" in out.stdout
+
+
+def test_baseline_reports_drift_and_new_keys(tmp_path):
+    write_bench(tmp_path / "cur", "BENCH_updates.json",
+                {"query_fill0": 20.0, "query_fill50": 10.0,
+                 "brand_new_metric": 1.0})
+    write_bench(tmp_path / "base", "BENCH_updates.json",
+                {"query_fill0": 10.0, "query_fill50": 10.5})
+    out = run_check(tmp_path / "cur", "--baseline", tmp_path / "base")
+    assert out.returncode == 0            # warn-only: drift never blocks
+    assert "TREND BENCH_updates.json:query_fill0 10 -> 20 (2.00x)" in out.stdout
+    assert "query_fill50" not in out.stdout.replace(
+        "trend compared", "")             # within 1.5x: silent
+    assert "no baseline (new emitters): brand_new_metric" in out.stdout
+    assert "compared 2 shared key(s), 1 drifted" in out.stdout
+
+
+def test_baseline_skips_nonpositive_values(tmp_path):
+    # counters that were zero (or error gauges at -1) have no defined
+    # ratio; the trend pass must not divide by them or warn on them
+    write_bench(tmp_path / "cur", "BENCH_updates.json",
+                {"conflicts": 5.0, "residual": -0.2})
+    write_bench(tmp_path / "base", "BENCH_updates.json",
+                {"conflicts": 0.0, "residual": 0.3})
+    out = run_check(tmp_path / "cur", "--baseline", tmp_path / "base")
+    assert out.returncode == 0
+    assert "TREND" not in out.stdout
+
+
+def test_baseline_tighter_ratio_flags_smaller_drift(tmp_path):
+    write_bench(tmp_path / "cur", "BENCH_updates.json", {"query_fill0": 12.0})
+    write_bench(tmp_path / "base", "BENCH_updates.json", {"query_fill0": 10.0})
+    calm = run_check(tmp_path / "cur", "--baseline", tmp_path / "base")
+    assert calm.returncode == 0 and "TREND" not in calm.stdout
+    strict = run_check(tmp_path / "cur", "--baseline", tmp_path / "base",
+                       "--baseline-warn-ratio", "1.1")
+    assert strict.returncode == 0 and "TREND" in strict.stdout
+
+
+# ----------------------------------------------------------- --require-sets
+
+
+def test_require_sets_passes_on_healthy_sweep(tmp_path):
+    write_bench(tmp_path, "BENCH_serving.json", sets_metrics())
+    out = run_check(tmp_path, "--require-sets")
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "scale-out holds" in out.stdout
+    # Formula (18) errors are echoed per set count
+    assert "sets1_model_err=0.0800" in out.stdout
+    assert "sets2_model_err=0.1100" in out.stdout
+
+
+def test_require_sets_fails_below_speedup_floor(tmp_path):
+    write_bench(tmp_path, "BENCH_serving.json", sets_metrics(x=1.3))
+    out = run_check(tmp_path, "--require-sets")
+    assert out.returncode == 1
+    assert "FAIL" in out.stdout
+    assert "scale-out does not hold" in out.stderr
+
+
+def test_require_sets_fails_on_unmatched_response(tmp_path):
+    write_bench(tmp_path, "BENCH_serving.json", sets_metrics(rr=2.0))
+    out = run_check(tmp_path, "--require-sets")
+    assert out.returncode == 1
+    assert "response ratio 2.000" in out.stdout
+
+
+def test_require_sets_custom_bounds(tmp_path):
+    write_bench(tmp_path, "BENCH_serving.json", sets_metrics(x=1.3, rr=2.0))
+    out = run_check(tmp_path, "--require-sets",
+                    "--min-sets-speedup", "1.2",
+                    "--max-sets-response-ratio", "2.5")
+    assert out.returncode == 0
+
+
+def test_require_sets_fails_on_skipped_point(tmp_path):
+    write_bench(tmp_path, "BENCH_serving.json",
+                {"sets1_throughput": 1000.0, "sets2_skipped": 1.0})
+    out = run_check(tmp_path, "--require-sets")
+    assert out.returncode == 1
+    assert "--devices 2" in out.stderr    # actionable: how to unskip
+
+
+def test_require_sets_fails_on_missing_metrics(tmp_path):
+    write_bench(tmp_path, "BENCH_serving.json", {"sets1_throughput": 1000.0})
+    out = run_check(tmp_path, "--require-sets")
+    assert out.returncode == 1
+    assert "--sets 1,2" in out.stderr
+
+
+def test_require_sets_fails_on_missing_file(tmp_path):
+    out = run_check(tmp_path, "--require-sets")
+    assert out.returncode == 1
+    assert "missing" in out.stderr
+
+
+def test_require_sets_notes_unknown_keys(tmp_path):
+    m = sets_metrics()
+    m["some_future_gauge"] = 3.0
+    write_bench(tmp_path, "BENCH_serving.json", m)
+    out = run_check(tmp_path, "--require-sets")
+    assert out.returncode == 0
+    assert "unrecognized metric key(s): some_future_gauge" in out.stdout

@@ -384,8 +384,9 @@ def test_adaptive_wait_cuts_low_load_formation_wait():
 
 
 def test_adaptive_wait_shrinks_toward_capacity():
-    """The effective deadline scales by (1 - lambda/mu) once the bucket
-    could plausibly fill: near fitted capacity it approaches zero."""
+    """The effective deadline is fitted to the M/D/1 sojourn target once
+    the bucket could plausibly fill — ``max_wait * st / sojourn(lam, st)``
+    — so near fitted capacity it approaches zero."""
     s = MasterScheduler(_slow_executor, batch_size=4, t_max_buckets=(2,),
                         cache_size=0, max_wait=1.0, adaptive_wait=True,
                         capacity_qps=100.0)
@@ -397,7 +398,8 @@ def test_adaptive_wait_shrinks_toward_capacity():
         s.submit([1])
     try:
         w = s.effective_wait(key)
-        assert 0.0 < w < 0.35          # ~ max_wait * (1 - 0.8), with noise
+        # st/sojourn at rho=0.8 is 1/(1 + rho/(2(1-rho))) = 1/3, with noise
+        assert 0.0 < w < 0.35
         # and an idle scheduler with no estimate keeps the fixed ceiling
         fresh = MasterScheduler(_slow_executor, batch_size=4,
                                 t_max_buckets=(2,), cache_size=0,
@@ -429,11 +431,18 @@ def test_replay_virtual_timeline():
 
 
 def test_replay_cache_hit_waits_for_virtual_availability():
-    """A cached result is not served at a virtual time before its
-    producing batch finished: the second arrival of the same query lands
-    while the first batch is (virtually) still running and must miss."""
+    """A cached result is never served at a virtual time before its
+    producing batch finished.  The second arrival of the same query lands
+    while the first batch is (virtually) still running: its submit-path
+    lookup misses, and the dispatch-time recheck serves it from cache only
+    at the producing batch's virtual finish — the earliest instant the
+    modeled system could have.  With every real query in that batch
+    satisfied, nothing launches (short-circuit accounting)."""
+    calls = []
+
     def executor(queries, t_max, k, sid):
         import time as _t
+        calls.append(len(queries))
         _t.sleep(0.01)           # real service time -> virtual finish > 0
         return [0 for _ in queries]
 
@@ -441,10 +450,42 @@ def test_replay_cache_hit_waits_for_virtual_availability():
                         cache_size=8)
     trace = [(0.0, [1], None),
              (1e-6, [1], None),   # arrives before batch 1's virtual finish
-             (10.0, [1], None)]   # long after -> mature hit
+             (10.0, [1], None)]   # long after -> mature hit at submit
     tickets = s.replay(trace)
-    assert not tickets[1].from_cache
+    assert tickets[1].from_cache
+    assert tickets[1].finish_time >= tickets[0].finish_time  # never earlier
+    assert tickets[1].response_time > 0.0    # waited for availability
     assert tickets[2].from_cache and tickets[2].response_time == 0.0
+    assert len(calls) == 1                   # batch 2 launched nothing
+    assert s.n_batches == 2
+    assert s.n_short_circuited == 1
+    assert s.stats()["pad_fraction"] == 0.5  # (0.0 + 1.0) / 2 batches
+
+
+def test_short_circuit_metrics_and_set_throughput_gauge():
+    """Short-circuited batches land in odys_batches_short_circuited_total
+    with pad_fraction 1.0 (occupancy matches the no-launch accounting),
+    and executed dispatches publish odys_set_throughput_qps per set."""
+    from repro.obs.registry import MetricsRegistry
+
+    def executor(queries, t_max, k, sid):
+        import time as _t
+        _t.sleep(0.01)
+        return [0 for _ in queries]
+
+    reg = MetricsRegistry()
+    s = MasterScheduler(executor, batch_size=1, t_max_buckets=(2,),
+                        cache_size=8, registry=reg)
+    tickets = s.replay([(0.0, [1], None), (1e-6, [1], None)])
+    assert tickets[1].from_cache
+    assert s._m_short_circuited.value == 1
+    assert s._m_pad_fraction.value == 1.0    # last batch was all-inert
+    # one executed dispatch on set 0: gauge = n_queries / active span
+    qps = s._g_set_qps[0].value
+    sref = s.router.sets[0]
+    assert qps > 0.0
+    span = sref.busy_until - sref.first_start
+    assert qps == pytest.approx(sref.n_queries / span)
 
 
 # ------------------------------------------------- growth at compaction

@@ -1,0 +1,280 @@
+"""Concurrent-ingest invariants for the multi-master ShardedDeltaWriter.
+
+The paper's deployment shape (§6) runs many masters ingesting in parallel;
+Odysseus/DFS (PAPERS.md) sequences that with per-partition sequence
+numbers.  These tests pin the reproduction's equivalents:
+
+- the :class:`VectorVersion` stamp — ``(writer_epoch, per-shard seqs)`` —
+  moves on exactly the shard an op lands on, and *any* shard's publish (or
+  an epoch bump at rebase) invalidates a cached result;
+- interleaved multi-writer insert/delete/update streams converge to the
+  same published snapshot as a sequential single-writer oracle applying
+  the same ops;
+- compaction can race active ingest: the freeze folds a consistent
+  generation, queued ops apply onto the fresh one, and ``verify=True``
+  cross-checks against a from-scratch rebuild throughout.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.index import build_sharded_index
+from repro.data.corpus import CorpusConfig, generate_corpus
+from repro.indexing import (
+    DeltaFullError,
+    DeltaWriter,
+    ShardedDeltaWriter,
+    VectorVersion,
+    compact,
+)
+from repro.serving.scheduler import ResultCache
+
+NS = 4
+
+
+@pytest.fixture()
+def setup():
+    corpus = generate_corpus(
+        CorpusConfig(n_docs=60, vocab_size=50, mean_doc_len=8,
+                     n_sites=4, seed=5)
+    )
+    _, meta = build_sharded_index(corpus, NS)
+    return corpus, meta
+
+
+def make_writer(corpus, meta, **kw):
+    kw.setdefault("term_capacity", 256)
+    kw.setdefault("doc_headroom", 512)
+    return ShardedDeltaWriter(corpus, meta, NS, **kw)
+
+
+# ------------------------------------------------------------ vector version
+
+
+def test_vector_version_bumps_only_the_touched_shard(setup):
+    corpus, meta = setup
+    w = make_writer(corpus, meta)
+    v0 = w.version
+    assert v0 == VectorVersion(0, (0,) * NS)
+    (gid,) = w.insert_docs([([1, 2], 0)])
+    v1 = w.version
+    assert v1.epoch == 0
+    assert v1.seqs[gid % NS] == 1
+    assert sum(v1.seqs) == 1          # exactly one shard moved
+    w.delete_docs([gid])
+    v2 = w.version
+    assert v2.seqs[gid % NS] == 2
+    assert v2 != v1 and v1 != v0      # every publish is a distinct stamp
+    assert hash(v2) != hash(v1)       # usable as a cache stamp
+
+
+def test_rebase_bumps_epoch(setup):
+    corpus, meta = setup
+    w = make_writer(corpus, meta)
+    w.insert_docs([([3, 4], 1)])
+    v_before = w.version
+    assert v_before.epoch == 0
+    compact(w, verify=True)
+    v = w.version
+    assert v.epoch == 1               # structural change: new generation
+    assert v.seqs == v_before.seqs    # seqs carry over; epoch alone moves
+    assert v != v_before              # so the stamp still invalidates
+
+
+def test_vector_version_invalidates_cache_across_any_shard(setup):
+    """A cached result stamped with one vector version is never served
+    after *any* shard's publish — the lock-free analogue of the global
+    version bump."""
+    corpus, meta = setup
+    w = make_writer(corpus, meta)
+    cache = ResultCache(capacity=8)
+    key = ((7,), None, 10)
+    cache.put(key, w.version, "result-A")
+    assert cache.get(key, w.version) == "result-A"
+    # publish on whichever shard gid lands on; the stamp moves
+    w.insert_docs([([7], 0)])
+    assert cache.get(key, w.version) is None
+    assert cache.stats.stale == 1
+    # re-cache at the new version, then mutate a *different* shard
+    cache.put(key, w.version, "result-B")
+    gids = w.insert_docs([([9], 1), ([9], 2), ([9], 3)])
+    assert any(g % NS != gids[0] % NS for g in gids)
+    assert cache.get(key, w.version) is None
+    assert cache.stats.stale == 2
+
+
+# ------------------------------------------- multi-writer vs sequential oracle
+
+
+def _oracle_from(w: ShardedDeltaWriter, corpus, meta, ops_by_gid):
+    """Sequential single-writer applying the concurrent run's final ops in
+    gid order; publishes must match the concurrent writer's snapshot."""
+    ref = DeltaWriter(corpus, meta, NS, term_capacity=256, doc_headroom=512)
+    base = corpus.n_docs
+    for gid in range(base, w.n_docs):
+        terms = [int(t) for t in w._docs[gid]]
+        ref.insert_docs([(terms or [0], int(w._sites[gid]))])
+        if not terms:
+            # capacity-failure placeholder or deleted-after-insert: the
+            # oracle reproduces the dead slot
+            ref.delete_docs([gid])
+    for gid, op in ops_by_gid:
+        if op == "delete":
+            ref.delete_docs([gid])
+        else:
+            ref.update_docs([op])
+    return ref
+
+
+def test_interleaved_inserts_match_sequential_oracle(setup):
+    corpus, meta = setup
+    w = make_writer(corpus, meta)
+    n_threads, per_thread = 4, 30
+    errs = []
+
+    def worker(tid):
+        try:
+            for j in range(per_thread):
+                w.insert_docs([([(tid * per_thread + j) % 50,
+                                 (tid + j) % 50], tid % 4)])
+        except Exception as e:  # surface in the main thread
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert w.n_docs == corpus.n_docs + n_threads * per_thread
+    assert sum(w.version.seqs) == n_threads * per_thread
+
+    ref = _oracle_from(w, corpus, meta, [])
+    got, want = w.device_delta(), ref.device_delta()
+    for name, g, r in zip(got._fields, got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(r)), name
+    # and the fold agrees with a from-scratch rebuild of the mutated corpus
+    compact(w, verify=True)
+
+
+def test_interleaved_mixed_streams_match_oracle(setup):
+    """Insert/delete/update streams on disjoint doc subsets interleave
+    freely (ops on different docs commute); the published snapshot must
+    equal the sequential oracle's."""
+    corpus, meta = setup
+    w = make_writer(corpus, meta)
+    base_gids = w.insert_docs([([i % 50], i % 4) for i in range(24)])
+    ops_by_gid = []
+    lock = threading.Lock()
+    errs = []
+
+    def worker(tid):
+        try:
+            mine = base_gids[tid::3]  # disjoint slice per thread
+            for i, gid in enumerate(mine):
+                if i % 2 == 0:
+                    upd = (gid, [(gid + i) % 50, (gid + i + 1) % 50], 1)
+                    w.update_docs([upd])
+                    with lock:
+                        ops_by_gid.append((gid, upd))
+                else:
+                    w.delete_docs([gid])
+                    with lock:
+                        ops_by_gid.append((gid, "delete"))
+        except Exception as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+
+    # oracle: replay the base inserts, then the final per-doc op per gid
+    # (each gid was touched by exactly one thread, so "last op" is exact)
+    ref = DeltaWriter(corpus, meta, NS, term_capacity=256, doc_headroom=512)
+    ref.insert_docs([([i % 50], i % 4) for i in range(24)])
+    final = {}
+    for gid, op in ops_by_gid:
+        final[gid] = op
+    for gid in sorted(final):
+        if final[gid] == "delete":
+            ref.delete_docs([gid])
+        else:
+            ref.update_docs([final[gid]])
+    got, want = w.device_delta(), ref.device_delta()
+    for name, g, r in zip(got._fields, got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(r)), name
+    compact(w, verify=True)
+
+
+# -------------------------------------------------------- queue + conflicts
+
+
+def test_striped_queues_drain_and_count_conflicts(setup):
+    corpus, meta = setup
+    w = make_writer(corpus, meta)
+    w.submit_insert([5, 6], 2)
+    w.submit_insert([7], 1)
+    w.submit_delete(0)
+    w.submit_update(1, [8], None)
+    w.submit_delete(10 ** 6)          # unknown gid -> conflict, not a crash
+    assert w.queue_depth() == 5
+    applied = w.drain()
+    assert applied == 4
+    assert w.queue_depth() == 0
+    assert w.n_docs == corpus.n_docs + 2
+
+
+def test_snapshot_cache_keyed_on_vector_version(setup):
+    corpus, meta = setup
+    w = make_writer(corpus, meta)
+    w.insert_docs([([1], 0)])
+    s1 = w.device_delta()
+    assert w.device_delta() is s1     # same stamp -> cached snapshot
+    w.insert_docs([([2], 1)])
+    s2 = w.device_delta()
+    assert s2 is not s1               # any shard's publish drops the cache
+
+
+# -------------------------------------------- compaction racing active ingest
+
+
+def test_compaction_races_active_writer_queue(setup):
+    """Writers keep inserting while the main thread compacts (verify=True):
+    every fold must cross-check against a from-scratch rebuild, and no
+    insert may be lost or double-applied across the generation change."""
+    corpus, meta = setup
+    w = make_writer(corpus, meta, term_capacity=512, doc_headroom=2048)
+    stop = threading.Event()
+    inserted = [0, 0]
+    errs = []
+
+    def ingest(tid):
+        try:
+            while not stop.is_set():
+                w.insert_docs([([(inserted[tid] + tid) % 50], tid % 4)])
+                inserted[tid] += 1
+        except DeltaFullError:
+            pass
+        except Exception as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=ingest, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(3):
+            compact(w, verify=True)   # freeze -> fold -> verify -> rebase
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errs
+    assert w.version.epoch == 3
+    assert w.n_docs == corpus.n_docs + sum(inserted)
+    # the final state still folds clean against a from-scratch rebuild
+    compact(w, verify=True)
